@@ -1,0 +1,34 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows.  Dataset
+sizes are scaled for the CPU container (`FAST=1` env shrinks further);
+paper-scale numbers are produced by the same code on real hardware.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+FAST = os.environ.get("FAST", "0") == "1"
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line)
+    return line

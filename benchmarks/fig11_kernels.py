@@ -1,0 +1,65 @@
+"""Fig 11 analogue (GOP/s-per-W becomes ops-per-roofline-second): kernel
+throughput of the TM datapath — MXU-matmul clause path vs packed-bitwise
+VPU path vs fused inference, at DTM-L-like model sizes.
+
+On this CPU container the wall-clock µs columns are interpret-mode numbers
+(relative only); the `derived` column carries the hardware-model figure:
+analytic ops / v5e roofline seconds — the quantity EXPERIMENTS.md §Perf
+tracks across kernel iterations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import COALESCED, TMConfig
+from repro.core.booleanize import pack_literals
+from repro.kernels import (clause_eval_op, packed_clause_eval_op,
+                           tm_infer_op)
+from repro.launch.mesh import V5E
+
+from .common import FAST, row, time_call
+
+
+def _roofline_s(flops: float, bytes_: float) -> float:
+    return max(flops / V5E.peak_flops_bf16, bytes_ / V5E.hbm_bw)
+
+
+def run() -> None:
+    B = 8 if FAST else 32
+    cfg = TMConfig(tm_type=COALESCED, features=784, clauses=512, classes=10)
+    rng = np.random.default_rng(0)
+    lit = jnp.asarray((rng.random((B, cfg.literals)) < 0.5).astype(np.int8))
+    inc = jnp.asarray((rng.random((cfg.clauses, cfg.literals)) < 0.05
+                       ).astype(np.int8))
+    w = jnp.asarray(rng.integers(-2047, 2048, (10, cfg.clauses)), jnp.int32)
+
+    # MXU path: violations matmul = 2·B·C·2f int-MACs
+    mxu_flops = 2 * B * cfg.clauses * cfg.literals
+    mxu_bytes = (B * cfg.literals + cfg.clauses * cfg.literals
+                 + B * cfg.clauses * 4)
+    us = time_call(lambda: clause_eval_op(lit, inc, eval_mode=True))
+    row("fig11/clause_mxu", us,
+        f"flops={mxu_flops};roofline_s={_roofline_s(mxu_flops, mxu_bytes):.2e}")
+
+    # packed VPU path: B·C·W word-ops, 1/32 the bytes of the int8 layout
+    pl_, pi = pack_literals(lit), pack_literals(inc)
+    vpu_ops = B * cfg.clauses * pl_.shape[-1]
+    vpu_bytes = (pl_.size + pi.size) * 4 + B * cfg.clauses * 4
+    us = time_call(lambda: packed_clause_eval_op(pl_, pi, eval_mode=True))
+    row("fig11/clause_packed_vpu", us,
+        f"word_ops={vpu_ops};roofline_s={_roofline_s(vpu_ops * 32, vpu_bytes):.2e}")
+
+    # fused inference: clause + class sums, no HBM round-trip for clauses
+    fused_flops = mxu_flops + 2 * B * cfg.clauses * 10
+    fused_bytes = (B * cfg.literals + cfg.clauses * cfg.literals
+                   + 10 * cfg.clauses * 4 + B * 10 * 4)
+    us = time_call(lambda: tm_infer_op(lit, inc, w, eval_mode=True))
+    row("fig11/tm_infer_fused", us,
+        f"flops={fused_flops};"
+        f"roofline_s={_roofline_s(fused_flops, fused_bytes):.2e}")
+
+
+if __name__ == "__main__":
+    run()

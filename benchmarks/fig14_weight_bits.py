@@ -1,0 +1,26 @@
+"""Fig 14: CoTM weight bit-precision sweep — the paper finds 12 bits
+suffice on MNIST and accuracy saturates above that."""
+from __future__ import annotations
+
+from repro.core import COALESCED, TMConfig, TsetlinMachine
+from repro.data import MNIST_LIKE, make_bool_dataset
+
+from .common import FAST, row
+
+
+def run() -> None:
+    n_train, n_test = (640, 256) if FAST else (1536, 512)
+    x, y = make_bool_dataset(MNIST_LIKE, n_train + n_test)
+    xtr, ytr, xte, yte = x[:n_train], y[:n_train], x[n_train:], y[n_train:]
+    for bits in (2, 4, 8, 12, 16):
+        cfg = TMConfig(tm_type=COALESCED, features=MNIST_LIKE.features,
+                       clauses=128, classes=MNIST_LIKE.classes, T=24, s=5.0,
+                       weight_bits=bits, prng_backend="threefry")
+        tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+        tm.fit(xtr, ytr, epochs=3 if FAST else 5, batch=32)
+        row(f"fig14/weight_bits{bits}", 0.0,
+            f"acc={tm.score(xte, yte):.3f};clip={cfg.weight_clip}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Fig 3: logic-op vs integer-op counts in CoTM inference vs clause count.
+
+The paper's point: clause (logic) computation dominates class-sum (integer)
+arithmetic by ~2f/h — which justifies the LUT-heavy FPGA mapping, and here
+the MXU-matmul recast of the clause path (DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+from repro.core import COALESCED, TMConfig
+
+from .common import row
+
+
+def run() -> None:
+    for clauses in (100, 500, 2000, 8000):
+        cfg = TMConfig(tm_type=COALESCED, features=784, clauses=clauses,
+                       classes=10, T=32, s=6.0)
+        ops = cfg.ops_per_inference()
+        ratio = ops["logic_ops"] / max(ops["integer_ops"], 1)
+        row(f"fig3/cotm/{clauses}cl", 0.0,
+            f"logic={ops['logic_ops']};integer={ops['integer_ops']};"
+            f"ratio={ratio:.1f}")
+
+
+if __name__ == "__main__":
+    run()

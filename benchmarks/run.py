@@ -1,0 +1,31 @@
+"""Benchmark harness entry — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  (FAST=1 for quick sweeps)
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig3_opcounts, fig7_clause_skip, fig11_kernels,
+                   fig14_weight_bits, fig15_lfsr, roofline_bench,
+                   table1_accuracy, table2_kws6, table2_supp,
+                   convtm_bench)
+    print("name,us_per_call,derived")
+    for mod in (table1_accuracy, table2_kws6, table2_supp, fig3_opcounts,
+                fig7_clause_skip, fig11_kernels, fig14_weight_bits,
+                fig15_lfsr, convtm_bench, roofline_bench):
+        try:
+            mod.run()
+        except Exception:
+            print(f"{mod.__name__},-1,ERROR")
+            traceback.print_exc()
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

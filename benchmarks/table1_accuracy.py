@@ -1,0 +1,46 @@
+"""Table I analogue: accuracy + per-datapoint latency on the MNIST-family
+surrogates for both DTM model types (DESIGN.md §6: relative claims on
+synthetic geometry-matched data; absolute MNIST digits need the real sets).
+
+Paper reference points (DTM-L): 97.74 % MNIST / 86.38 % FMNIST /
+83.11 % KMNIST; train 88-99 µs/dp @100 MHz FPGA, inference 44.7 µs/dp.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import COALESCED, TMConfig, TsetlinMachine, VANILLA
+from repro.data import (FMNIST_LIKE, KMNIST_LIKE, MNIST_LIKE,
+                        make_bool_dataset)
+
+from .common import FAST, row, time_call
+
+
+def run() -> None:
+    n_train, n_test = (768, 256) if FAST else (2048, 512)
+    clauses = 128 if FAST else 256
+    epochs = 3 if FAST else 6
+    for spec in (MNIST_LIKE, FMNIST_LIKE, KMNIST_LIKE):
+        x, y = make_bool_dataset(spec, n_train + n_test)
+        xtr, ytr, xte, yte = (x[:n_train], y[:n_train], x[n_train:],
+                              y[n_train:])
+        for tm_type, c in ((COALESCED, clauses), (VANILLA, clauses // 4)):
+            cfg = TMConfig(tm_type=tm_type, features=spec.features,
+                           clauses=c, classes=spec.classes, T=24, s=5.0,
+                           prng_backend="threefry")
+            tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+            tm.fit(xtr, ytr, epochs=epochs, batch=32)
+            acc = tm.score(xte, yte)
+            bx = jnp.asarray(xtr[:32])
+            by = jnp.asarray(ytr[:32])
+            us_train = time_call(lambda: tm.fit_batch(bx, by)) / 32
+            us_inf = time_call(lambda: tm.predict(bx)) / 32
+            ops = cfg.ops_per_inference()
+            row(f"table1/{spec.name}/{tm_type}", us_train,
+                f"acc={acc:.3f};inf_us={us_inf:.1f};"
+                f"logic_ops={ops['logic_ops']};int_ops={ops['integer_ops']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""The paper's headline demo: ONE compiled DTM engine, multiple models.
+
+Programs a single engine executable with (a) a CoTM on MNIST-like data,
+(b) a Vanilla TM on KWS6-like data — different features/clauses/classes/
+algorithm — trains and evaluates both, then proves no recompilation
+happened (jit cache size == 1), i.e. run-time reconfiguration without
+"resynthesis" (paper §IV-A, Table II).
+
+PYTHONPATH=src python examples/dtm_reconfigure.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (COALESCED, DTMEngine, PRNG, TMConfig, TileConfig,
+                        VANILLA)
+from repro.data import KWS6_LIKE, MNIST_LIKE, make_bool_dataset
+
+# the 'synthesised' accelerator: buffers sized once (paper DTM-L style)
+tile = TileConfig(x=256, y=64, m=64, n=8, max_features=1600,
+                  max_clauses=512, max_classes=16)
+engine = DTMEngine(tile)
+print(f"engine buffers: literals={engine.L} clauses={engine.R} "
+      f"classes={engine.H}")
+
+MODELS = {
+    "mnist-like/CoTM": (MNIST_LIKE, TMConfig(
+        tm_type=COALESCED, features=MNIST_LIKE.features, clauses=128,
+        classes=10, T=24, s=5.0, prng_backend="threefry")),
+    "kws6-like/Vanilla": (KWS6_LIKE, TMConfig(
+        tm_type=VANILLA, features=KWS6_LIKE.features, clauses=32,
+        classes=6, T=16, s=4.0, prng_backend="threefry")),
+}
+
+for name, (spec, cfg) in MODELS.items():
+    x, y = make_bool_dataset(spec, 768)
+    xtr, ytr, xte, yte = x[:512], y[:512], x[512:], y[512:]
+    prog = engine.program(cfg, jax.random.PRNGKey(0))   # data, not code
+    prng = PRNG.create(cfg, 1)
+    t0 = time.time()
+    for ep in range(4):
+        for i in range(0, 512, 32):
+            lits = engine.pad_features(jnp.asarray(xtr[i:i + 32]), cfg)
+            prog, prng, stats = engine.train_step(
+                prog, prng, lits, jnp.asarray(ytr[i:i + 32]))
+    lits = engine.pad_features(jnp.asarray(xte), cfg)
+    acc = (np.asarray(engine.predict(prog, lits)) == yte).mean()
+    print(f"{name:22s} acc={acc:.3f}  ({time.time() - t0:.1f}s, "
+          f"skip-eligible groups: "
+          f"{int(stats['total_groups'] - stats['active_groups'])}"
+          f"/{int(stats['total_groups'])})")
+
+ci, ct = engine.cache_sizes()
+print(f"compiled executables: infer={ci}, train={ct}  "
+      f"(1,1 = switched models with NO recompilation)")
+assert (ci, ct) == (1, 1)

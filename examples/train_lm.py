@@ -1,0 +1,74 @@
+"""End-to-end LM training driver: ~100M-param dense transformer, a few
+hundred steps on synthetic Markov data, with checkpoints + resume.
+
+Defaults are CPU-feasible (25M params, 60 steps); pass --full for the
+~100M/300-step run described in the deliverable (same code path).
+
+PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro import optim
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import build_train_step, synth_lm_batch
+from repro.models import Model
+from repro.models.config import ArchConfig
+
+
+def make_cfg(full: bool) -> ArchConfig:
+    if full:   # ~100M params
+        return ArchConfig(name="lm100m", family="dense", n_layers=10,
+                          d_model=640, n_heads=10, n_kv_heads=5, d_ff=2560,
+                          vocab=16384, tie_embeddings=True, remat=False)
+    return ArchConfig(name="lm25m", family="dense", n_layers=6,
+                      d_model=384, n_heads=6, n_kv_heads=3, d_ff=1536,
+                      vocab=8192, tie_embeddings=True, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+    steps = args.steps or (300 if args.full else 60)
+
+    cfg = make_cfg(args.full)
+    model = Model(cfg)
+    mesh = make_host_mesh()
+    opt = optim.AdamWConfig(lr=6e-4, total_steps=steps,
+                            warmup_steps=max(steps // 20, 1))
+    step_fn, init_fn, _, _ = build_train_step(model, opt, mesh)
+    params, opt_state = init_fn(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, {steps} steps, mesh "
+          f"{mesh.devices.shape}")
+
+    start = 0
+    got = ckpt.restore_latest(args.ckpt, (params, opt_state))
+    if got:
+        start, (params, opt_state), _ = got
+        print(f"resumed from step {start}")
+    t0, losses = time.time(), []
+    for s in range(start, steps):
+        batch = synth_lm_batch(model, args.batch, args.seq, seed=s)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if s % 10 == 0 or s == steps - 1:
+            print(f"step {s:4d} loss={losses[-1]:.4f} "
+                  f"lr={float(m['lr']):.2e} ({time.time()-t0:.0f}s)")
+        if (s + 1) % 50 == 0:
+            ckpt.save(args.ckpt, s + 1, (params, opt_state))
+    assert losses[-1] < losses[0], "loss must decrease"
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}  OK")
+
+
+if __name__ == "__main__":
+    main()

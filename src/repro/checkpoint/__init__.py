@@ -1,0 +1,3 @@
+from .checkpoint import save, restore, restore_latest, latest_step
+
+__all__ = ["save", "restore", "restore_latest", "latest_step"]

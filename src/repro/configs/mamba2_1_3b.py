@@ -1,0 +1,21 @@
+"""mamba2-1.3b [ssm] — arXiv:2405.21060 (SSD).
+48L d_model=2048 attn-free, ssm_state=128, vocab=50280.
+d_inner = 2·d_model = 4096, head_dim 64 → 64 SSD heads, conv 4, chunk 256."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=1, n_kv_heads=1, d_ff=0,
+    vocab=50280, tie_embeddings=True,
+    # chunk 64: intra-chunk L-tensor stays ~1 GB/chip at the 32k cells
+    # (see EXPERIMENTS.md §Perf for the chunk-size iteration)
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=64,
+    grad_accum=4,
+)
+
+SMOKE = ArchConfig(
+    name="mamba2-1.3b-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=1, n_kv_heads=1, d_ff=0, vocab=256,
+    tie_embeddings=True,
+    ssm_state=16, ssm_head_dim=16, ssm_expand=2, ssm_conv=4, ssm_chunk=16,
+)

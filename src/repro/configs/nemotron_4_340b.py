@@ -1,0 +1,20 @@
+"""nemotron-4-340b [dense] — arXiv:2402.16819.
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000, squared-ReLU.
+
+XXL memory note: optimizer moments are kept in bf16 (no fp32 master) so the
+at-rest state fits a 16 GB v5e chip at 256-way sharding — see EXPERIMENTS.md
+§Dry-run memory table."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b", family="dense",
+    n_layers=96, d_model=18432, n_heads=96, n_kv_heads=8, d_ff=73728,
+    vocab=256000, mlp_act="sq_relu", opt_state_dtype="bfloat16",
+    grad_accum=16, grad_accum_dtype="bfloat16", kv_cache_dtype="int8",
+)
+
+SMOKE = ArchConfig(
+    name="nemotron-4-340b-smoke", family="dense",
+    n_layers=2, d_model=96, n_heads=6, n_kv_heads=2, d_ff=384, vocab=256,
+    mlp_act="sq_relu",
+)

@@ -1,0 +1,17 @@
+"""qwen3-moe-30b-a3b [moe] — hf:Qwen/Qwen3-30B-A3B.
+48L d_model=2048 32H (GQA kv=4, head_dim=128) expert_ff=768 vocab=151936,
+MoE 128 experts top-8 (no shared expert, all layers MoE)."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=6144, vocab=151936, rope_theta=1e6,
+    n_experts=128, experts_per_tok=8, d_expert=768, grad_accum=4,
+)
+
+SMOKE = ArchConfig(
+    name="qwen3-moe-30b-a3b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+    vocab=256, n_experts=8, experts_per_tok=2, d_expert=32,
+)

@@ -1,0 +1,56 @@
+"""Architecture registry: ``get_arch(name)`` / ``--arch <id>``.
+
+One module per assigned architecture in this package; each exposes ``CONFIG``
+(exact public-literature values) and ``SMOKE`` (a reduced same-family config
+for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ArchConfig
+
+ARCH_IDS: List[str] = [
+    "qwen1_5_0_5b",
+    "stablelm_12b",
+    "nemotron_4_340b",
+    "internlm2_20b",
+    "qwen3_moe_30b_a3b",
+    "deepseek_v2_lite_16b",
+    "llama_3_2_vision_90b",
+    "mamba2_1_3b",
+    "hymba_1_5b",
+    "seamless_m4t_large_v2",
+]
+
+# canonical dashed ids (prompt spelling) -> module names
+ALIASES: Dict[str, str] = {
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "stablelm-12b": "stablelm_12b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "hymba-1.5b": "hymba_1_5b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_arch(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _module(name).SMOKE
+
+
+def all_archs() -> List[str]:
+    return list(ARCH_IDS)

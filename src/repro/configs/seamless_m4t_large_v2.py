@@ -1,0 +1,19 @@
+"""seamless-m4t-large-v2 [audio] — arXiv:2308.11596.
+Enc-dec: 24L speech encoder + 24L text decoder, d_model=1024 16H (kv=16)
+d_ff=8192 vocab=256206.  The audio frontend (fbank → w2v-BERT conv) is a
+STUB: input_specs supplies precomputed frame embeddings [B, S, d_model]
+(prompt-mandated)."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=8192,
+    vocab=256206,
+    enc_dec=True, n_enc_layers=24, n_frames_ratio=1, grad_accum=2,
+)
+
+SMOKE = ArchConfig(
+    name="seamless-m4t-large-v2-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+    enc_dec=True, n_enc_layers=2, n_frames_ratio=1,
+)

@@ -1,0 +1,14 @@
+"""stablelm-12b [dense] — stabilityai (config per assignment).
+40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=13824,
+    vocab=100352, grad_accum=4, kv_cache_dtype="int8",
+)
+
+SMOKE = ArchConfig(
+    name="stablelm-12b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160, vocab=256,
+)

@@ -1,0 +1,73 @@
+"""Booleanization — raw features -> Boolean literals (paper §II-A-a, Fig 1a).
+
+The paper thresholds raw features into Boolean *features* and extends each
+with its complement to form *literals* ``(x, ~x)``.  We implement the two
+strategies the TM literature (and the paper's KWS pipeline, ref [46]) uses:
+
+* ``threshold``   — one cut per feature (the Fig 1a MNIST example);
+* ``thermometer`` — k quantile cuts per feature (multi-bit encodings used for
+                    audio/sensor data), giving ``f_raw * k`` Boolean features.
+
+Both are fit offline (quantiles from a calibration split) and applied as a
+pure-jnp transform, so the whole pipeline jits and shards along batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Booleanizer:
+    """Fitted booleanizer: thresholds[f_raw, k] applied as raw >= cut."""
+
+    thresholds: np.ndarray  # [f_raw, k] float32
+
+    @property
+    def n_bool_features(self) -> int:
+        return int(self.thresholds.shape[0] * self.thresholds.shape[1])
+
+    def __call__(self, raw: jax.Array) -> jax.Array:
+        """raw [..., f_raw] float -> bool features [..., f_raw*k] (0/1 int8)."""
+        cuts = jnp.asarray(self.thresholds)  # [f, k]
+        bits = (raw[..., :, None] >= cuts).astype(jnp.int8)
+        return bits.reshape(*raw.shape[:-1], -1)
+
+
+def fit_thermometer(calib: np.ndarray, bits: int = 1) -> Booleanizer:
+    """Quantile thermometer cuts from a calibration array [n, f_raw]."""
+    qs = np.linspace(0.0, 1.0, bits + 2)[1:-1]            # interior quantiles
+    cuts = np.quantile(calib, qs, axis=0).T.astype(np.float32)  # [f, bits]
+    return Booleanizer(thresholds=np.ascontiguousarray(cuts))
+
+
+def fit_threshold(calib: np.ndarray, value: float | None = None) -> Booleanizer:
+    """Single cut per feature (global value or per-feature median)."""
+    if value is not None:
+        cuts = np.full((calib.shape[1], 1), value, np.float32)
+    else:
+        cuts = np.median(calib, axis=0)[:, None].astype(np.float32)
+    return Booleanizer(thresholds=cuts)
+
+
+def to_literals(bool_features: jax.Array) -> jax.Array:
+    """[..., f] {0,1} -> [..., 2f] literals = concat(x, ~x) (Fig 1a)."""
+    x = bool_features.astype(jnp.int8)
+    return jnp.concatenate([x, 1 - x], axis=-1)
+
+
+def pack_literals(literals: jax.Array) -> jax.Array:
+    """Bit-pack {0,1} int8 [..., 2f] -> uint32 [..., ceil(2f/32)].
+
+    This is the storage layout of the packed/VPU clause-evaluation path
+    (DESIGN.md §2.2) — one literal per bit, little-endian within a word.
+    """
+    *lead, n = literals.shape
+    pad = (-n) % 32
+    lit = jnp.pad(literals, [(0, 0)] * len(lead) + [(0, pad)])
+    lit = lit.reshape(*lead, -1, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (lit * weights).sum(axis=-1).astype(jnp.uint32)

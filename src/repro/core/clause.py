@@ -1,0 +1,106 @@
+"""Clause and class-sum computation (paper §II-A-c/d/e, §IV-A, Eq 1–3).
+
+Three equivalent evaluation paths, all jit-able:
+
+* :func:`clause_outputs_matmul` — the TPU-native MXU recast (DESIGN.md §2.1):
+  ``violations = include @ (1 - literals)``; a clause fires iff it has zero
+  violated included literals.  Exact, batched, systolic-friendly.
+* :func:`clause_outputs_logical` — direct transcription of Eq (1)
+  ``∧_i (L_i ∨ ¬TA_i)`` — the oracle for tests (and the paper's LUT form).
+* packed-bitwise path — lives in ``repro.kernels.clause_eval`` (VPU form).
+
+Empty-clause convention (standard TM semantics): during *training* an
+all-exclude clause outputs 1 (so it can begin including literals); during
+*evaluation* it outputs 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import TMConfig, TMState, VANILLA, ta_actions
+
+
+def clause_outputs_logical(
+    cfg: TMConfig, include: jax.Array, literals: jax.Array, eval_mode: bool
+) -> jax.Array:
+    """Oracle: literal-space AND chain.  include [C,2f] bool, literals
+    [B,2f] {0,1} -> clause outputs [B,C] {0,1} int32."""
+    lit = literals.astype(bool)[:, None, :]       # [B,1,2f]
+    inc = include[None, :, :]                     # [1,C,2f]
+    fired = jnp.all(jnp.logical_or(~inc, lit), axis=-1)   # [B,C]
+    nonempty = jnp.any(include, axis=-1)[None, :]
+    if eval_mode:
+        fired = jnp.logical_and(fired, nonempty)
+    return fired.astype(jnp.int32)
+
+
+def clause_outputs_matmul(
+    cfg: TMConfig, include: jax.Array, literals: jax.Array, eval_mode: bool
+) -> jax.Array:
+    """MXU recast: violations[b,c] = Σ_l include[c,l]·(1-literal[b,l]).
+
+    Contraction runs in int32 on CPU / bf16-accum-f32 paths on TPU; counts
+    are exact for 2f < 2^23 so a float MXU pass is still exact — we keep
+    int32 here and let the Pallas kernel pick the MXU dtype.
+    """
+    inc = include.astype(jnp.int32)                       # [C,2f]
+    viol = jax.lax.dot_general(
+        (1 - literals.astype(jnp.int32)), inc,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                                     # [B,C]
+    fired = viol == 0
+    if eval_mode:
+        nonempty = jnp.any(include, axis=-1)[None, :]
+        fired = jnp.logical_and(fired, nonempty)
+    return fired.astype(jnp.int32)
+
+
+def vanilla_polarity(clauses_per_class: int) -> jax.Array:
+    """+1 for even-indexed clauses, −1 for odd (paper §IV-A-i)."""
+    idx = jnp.arange(clauses_per_class)
+    return jnp.where(idx % 2 == 0, 1, -1).astype(jnp.int32)
+
+
+def clause_outputs_pallas(
+    cfg: TMConfig, include: jax.Array, literals: jax.Array, eval_mode: bool
+) -> jax.Array:
+    """Pallas kernel path (MXU-tiled; interpret-mode on CPU)."""
+    from repro.kernels import clause_eval_op
+    return clause_eval_op(literals.astype(jnp.int8),
+                          include.astype(jnp.int8), eval_mode=eval_mode)
+
+
+def class_sums(
+    cfg: TMConfig, state: TMState, literals: jax.Array, eval_mode: bool,
+    clause_fn=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full inference: returns (class_sums [B,h] int32, clause_out).
+
+    Vanilla: clause_out [B, h, c/class]; CoTM: clause_out [B, c] (shared pool,
+    Fig 1e)."""
+    if clause_fn is None:
+        clause_fn = (clause_outputs_pallas if cfg.compute_backend == "pallas"
+                     else clause_outputs_matmul)
+    include = ta_actions(cfg, state.ta)                   # [rows, 2f]
+    out = clause_fn(cfg, include, literals, eval_mode)    # [B, rows]
+    if cfg.tm_type == VANILLA:
+        b = out.shape[0]
+        out = out.reshape(b, cfg.classes, cfg.clauses)    # [B,h,c]
+        pol = vanilla_polarity(cfg.clauses)               # [c]
+        sums = jnp.einsum("bhc,c->bh", out, pol).astype(jnp.int32)
+        return sums, out
+    # CoTM: shared clause pool × learned signed weights (Eq 2)
+    sums = jax.lax.dot_general(
+        out, state.weights,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                                     # [B,h]
+    return sums.astype(jnp.int32), out
+
+
+def predict(cfg: TMConfig, state: TMState, literals: jax.Array) -> jax.Array:
+    """argmax over class sums (paper Fig 1d/e -> Argmax block)."""
+    sums, _ = class_sums(cfg, state, literals, eval_mode=True)
+    return jnp.argmax(sums, axis=-1)

@@ -1,0 +1,196 @@
+"""Convolutional Tsetlin Machine (paper §VI future work; Granmo et al.,
+arXiv:1905.09688) as a DTM module.
+
+A clause evaluates on every K×K patch of the Booleanised image (literals =
+patch bits + thermometer-coded patch position) and fires iff ANY patch
+matches (OR over patches).  During training each firing clause picks ONE
+random matching patch and applies standard Type I/II feedback against that
+patch's literals — position invariance emerges because different datapoints
+reinforce the same clause from different locations.
+
+TPU mapping: patch extraction is a gather; per-patch clause evaluation is
+one [B·P, 2f_patch] × [2f_patch, C] MXU contraction (the same violations
+recast as the flat TM — kernels/clause_eval applies unchanged); the
+OR-over-patches is a segment-max.  Weights/class sums reuse the CoTM path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .feedback import select_clauses
+from .prng import PRNG
+from .types import COALESCED, TMConfig, TMState, ta_actions
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTMConfig:
+    """Conv-specific geometry on top of TMConfig hyper-parameters."""
+
+    img_h: int = 8
+    img_w: int = 8
+    patch: int = 3                    # K (paper [40] uses 10×10 on 28×28)
+    clauses: int = 64
+    classes: int = 4
+    T: int = 16
+    s: float = 4.0
+    ta_bits: int = 8
+    weight_bits: int = 12
+    rand_bits: int = 16
+    prng_backend: str = "counter"
+    boost_true_positive: bool = True
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img_h - self.patch + 1) * (self.img_w - self.patch + 1)
+
+    @property
+    def pos_bits(self) -> int:
+        # thermometer-coded row + col upper-left position (Granmo §3)
+        return (self.img_h - self.patch) + (self.img_w - self.patch)
+
+    @property
+    def patch_features(self) -> int:
+        return self.patch * self.patch + self.pos_bits
+
+    @property
+    def literals(self) -> int:
+        return 2 * self.patch_features
+
+    def tm_config(self) -> TMConfig:
+        return TMConfig(tm_type=COALESCED, features=self.patch_features,
+                        clauses=self.clauses, classes=self.classes,
+                        T=self.T, s=self.s, ta_bits=self.ta_bits,
+                        weight_bits=self.weight_bits,
+                        rand_bits=self.rand_bits,
+                        prng_backend=self.prng_backend,
+                        boost_true_positive=self.boost_true_positive)
+
+
+def extract_patch_literals(cfg: ConvTMConfig, images: jax.Array) -> jax.Array:
+    """images [B, H, W] {0,1} -> patch literals [B, P, 2f_patch]."""
+    B = images.shape[0]
+    kh = kw = cfg.patch
+    oh, ow = cfg.img_h - kh + 1, cfg.img_w - kw + 1
+    # gather all patches (static loops — K is tiny)
+    rows = []
+    for di in range(kh):
+        for dj in range(kw):
+            rows.append(images[:, di:di + oh, dj:dj + ow])
+    patches = jnp.stack(rows, axis=-1).reshape(B, oh * ow, kh * kw)
+    # thermometer position bits: bit r set iff patch_row > r, col likewise
+    pi = jnp.arange(oh)[:, None].repeat(ow, 1).reshape(-1)       # [P]
+    pj = jnp.arange(ow)[None, :].repeat(oh, 0).reshape(-1)
+    rt = (pi[:, None] > jnp.arange(oh - 1)[None, :]).astype(jnp.int8)
+    ct = (pj[:, None] > jnp.arange(ow - 1)[None, :]).astype(jnp.int8)
+    pos = jnp.concatenate([rt, ct], -1)[None].repeat(B, 0)       # [B,P,pos]
+    feats = jnp.concatenate([patches.astype(jnp.int8), pos], -1)
+    return jnp.concatenate([feats, 1 - feats], -1)               # literals
+
+
+def conv_clause_outputs(cfg: ConvTMConfig, include: jax.Array,
+                        plits: jax.Array, eval_mode: bool):
+    """include [C, 2f], patch literals [B, P, 2f] ->
+    (clause_out [B, C], per-patch fired [B, P, C])."""
+    inc = include.astype(jnp.int32)
+    viol = jnp.einsum("bpl,cl->bpc", (1 - plits.astype(jnp.int32)), inc)
+    fired = (viol == 0)
+    if eval_mode:
+        fired &= include.any(-1)[None, None, :]
+    return fired.any(1).astype(jnp.int32), fired.astype(jnp.int32)
+
+
+def infer(cfg: ConvTMConfig, state: TMState, images: jax.Array,
+          eval_mode: bool = True):
+    tm = cfg.tm_config()
+    plits = extract_patch_literals(cfg, images)
+    include = ta_actions(tm, state.ta)
+    cl, fired = conv_clause_outputs(cfg, include, plits, eval_mode)
+    sums = jax.lax.dot_general(
+        cl, state.weights, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return sums, cl, fired, plits
+
+
+def predict(cfg: ConvTMConfig, state: TMState, images: jax.Array):
+    sums, *_ = infer(cfg, state, images, eval_mode=True)
+    return jnp.argmax(sums, -1)
+
+
+def train_step(cfg: ConvTMConfig, state: TMState, prng: PRNG,
+               images: jax.Array, labels: jax.Array):
+    """Batched-delta Conv TM step (two class-update rounds per datapoint).
+
+    Per firing clause, ONE random matching patch supplies the feedback
+    literals (Granmo's convolutional Type I/II); non-firing clauses take
+    the standard patch-independent 1/s decrements."""
+    tm = cfg.tm_config()
+    B = images.shape[0]
+    sums, cl, fired, plits = infer(cfg, state, images, eval_mode=False)
+    include = ta_actions(tm, state.ta)
+    correct = (jnp.argmax(sums, -1) == labels).sum()
+    P = cfg.n_patches
+
+    prng, c_rand = prng.bits((B,))
+    prng, patch_rand = prng.bits((B, cfg.clauses))
+    prng, sel_rand = prng.bits((B, 2, cfg.clauses))
+    prng, ta_rand = prng.bits((B, 2, cfg.clauses, cfg.literals))
+
+    # random matching patch per (datapoint, clause): perturbed argmax
+    noise = (patch_rand[:, None, :] % jnp.uint32(997)).astype(jnp.int32)
+    score = fired * 1000 + noise % 997                        # [B,P,C]
+    patch_idx = jnp.argmax(score.transpose(0, 2, 1), -1)      # [B,C]
+    sel_lits = jnp.take_along_axis(
+        plits[:, :, None, :].repeat(cfg.clauses, 2),
+        patch_idx[:, None, :, None].repeat(cfg.literals, 3), 1)[:, 0]
+
+    def per_point(carry, xs):
+        acc_ta, acc_w = carry
+        sm, lab, cl_1, lits_c, cr, sr, tr = xs
+        from .feedback import negated_class
+        neg = negated_class(cfg.classes, lab, cr)
+        for r, (cls, y_c) in enumerate(((lab, 1), (neg, 0))):
+            csum = jnp.take(sm, cls)
+            sel = select_clauses(tm, csum, jnp.asarray(y_c), sr[r])
+            w_row = jnp.take(state.weights, cls, axis=0)
+            sign_pos = w_row >= 0
+            is_t1 = jnp.where(y_c == 1, sign_pos, ~sign_pos)
+            t1 = (sel == 1) & is_t1
+            t2 = (sel == 1) & ~is_t1
+            clb = cl_1.astype(bool)                            # [C]
+            litb = lits_c.astype(bool)                         # [C, 2f]
+            low = tr[r] < jnp.uint32(int(round((1 << cfg.rand_bits)
+                                               / cfg.s)))
+            cl_and_lit = clb[:, None] & litb
+            inc1 = cl_and_lit if cfg.boost_true_positive else (
+                cl_and_lit & ~low)
+            dec1 = ~cl_and_lit & low
+            d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
+            inc2 = (clb[:, None] & ~litb & ~include).astype(jnp.int32)
+            d = t1[:, None] * d1 + t2[:, None] * inc2
+            acc_ta = acc_ta + d
+            step = jnp.where(y_c == 1, 1, -1)
+            acc_w = acc_w.at[cls].add(sel * cl_1 * step)
+        return (acc_ta, acc_w), None
+
+    z = (jnp.zeros_like(state.ta, jnp.int32),
+         jnp.zeros_like(state.weights))
+    (d_ta, d_w), _ = jax.lax.scan(
+        per_point, z, (sums, labels, cl, sel_lits, c_rand, sel_rand,
+                       ta_rand))
+    hi = tm.n_states - 1
+    new_ta = jnp.clip(state.ta + d_ta, 0, hi).astype(state.ta.dtype)
+    wc = tm.weight_clip
+    new_w = jnp.clip(state.weights + d_w, -wc, wc)
+    return TMState(new_ta, new_w), prng, {"correct": correct}
+
+
+def init(cfg: ConvTMConfig, key) -> Tuple[TMState, PRNG]:
+    from .types import init_state
+    state = init_state(cfg.tm_config(), key)
+    prng = PRNG.create(cfg.tm_config(), 1)
+    return state, prng

@@ -1,0 +1,257 @@
+"""Dynamic Tsetlin Machine engine (paper §IV — the core contribution).
+
+The FPGA DTM synthesises ONE datapath (clause matrix ``x×y``, weight matrix
+``m×n``, buffers sized to maxima) and then runs *any* TM model — different
+feature counts, clause counts, class counts, and even TM type (Vanilla vs
+CoTM) — purely by reprogramming iteration counts and remainder *masks*
+(Fig 5, Fig 6), with no resynthesis.
+
+TPU/JAX adaptation (DESIGN.md §2.4): the engine jit-compiles its step
+functions ONCE for the padded tile grid; a model is a :class:`DTMProgram` —
+pure *data* (padded TA/weight arrays + masks + traced hyper-parameters).
+Switching model or TM type swaps the program, never the executable.  The
+flexibility tests assert cache-size == 1 across model switches.
+
+Unification trick (the paper's own, Eq 3): Vanilla TM is executed on the
+CoTM datapath as a *block-diagonal frozen ±1 weight matrix* over a pool of
+``classes × clauses/class`` rows; CoTM is a dense learned weight matrix over
+a shared pool.  One engine, both algorithms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .prng import PRNG
+from .types import COALESCED, TMConfig, TileConfig, VANILLA
+
+_NEG_INF_SUM = -(1 << 24)  # Fig 6d: remainder class sums pinned to min
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DTMProgram:
+    """Run-time model data for the DTM engine (a pytree — all dynamic).
+
+    ta        int32 [R, L]  padded TA states
+    weights   int32 [H, R]  padded class weights (Vanilla: frozen block ±1)
+    cl_mask   int32 [R]     1 = real clause row (Fig 6b)
+    l_mask    int32 [L]     1 = real literal column (Fig 6a)
+    h_mask    int32 [H]     1 = real class (Fig 6d)
+    w_frozen  bool  []      True = Vanilla mode (weights never update)
+    T         int32 []      clause-update threshold (runtime hyper-param)
+    p_ta      uint32 []     precomputed ⌊2^rand_bits / s⌋ (§IV-B-c)
+    boost     bool  []      boost-true-positive flag
+    n_states  int32 []      2^ta_bits (TA clip bound; runtime-selectable)
+    """
+
+    ta: jax.Array
+    weights: jax.Array
+    cl_mask: jax.Array
+    l_mask: jax.Array
+    h_mask: jax.Array
+    w_frozen: jax.Array
+    T: jax.Array
+    p_ta: jax.Array
+    boost: jax.Array
+    n_states: jax.Array
+    w_clip: jax.Array
+
+    def tree_flatten(self):
+        fields = dataclasses.astuple(self)
+        return fields, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class DTMEngine:
+    """Compiled-once tiled TM executor (inference + training)."""
+
+    def __init__(self, tile: TileConfig, rand_bits: int = 16):
+        self.tile = tile
+        self.rand_bits = rand_bits
+        self.L, self.R, self.H = tile.padded_dims()
+        self._infer = jax.jit(self._infer_impl)
+        self._train = jax.jit(self._train_impl)
+
+    # ------------------------------------------------------------------ #
+    # programming (paper §IV-D-a)                                         #
+    # ------------------------------------------------------------------ #
+    def program(self, cfg: TMConfig, key: jax.Array,
+                ta: Optional[jax.Array] = None,
+                weights: Optional[jax.Array] = None) -> DTMProgram:
+        """Build run-time program data for a model config (pads + masks)."""
+        L, R, H = self.L, self.R, self.H
+        f, c, h = cfg.features, cfg.clauses, cfg.classes
+        rows = cfg.total_clauses
+        assert 2 * f <= L and rows <= R and h <= H, (
+            f"model {(2*f, rows, h)} exceeds engine buffers {(L, R, H)}")
+        assert cfg.T < (1 << 13)
+
+        half = L // 2
+        kt, kw = jax.random.split(key)
+        if ta is None:
+            j = cfg.include_threshold
+            bern = jax.random.bernoulli(kt, 0.5, (rows, cfg.literals))
+            ta = j - 1 + bern.astype(jnp.int32)
+        # literal layout: [x .. pad | ~x .. pad]; split the 2f TA columns.
+        ta_pad = jnp.zeros((R, L), jnp.int32)
+        ta_pad = ta_pad.at[:rows, :f].set(ta[:, :f])
+        ta_pad = ta_pad.at[:rows, half:half + f].set(ta[:, f:])
+
+        w_pad = jnp.zeros((H, R), jnp.int32)
+        if cfg.tm_type == COALESCED:
+            if weights is None:
+                bw = jax.random.bernoulli(kw, 0.5, (h, c))
+                weights = jnp.where(bw, 1, -1).astype(jnp.int32)
+            w_pad = w_pad.at[:h, :c].set(weights)
+            frozen = False
+        else:  # Vanilla: block-diagonal frozen ±1 (Eq 3)
+            pol = jnp.where(jnp.arange(c) % 2 == 0, 1, -1).astype(jnp.int32)
+            for cls in range(h):
+                w_pad = w_pad.at[cls, cls * c:(cls + 1) * c].set(pol)
+            frozen = True
+
+        l_mask = jnp.zeros((L,), jnp.int32)
+        l_mask = l_mask.at[:f].set(1).at[half:half + f].set(1)
+        cl_mask = (jnp.arange(R) < rows).astype(jnp.int32)
+        h_mask = (jnp.arange(H) < h).astype(jnp.int32)
+        p_ta = jnp.uint32(int(round((1 << self.rand_bits) / cfg.s)))
+        return DTMProgram(
+            ta=ta_pad, weights=w_pad, cl_mask=cl_mask, l_mask=l_mask,
+            h_mask=h_mask, w_frozen=jnp.asarray(frozen),
+            T=jnp.asarray(cfg.T, jnp.int32), p_ta=p_ta,
+            boost=jnp.asarray(cfg.boost_true_positive),
+            n_states=jnp.asarray(cfg.n_states, jnp.int32),
+            w_clip=jnp.asarray(cfg.weight_clip, jnp.int32))
+
+    def pad_features(self, bool_x: jax.Array, cfg: TMConfig) -> jax.Array:
+        """Host-side literal layout: [x pad | ~x pad] -> [B, L]."""
+        f, half = cfg.features, self.L // 2
+        x = bool_x.astype(jnp.int8)
+        z = jnp.zeros((*x.shape[:-1], half - f), jnp.int8)
+        return jnp.concatenate([x, z, 1 - x, z], axis=-1)
+
+    # ------------------------------------------------------------------ #
+    # inference (Eq 1 + Eq 2/3 on the padded grid)                        #
+    # ------------------------------------------------------------------ #
+    def _infer_impl(self, prog: DTMProgram, lits: jax.Array):
+        include = (prog.ta >= (prog.n_states >> 1)).astype(jnp.int32)  # [R,L]
+        viol = jax.lax.dot_general(
+            (1 - lits.astype(jnp.int32)) * prog.l_mask[None, :], include,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)                          # [B,R]
+        nonempty = (include * prog.l_mask[None, :]).max(axis=1)
+        cl = ((viol == 0) & (nonempty == 1)).astype(jnp.int32)
+        cl = cl * prog.cl_mask[None, :]
+        sums = jax.lax.dot_general(
+            cl, prog.weights,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)                          # [B,H]
+        sums = jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
+        return sums, cl
+
+    def infer(self, prog: DTMProgram, lits: jax.Array):
+        """lits [B, L] (from pad_features) -> (class_sums [B,H], clause [B,R])."""
+        return self._infer(prog, lits)
+
+    def predict(self, prog: DTMProgram, lits: jax.Array) -> jax.Array:
+        sums, _ = self.infer(prog, lits)
+        return jnp.argmax(sums, axis=-1)
+
+    # ------------------------------------------------------------------ #
+    # training (Alg 3-6 on the padded grid, batched-delta mode)           #
+    # ------------------------------------------------------------------ #
+    def _train_impl(self, prog: DTMProgram, prng: PRNG, lits: jax.Array,
+                    labels: jax.Array):
+        B = lits.shape[0]
+        n_cls = prog.h_mask.sum()
+        include_b = prog.ta >= (prog.n_states >> 1)                    # [R,L] bool
+
+        # training-mode clause outputs: empty (or padded) clauses fire=1,
+        # then cl_mask zeroes padded rows (Fig 6b).
+        viol = jax.lax.dot_general(
+            (1 - lits.astype(jnp.int32)) * prog.l_mask[None, :],
+            include_b.astype(jnp.int32),
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        cl = (viol == 0).astype(jnp.int32) * prog.cl_mask[None, :]     # [B,R]
+        sums = jax.lax.dot_general(
+            cl, prog.weights,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        sums_m = jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
+        correct = (jnp.argmax(sums_m, -1) == labels).sum()
+
+        def per_point(carry, xs):
+            prng, acc_ta, acc_w, acc_sel = carry
+            lit, lab, sm, out = xs
+            prng, c_rand = prng.bits((1,))
+            prng, sel_rand = prng.bits((2, self.R))
+            prng, ta_rand = prng.bits((2, self.R, self.L))
+            # negated class among the *valid* classes
+            rn = (c_rand[0] % jnp.uint32(jnp.maximum(n_cls - 1, 1))
+                  ).astype(jnp.int32)
+            neg = jnp.where(rn < lab, rn, rn + 1)
+            d_ta = jnp.zeros((self.R, self.L), jnp.int32)
+            d_w = jnp.zeros_like(prog.weights)
+            d_sel = jnp.zeros((self.R,), jnp.int32)
+            for r, (cls, y_c) in enumerate(((lab, 1), (neg, 0))):
+                csum = jnp.clip(jnp.take(sm, cls), -prog.T, prog.T)
+                p_num = jnp.where(y_c == 1, prog.T - csum, prog.T + csum)
+                sel = (sel_rand[r].astype(jnp.int32) * (2 * prog.T)
+                       < (p_num << self.rand_bits)).astype(jnp.int32)
+                w_row = prog.weights[cls]                              # [R]
+                # Vanilla eligibility: only the class's own block (w != 0).
+                elig = jnp.where(prog.w_frozen, (w_row != 0), True)
+                sel = sel * prog.cl_mask * elig.astype(jnp.int32)
+                sign_pos = w_row >= 0
+                is_t1 = jnp.where(y_c == 1, sign_pos, ~sign_pos)
+                t1 = (sel == 1) & is_t1
+                t2 = (sel == 1) & ~is_t1
+                clb = out.astype(bool)
+                litb = lit.astype(bool)
+                low = ta_rand[r] < prog.p_ta
+                cl_and_lit = clb[:, None] & litb[None, :]
+                inc1 = jnp.where(prog.boost, cl_and_lit, cl_and_lit & ~low)
+                dec1 = ~cl_and_lit & low
+                d1 = jnp.where(inc1, 1, jnp.where(dec1, -1, 0))
+                inc2 = clb[:, None] & ~litb[None, :] & ~include_b
+                d = (t1[:, None] * d1 + t2[:, None] * inc2.astype(jnp.int32))
+                d = d * prog.l_mask[None, :]                  # Fig 6a inverse
+                d_ta = d_ta + d
+                step = jnp.where(y_c == 1, 1, -1)
+                d_w = d_w.at[cls].add(sel * out * step)
+                d_sel = d_sel + sel
+            return (prng, acc_ta + d_ta, acc_w + d_w, acc_sel + d_sel), None
+
+        acc0 = (prng, jnp.zeros((self.R, self.L), jnp.int32),
+                jnp.zeros_like(prog.weights), jnp.zeros((self.R,), jnp.int32))
+        (prng, d_ta, d_w, d_sel), _ = jax.lax.scan(
+            per_point, acc0, (lits, labels, sums_m, cl))
+
+        new_ta = jnp.clip(prog.ta + d_ta, 0, prog.n_states - 1)
+        new_w = jnp.where(prog.w_frozen, prog.weights,
+                          jnp.clip(prog.weights + d_w, -prog.w_clip,
+                                   prog.w_clip))
+        new_prog = dataclasses.replace(prog, ta=new_ta, weights=new_w)
+        # Alg 6 group-skip accounting on the engine's y-tile granularity
+        g = (d_sel > 0).astype(jnp.int32).reshape(-1, self.tile.y).max(-1)
+        gmask = prog.cl_mask.reshape(-1, self.tile.y).max(-1)
+        stats = {"selected": d_sel.sum(), "active_groups": (g * gmask).sum(),
+                 "total_groups": gmask.sum(), "correct": correct}
+        return new_prog, prng, stats
+
+    def train_step(self, prog: DTMProgram, prng: PRNG, lits: jax.Array,
+                   labels: jax.Array):
+        return self._train(prog, prng, lits, labels)
+
+    # convenience: compile-cache introspection for the flexibility tests
+    def cache_sizes(self) -> Tuple[int, int]:
+        return (self._infer._cache_size(), self._train._cache_size())

@@ -1,0 +1,342 @@
+"""TM training feedback hierarchy (paper §II-B, §IV-B, Algorithms 3–6).
+
+Class level   : target class + randomly negated class, two rounds/datapoint.
+Clause level  : integer-exact update-probability comparison
+                ``rand · 2T < (T ∓ clip(csum)) · 2^rand_bits``  (Alg 3's
+                fixed-point trick, no division / floats).
+Weight level  : CoTM ±1 weight nudges for selected firing clauses (Alg 4).
+TA level      : Type I (stochastic, sensitivity s) / Type II (deterministic)
+                transitions (Alg 5), same random number reused across the
+                inc/dec branches exactly like the RTL.
+
+Two execution modes:
+* ``sequential`` — `lax.scan` over datapoints, state updated per point:
+  bit-faithful to the FPGA timing (Fig 9c: one datapoint, two rounds).
+* ``batched``    — all datapoints issue feedback against the same state and
+  integer deltas are summed then clipped (the standard parallel-TM
+  approximation; what scales across a pod — DESIGN.md §2.7).
+
+Clause-skip (Alg 6) is realised as *feedback compaction*: only clauses with
+non-zero feedback have their TA tiles touched; group-level skip statistics
+are emitted for the Fig 7 benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .clause import class_sums, vanilla_polarity
+from .prng import PRNG
+from .types import COALESCED, TMConfig, TMState, VANILLA, ta_actions
+
+# Width of a clause "group" for skip statistics — the paper's y (DTM-L: 27,
+# here tile-aligned).
+SKIP_GROUP = 32
+
+
+@dataclasses.dataclass
+class FeedbackStats:
+    """Diagnostics for the paper's figures (pytree)."""
+
+    selected_clauses: jax.Array   # total clauses that received feedback
+    active_groups: jax.Array      # y-groups with any feedback (Alg 6 visits)
+    total_groups: jax.Array       # y-groups overall (Alg 6 worst case)
+    correct: jax.Array            # batch accuracy numerator (pre-update)
+
+    def tree_flatten(self):
+        return (self.selected_clauses, self.active_groups, self.total_groups,
+                self.correct), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    FeedbackStats, FeedbackStats.tree_flatten, FeedbackStats.tree_unflatten
+)
+
+
+# ---------------------------------------------------------------------------
+# class level (Alg 3)
+# ---------------------------------------------------------------------------
+
+def negated_class(h: int, target: jax.Array, c_rand: jax.Array) -> jax.Array:
+    """Uniform class ≠ target.  (Paper's NC_Gen uses ``% (h-2)`` which skips
+    one class — a listing bug; we use the standard ``% (h-1)``, DESIGN.md §6.)
+    """
+    rn = (c_rand % jnp.uint32(h - 1)).astype(jnp.int32)
+    return jnp.where(rn < target, rn, rn + 1)
+
+
+def select_clauses(
+    cfg: TMConfig, csum: jax.Array, y_c: jax.Array, sel_rand: jax.Array
+) -> jax.Array:
+    """Clause-update decision, integer-exact (Alg 3 + Alg 4 head).
+
+    P(select) = (T - csum)/2T for target, (T + csum)/2T for negated.
+    csum/y_c broadcast against sel_rand [..., clauses] (uint32, rand_bits)."""
+    T = cfg.T
+    assert T < (1 << 13), "T must fit the int32 fixed-point comparison"
+    cs = jnp.clip(csum, -T, T).astype(jnp.int32)
+    p_num = jnp.where(y_c == 1, T - cs, T + cs)           # in [0, 2T]
+    lhs = sel_rand.astype(jnp.int32) * (2 * T)
+    rhs = p_num << cfg.rand_bits
+    return (lhs < rhs).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# clause + TA level for ONE feedback round against one class's clause block
+# ---------------------------------------------------------------------------
+
+def round_deltas(
+    cfg: TMConfig,
+    include: jax.Array,      # [c, 2f] bool  — TA actions of the clause block
+    literals: jax.Array,     # [2f]  {0,1}
+    clause_out: jax.Array,   # [c]   {0,1}
+    weight_row: Optional[jax.Array],  # CoTM: [c] int32 weights of this class
+    csum: jax.Array,         # scalar int32 — class sum of the chosen class
+    y_c: jax.Array,          # scalar {0,1}
+    sel_rand: jax.Array,     # [c]    uint32
+    ta_rand: jax.Array,      # [c,2f] uint32
+) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
+    """Deltas for one (datapoint, class-update round).
+
+    Returns (ta_delta [c,2f] int32 ∈{-1,0,1}, w_delta [c] int32 or None,
+    selected [c] int32)."""
+    selected = select_clauses(cfg, csum, y_c, sel_rand)           # [c]
+
+    if cfg.tm_type == COALESCED:
+        sign_pos = (weight_row >= 0)
+    else:
+        sign_pos = vanilla_polarity(cfg.clauses) > 0
+    # Type I reinforces the chosen class's "supporting" clauses on target
+    # rounds and "opposing" clauses on negated rounds; Type II the converse.
+    is_t1 = jnp.where(y_c == 1, sign_pos, ~sign_pos)
+    type1 = (selected == 1) & is_t1                               # [c]
+    type2 = (selected == 1) & ~is_t1
+
+    cl = clause_out.astype(bool)                                  # [c]
+    lit = literals.astype(bool)                                   # [2f]
+
+    # --- Type I (Alg 5, lines 5-13): stochastic with sensitivity s --------
+    p_ta = jnp.uint32(int(round((1 << cfg.rand_bits) / cfg.s)))
+    low = ta_rand < p_ta                                          # P = 1/s
+    cl_and_lit = cl[:, None] & lit[None, :]                       # [c,2f]
+    if cfg.boost_true_positive:
+        inc1 = cl_and_lit
+    else:
+        inc1 = cl_and_lit & ~low                                  # P=(s-1)/s
+    dec1 = ~cl_and_lit & low                                      # P = 1/s
+    d_t1 = jnp.where(inc1, 1, jnp.where(dec1, -1, 0))
+
+    # --- Type II (Alg 5, lines 14-17): deterministic include of 0-literals
+    # of firing clauses (only excluded TAs can be in this situation).
+    inc2 = cl[:, None] & ~lit[None, :] & ~include
+    d_t2 = inc2.astype(jnp.int32)
+
+    ta_delta = (
+        type1[:, None].astype(jnp.int32) * d_t1
+        + type2[:, None].astype(jnp.int32) * d_t2
+    )
+
+    w_delta = None
+    if cfg.tm_type == COALESCED:
+        # Alg 4: selected ∧ firing -> weight moves toward the round's sign.
+        step = jnp.where(y_c == 1, 1, -1)
+        w_delta = (selected * cl.astype(jnp.int32)) * step
+    return ta_delta, w_delta, selected
+
+
+# ---------------------------------------------------------------------------
+# state application
+# ---------------------------------------------------------------------------
+
+def apply_ta_delta(cfg: TMConfig, ta: jax.Array, delta: jax.Array) -> jax.Array:
+    hi = jnp.asarray(cfg.n_states - 1, ta.dtype)
+    return jnp.clip(ta.astype(jnp.int32) + delta, 0, hi).astype(ta.dtype)
+
+
+def apply_w_delta(cfg: TMConfig, w: jax.Array, delta: jax.Array) -> jax.Array:
+    c = cfg.weight_clip
+    return jnp.clip(w + delta, -c, c).astype(jnp.int32)
+
+
+def _group_stats(selected_rows: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Alg 6 accounting: how many SKIP_GROUP-wide clause groups get feedback."""
+    n = selected_rows.shape[0]
+    pad = (-n) % SKIP_GROUP
+    s = jnp.pad(selected_rows, (0, pad))
+    g = s.reshape(-1, SKIP_GROUP).max(axis=-1)
+    return g.sum(), jnp.asarray(g.shape[0], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-datapoint feedback (two rounds), shared by both modes
+# ---------------------------------------------------------------------------
+
+def _datapoint_deltas(cfg, include, weights, literals, clause_out, sums,
+                      label, c_rand, sel_rand2, ta_rand2):
+    """Full two-round feedback for one datapoint.
+
+    clause_out: CoTM [c]; Vanilla [h*c] (row-major class blocks).
+    Returns (ta_delta rows×2f, w_delta [h,c]|None, selected_rows [rows])."""
+    h, c = cfg.classes, cfg.clauses
+    neg = negated_class(h, label, c_rand)
+
+    rows = include.shape[0]
+    ta_delta = jnp.zeros((rows, cfg.literals), jnp.int32)
+    w_delta = None if cfg.tm_type == VANILLA else jnp.zeros((h, c), jnp.int32)
+    selected_rows = jnp.zeros((rows,), jnp.int32)
+
+    for r, (cls, y_c) in enumerate(((label, 1), (neg, 0))):
+        csum = jnp.take(sums, cls)
+        if cfg.tm_type == COALESCED:
+            inc_blk, out_blk = include, clause_out
+            w_row = jnp.take(weights, cls, axis=0)
+            row0 = 0
+        else:
+            row0 = cls * c
+            inc_blk = jax.lax.dynamic_slice_in_dim(include, row0, c, 0)
+            out_blk = jax.lax.dynamic_slice_in_dim(clause_out, row0, c, 0)
+            w_row = None
+        d_ta, d_w, sel = round_deltas(
+            cfg, inc_blk, literals, out_blk, w_row, csum,
+            jnp.asarray(y_c), sel_rand2[r], ta_rand2[r])
+        if cfg.tm_type == COALESCED:
+            ta_delta = ta_delta + d_ta
+            w_delta = w_delta.at[cls].add(d_w)
+            selected_rows = selected_rows + sel
+        else:
+            ta_delta = jax.lax.dynamic_update_slice_in_dim(
+                ta_delta,
+                jax.lax.dynamic_slice_in_dim(ta_delta, row0, c, 0) + d_ta,
+                row0, 0)
+            selected_rows = jax.lax.dynamic_update_slice_in_dim(
+                selected_rows,
+                jax.lax.dynamic_slice_in_dim(selected_rows, row0, c, 0) + sel,
+                row0, 0)
+    return ta_delta, w_delta, selected_rows
+
+
+# ---------------------------------------------------------------------------
+# public train steps
+# ---------------------------------------------------------------------------
+
+def _draw_round_rands(cfg: TMConfig, prng: PRNG, batch: int):
+    """Random numbers for `batch` datapoints (two rounds each)."""
+    c = cfg.clauses
+    prng, c_rand = prng.bits((batch,))
+    prng, sel_rand = prng.bits((batch, 2, c))
+    prng, ta_rand = prng.bits((batch, 2, c, cfg.literals))
+    return prng, c_rand, sel_rand, ta_rand
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def train_step(
+    cfg: TMConfig,
+    state: TMState,
+    prng: PRNG,
+    batch: Tuple[jax.Array, jax.Array],   # literals [B,2f] int8, labels [B]
+    mode: str = "batched",
+    chunk: int = 8,
+) -> Tuple[TMState, PRNG, FeedbackStats]:
+    literals, labels = batch
+    if mode == "sequential":
+        return _train_sequential(cfg, state, prng, literals, labels)
+    return _train_batched(cfg, state, prng, literals, labels, chunk)
+
+
+def batched_deltas(cfg, state, prng, literals, labels, chunk):
+    """Batched-mode integer deltas WITHOUT applying them.
+
+    This is the unit the distributed runtime psums across data shards
+    (core/distributed.py) — the TM analogue of a gradient, already integer
+    (wire-compressible for free, DESIGN.md §2.7).
+    Returns (prng, d_ta [rows,2f] i32, d_w [h,c] i32|None, d_sel, correct)."""
+    B = literals.shape[0]
+    assert B % chunk == 0, (B, chunk)
+    sums, clause_out = class_sums(cfg, state, literals, eval_mode=False)
+    if cfg.tm_type == VANILLA:
+        clause_out = clause_out.reshape(B, -1)            # [B, h*c]
+    include = ta_actions(cfg, state.ta)
+    preds_correct = (jnp.argmax(sums, -1) == labels).sum()
+
+    lit_c = literals.reshape(B // chunk, chunk, -1)
+    lab_c = labels.reshape(B // chunk, chunk)
+    sums_c = sums.reshape(B // chunk, chunk, -1)
+    out_c = clause_out.reshape(B // chunk, chunk, clause_out.shape[-1])
+
+    def body(carry, xs):
+        prng, acc_ta, acc_w, acc_sel = carry
+        lit, lab, sm, out = xs
+        prng, c_rand, sel_rand, ta_rand = _draw_round_rands(cfg, prng, chunk)
+        d_ta, d_w, sel = jax.vmap(
+            lambda *a: _datapoint_deltas(cfg, include, state.weights, *a)
+        )(lit, out, sm, lab, c_rand, sel_rand, ta_rand)
+        acc_ta = acc_ta + d_ta.sum(0)
+        if acc_w is not None:
+            acc_w = acc_w + d_w.sum(0)
+        acc_sel = acc_sel + sel.sum(0)
+        return (prng, acc_ta, acc_w, acc_sel), None
+
+    rows = state.ta.shape[0]
+    acc_ta0 = jnp.zeros((rows, cfg.literals), jnp.int32)
+    acc_w0 = (None if cfg.tm_type == VANILLA
+              else jnp.zeros((cfg.classes, cfg.clauses), jnp.int32))
+    acc_sel0 = jnp.zeros((rows,), jnp.int32)
+    (prng, acc_ta, acc_w, acc_sel), _ = jax.lax.scan(
+        body, (prng, acc_ta0, acc_w0, acc_sel0), (lit_c, lab_c, sums_c, out_c))
+    return prng, acc_ta, acc_w, acc_sel, preds_correct
+
+
+def apply_deltas(cfg, state, acc_ta, acc_w, acc_sel, preds_correct):
+    new_ta = apply_ta_delta(cfg, state.ta, acc_ta)
+    new_w = (state.weights if cfg.tm_type == VANILLA
+             else apply_w_delta(cfg, state.weights, acc_w))
+    active, total = _group_stats((acc_sel > 0).astype(jnp.int32))
+    stats = FeedbackStats(acc_sel.sum(), active, total, preds_correct)
+    return TMState(new_ta, new_w), stats
+
+
+def _train_batched(cfg, state, prng, literals, labels, chunk):
+    """Parallel feedback against a frozen state; integer deltas summed."""
+    prng, acc_ta, acc_w, acc_sel, correct = batched_deltas(
+        cfg, state, prng, literals, labels, chunk)
+    new_state, stats = apply_deltas(cfg, state, acc_ta, acc_w, acc_sel,
+                                    correct)
+    return new_state, prng, stats
+
+
+def _train_sequential(cfg, state, prng, literals, labels):
+    """Paper-faithful: one datapoint at a time (Fig 9c), fresh inference
+    against the *updated* state each step."""
+
+    def body(carry, xs):
+        state, prng, nsel, nact, ntot, ncorr = carry
+        lit, lab = xs
+        lit2 = lit[None]
+        sums, clause_out = class_sums(cfg, state, lit2, eval_mode=False)
+        include = ta_actions(cfg, state.ta)
+        sums, clause_out = sums[0], clause_out.reshape(-1)
+        ncorr = ncorr + (jnp.argmax(sums) == lab).astype(jnp.int32)
+        prng, c_rand, sel_rand, ta_rand = _draw_round_rands(cfg, prng, 1)
+        d_ta, d_w, sel = _datapoint_deltas(
+            cfg, include, state.weights, lit, clause_out, sums, lab,
+            c_rand[0], sel_rand[0], ta_rand[0])
+        new_ta = apply_ta_delta(cfg, state.ta, d_ta)
+        new_w = (state.weights if cfg.tm_type == VANILLA
+                 else apply_w_delta(cfg, state.weights, d_w))
+        a, t = _group_stats((sel > 0).astype(jnp.int32))
+        return (TMState(new_ta, new_w), prng, nsel + sel.sum(), nact + a,
+                ntot + t, ncorr), None
+
+    z = jnp.asarray(0, jnp.int32)
+    (state, prng, nsel, nact, ntot, ncorr), _ = jax.lax.scan(
+        body, (state, prng, z, z, z, z), (literals, labels))
+    stats = FeedbackStats(nsel, nact, ntot, ncorr)
+    return state, prng, stats

@@ -1,0 +1,240 @@
+"""Master–slave PRNG cluster (paper §IV-C, Fig 8, Fig 15).
+
+The FPGA design uses one master PRNG that re-seeds a bank of L-bit LFSR
+"slave" PRNGs every 2^L cycles ("seed refresh").  TPU/JAX adaptation
+(DESIGN.md §2.5): each slave becomes a *lane* of a vectorised Galois LFSR —
+one uint32 per random stream — and the master becomes a splitmix/xorshift
+mixer that derives fresh lane seeds from a scalar master state.
+
+Two backends share one API:
+
+* ``lfsr``     — paper-faithful: L-bit Galois LFSR lanes, optional seed
+                 refresh with period 2^L.  Low L degrades number quality the
+                 same way the paper's Fig 15 shows (quantised comparisons +
+                 short periods + lane correlation).
+* ``threefry`` — ``jax.random`` counter-based bits; the "production" fast
+                 path (quality ceiling — matches paper's 'ideal RNG' refs).
+
+All consumers compare these bits against integer fixed-point thresholds
+(`rand_bits`-wide), exactly like the accelerator (Alg 3/5): no floats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Maximal-length Galois LFSR tap masks (polynomial sans x^0), keyed by width.
+# Taken from standard m-sequence tables (Xilinx XAPP052 conventions).
+_TAPS = {
+    4: 0b1100,
+    8: 0b10111000,                    # x^8 + x^6 + x^5 + x^4 + 1
+    12: 0b111000001000,               # x^12+x^11+x^10+x^4+1
+    16: 0b1101000000001000,           # x^16+x^15+x^13+x^4+1
+    20: 0b10010000000000000000,       # x^20+x^17+1
+    24: 0b111000010000000000000000,   # x^24+x^23+x^22+x^17+1
+    32: 0b10000000001000000000000000000110,  # x^32+x^22+x^2+x^1+1
+}
+
+
+def _splitmix32(x: jax.Array) -> jax.Array:
+    """Master seed mixer (uint32 -> uint32), used to derive lane seeds."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = (x + jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    z = x
+    z = (z ^ (z >> 16)) * jnp.uint32(0x21F0AAAD)
+    z = (z ^ (z >> 15)) * jnp.uint32(0x735A2D97)
+    z = z ^ (z >> 15)
+    return z.astype(jnp.uint32)
+
+
+def _xorshift32(x: jax.Array) -> jax.Array:
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    return x.astype(jnp.uint32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LFSRState:
+    """Pytree state of the PRNG cluster.
+
+    lanes  : uint32[n_lanes]  — slave LFSR registers (only low L bits used)
+    master : uint32[]         — master PRNG register
+    cycles : uint32[]         — cycles since last refresh (refresh @ 2^L)
+    """
+
+    lanes: jax.Array
+    master: jax.Array
+    cycles: jax.Array
+
+    def tree_flatten(self):
+        return (self.lanes, self.master, self.cycles), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_cluster(master_seed: int, n_lanes: int, lfsr_bits: int) -> LFSRState:
+    if lfsr_bits not in _TAPS:
+        raise ValueError(f"no tap table for LFSR width {lfsr_bits}")
+    master = jnp.uint32(master_seed if master_seed != 0 else 0xDEADBEEF)
+    lanes = _seed_lanes(master, n_lanes, lfsr_bits)
+    return LFSRState(lanes=lanes, master=master, cycles=jnp.uint32(0))
+
+
+def _seed_lanes(master: jax.Array, n_lanes: int, lfsr_bits: int) -> jax.Array:
+    """Master generates one fresh seed per slave (Fig 8 'req seed/ack')."""
+    idx = jnp.arange(n_lanes, dtype=jnp.uint32)
+    seeds = _splitmix32(master.astype(jnp.uint32) ^ idx)
+    mask = jnp.uint32((1 << lfsr_bits) - 1)
+    seeds = seeds & mask
+    # Galois LFSR locks up at 0 — force nonzero, as real HW seed logic must.
+    return jnp.where(seeds == 0, jnp.uint32(1), seeds)
+
+
+def lfsr_step(lanes: jax.Array, lfsr_bits: int) -> jax.Array:
+    """One Galois LFSR shift on every lane."""
+    taps = jnp.uint32(_TAPS[lfsr_bits])
+    lsb = lanes & jnp.uint32(1)
+    shifted = lanes >> 1
+    return jnp.where(lsb == 1, shifted ^ taps, shifted).astype(jnp.uint32)
+
+
+def cluster_next(
+    state: LFSRState, lfsr_bits: int, seed_refresh: bool, rand_bits: int
+) -> Tuple[LFSRState, jax.Array]:
+    """Advance the cluster one cycle; emit `rand_bits`-wide numbers per lane.
+
+    The emitted number replicates/truncates the L-bit register to the
+    comparison width, mirroring how the RTL feeds an L-bit LFSR value into an
+    L_rand-bit comparator (zero-extension when L < L_rand quantises the
+    comparison grid — the Fig 15 quality effect).
+    """
+    new_lanes = lfsr_step(state.lanes, lfsr_bits)
+    cycles = state.cycles + jnp.uint32(1)
+    period = jnp.uint32((1 << lfsr_bits) - 1)
+
+    if seed_refresh:
+        do_refresh = cycles >= period
+        new_master = jnp.where(do_refresh, _xorshift32(state.master), state.master)
+        fresh = _seed_lanes(new_master, state.lanes.shape[0], lfsr_bits)
+        new_lanes = jnp.where(do_refresh, fresh, new_lanes)
+        cycles = jnp.where(do_refresh, jnp.uint32(0), cycles)
+        state = LFSRState(lanes=new_lanes, master=new_master, cycles=cycles)
+    else:
+        state = LFSRState(lanes=new_lanes, master=state.master, cycles=cycles)
+
+    out = state.lanes
+    if lfsr_bits < rand_bits:
+        # zero-extend: high bits are 0 -> numbers quantised to 2^L levels,
+        # scaled up so thresholds compare on the same grid.
+        out = (out << (rand_bits - lfsr_bits)).astype(jnp.uint32)
+    elif lfsr_bits > rand_bits:
+        out = (out >> (lfsr_bits - rand_bits)).astype(jnp.uint32)
+    mask = jnp.uint32((1 << rand_bits) - 1)
+    return state, (out & mask).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Unified functional API used by the TM training step.
+# ---------------------------------------------------------------------------
+
+def indexed_bits(key: jax.Array, rows: jax.Array, n_cols: int,
+                 rand_bits: int) -> jax.Array:
+    """Counter-mode randoms addressed BY INDEX: out[i, j] depends only on
+    (key, rows[i], j) — gather-order independent, so Alg-6 feedback
+    compaction reproduces the dense path bit-exactly (distributed.py)."""
+    col = jax.lax.iota(jnp.uint32, n_cols)[None, :]
+    base = rows[:, None].astype(jnp.uint32) * jnp.uint32(n_cols) + col
+    out = _splitmix32(key.astype(jnp.uint32)
+                      ^ (base * jnp.uint32(0x9E3779B1)))
+    return out >> (32 - rand_bits)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PRNG:
+    """Backend-dispatching random stream (pytree).
+
+    For the ``lfsr`` backend the state is an :class:`LFSRState` whose lane
+    count is fixed at construction; ``bits(shape)`` consumes ceil(size/lanes)
+    cluster cycles.  For ``threefry`` it is a ``jax.random`` key.
+    """
+
+    backend: str
+    lfsr_bits: int
+    rand_bits: int
+    seed_refresh: bool
+    state: object  # LFSRState | jax key
+
+    def tree_flatten(self):
+        return (self.state,), (self.backend, self.lfsr_bits, self.rand_bits,
+                               self.seed_refresh)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], aux[1], aux[2], aux[3], children[0])
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def create(cfg, seed: int, n_lanes: int = 8192) -> "PRNG":
+        if cfg.prng_backend == "lfsr":
+            st = make_cluster(seed, n_lanes, cfg.lfsr_bits)
+        elif cfg.prng_backend == "counter":
+            st = jnp.uint32(seed if seed else 0xC0FFEE)
+        else:
+            st = jax.random.PRNGKey(seed)
+        return PRNG(cfg.prng_backend, cfg.lfsr_bits, cfg.rand_bits,
+                    cfg.seed_refresh, st)
+
+    # -- sampling ------------------------------------------------------------
+    def bits(self, shape) -> Tuple["PRNG", jax.Array]:
+        """uint32 numbers in [0, 2^rand_bits) of the given shape."""
+        size = 1
+        for d in shape:
+            size *= int(d)
+        if self.backend == "counter":
+            # TPU-native: one splitmix per element, zero sequential scan.
+            # (The FPGA's per-cycle LFSR bank becomes a counter-mode stream
+            # — §Perf Cell C iter: the LFSR path costs a length-
+            # ceil(n/lanes) serial scan; this costs none.)
+            ctr = self.state.astype(jnp.uint32)
+            idx = jax.lax.iota(jnp.uint32, size)
+            out = _splitmix32(ctr * jnp.uint32(0x9E3779B1) ^ idx)
+            out = out >> (32 - self.rand_bits)
+            new = PRNG(self.backend, self.lfsr_bits, self.rand_bits,
+                       self.seed_refresh, ctr + jnp.uint32(1))
+            return new, out.reshape(shape)
+        if self.backend == "threefry":
+            key, sub = jax.random.split(self.state)
+            out = jax.random.bits(sub, (size,), jnp.uint32)
+            out = out >> (32 - self.rand_bits)
+            new = PRNG(self.backend, self.lfsr_bits, self.rand_bits,
+                       self.seed_refresh, key)
+            return new, out.reshape(shape)
+
+        st: LFSRState = self.state
+        lanes = st.lanes.shape[0]
+        steps = -(-size // lanes)  # ceil
+
+        def body(carry, _):
+            s, = carry
+            s, vals = cluster_next(s, self.lfsr_bits, self.seed_refresh,
+                                   self.rand_bits)
+            return (s,), vals
+
+        (st,), rows = jax.lax.scan(body, (st,), None, length=steps)
+        out = rows.reshape(-1)[:size].reshape(shape)
+        new = PRNG(self.backend, self.lfsr_bits, self.rand_bits,
+                   self.seed_refresh, st)
+        return new, out
+
+    @property
+    def max_rand(self) -> int:
+        return 1 << self.rand_bits

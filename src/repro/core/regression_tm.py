@@ -1,0 +1,96 @@
+"""Regression Tsetlin Machine (paper §VI future work; Abeyrathna et al.,
+arXiv:1905.04206) as a DTM module.
+
+All clauses vote positively; the prediction is the clipped clause-vote sum
+mapped linearly onto the target range.  Feedback is error-driven:
+  pred < target → Type I to random clauses w.p.  (target−pred)/2T
+  pred > target → Type II to random clauses w.p. (pred−target)/2T
+so the clause count converges toward the target — the same fixed-point
+integer comparison machinery as classification (Alg 3) reused with the
+error in place of the class-sum margin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .prng import PRNG
+from .types import COALESCED, TMConfig, TMState, init_state, ta_actions
+from .clause import clause_outputs_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class RegressionTMConfig:
+    features: int = 32
+    clauses: int = 128
+    T: int = 128                  # vote budget == output resolution
+    s: float = 3.0
+    ta_bits: int = 8
+    rand_bits: int = 16
+    prng_backend: str = "counter"
+    boost_true_positive: bool = True
+
+    def tm_config(self) -> TMConfig:
+        return TMConfig(tm_type=COALESCED, features=self.features,
+                        clauses=self.clauses, classes=2, T=min(self.T, 8191),
+                        s=self.s, ta_bits=self.ta_bits,
+                        rand_bits=self.rand_bits,
+                        prng_backend=self.prng_backend,
+                        boost_true_positive=self.boost_true_positive)
+
+
+def init(cfg: RegressionTMConfig, key) -> Tuple[TMState, PRNG]:
+    tm = cfg.tm_config()
+    state = init_state(tm, key)
+    state = TMState(state.ta, None)      # unweighted votes
+    return state, PRNG.create(tm, 1)
+
+
+def predict(cfg: RegressionTMConfig, state: TMState, literals: jax.Array,
+            eval_mode: bool = True) -> jax.Array:
+    """literals [B, 2f] -> prediction in [0, 1] (scaled vote count)."""
+    tm = cfg.tm_config()
+    include = ta_actions(tm, state.ta)
+    cl = clause_outputs_matmul(tm, include, literals, eval_mode)
+    votes = jnp.clip(cl.sum(-1), 0, cfg.T)
+    return votes.astype(jnp.float32) / cfg.T
+
+
+def train_step(cfg: RegressionTMConfig, state: TMState, prng: PRNG,
+               literals: jax.Array, targets: jax.Array):
+    """Batched-delta regression step.  targets in [0, 1]."""
+    tm = cfg.tm_config()
+    B = literals.shape[0]
+    include = ta_actions(tm, state.ta)
+    cl = clause_outputs_matmul(tm, include, literals, eval_mode=False)
+    votes = jnp.clip(cl.sum(-1), 0, cfg.T)                   # [B]
+    tgt = jnp.round(targets * cfg.T).astype(jnp.int32)
+    err = tgt - votes                                        # [B] signed
+
+    prng, sel_rand = prng.bits((B, tm.clauses))
+    prng, ta_rand = prng.bits((B, tm.clauses, tm.literals))
+
+    # P(update clause) = |err| / 2T — same fixed-point compare as Alg 3
+    lhs = sel_rand.astype(jnp.int32) * (2 * cfg.T)
+    rhs = jnp.abs(err)[:, None] << cfg.rand_bits
+    sel = (lhs < rhs).astype(jnp.int32)                      # [B, C]
+    t1 = (sel == 1) & (err > 0)[:, None]                     # under: grow
+    t2 = (sel == 1) & (err < 0)[:, None]                     # over: prune
+
+    p_ta = jnp.uint32(int(round((1 << cfg.rand_bits) / cfg.s)))
+    low = ta_rand < p_ta
+    clb = cl.astype(bool)[:, :, None]                        # [B,C,1]
+    litb = literals.astype(bool)[:, None, :]                 # [B,1,2f]
+    cl_and_lit = clb & litb
+    inc1 = cl_and_lit if cfg.boost_true_positive else (cl_and_lit & ~low)
+    dec1 = ~cl_and_lit & low
+    d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
+    inc2 = (clb & ~litb & ~include[None]).astype(jnp.int32)
+    delta = (t1[:, :, None] * d1 + t2[:, :, None] * inc2).sum(0)
+    new_ta = jnp.clip(state.ta + delta, 0, tm.n_states - 1
+                      ).astype(state.ta.dtype)
+    mae = jnp.abs(err).mean() / cfg.T
+    return TMState(new_ta, None), prng, {"mae": mae}

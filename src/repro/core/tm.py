@@ -1,0 +1,89 @@
+"""High-level Tsetlin Machine API — Vanilla TM and Coalesced TM.
+
+Wraps the functional core (clause.py / feedback.py / prng.py) into the
+train/eval driver used by examples, benchmarks, and the distributed launcher.
+Everything stays functional under the hood (state in, state out) so the same
+step functions shard with pjit (see repro.launch.train for mesh wiring).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import feedback
+from .booleanize import to_literals
+from .clause import class_sums, predict
+from .prng import PRNG
+from .types import TMConfig, TMState, init_state
+
+
+class TsetlinMachine:
+    """Convenience object API (functional core inside)."""
+
+    def __init__(self, cfg: TMConfig, seed: int = 0, mode: str = "batched",
+                 chunk: int = 8):
+        self.cfg = cfg
+        self.mode = mode
+        self.chunk = chunk
+        key = jax.random.PRNGKey(seed)
+        self.state = init_state(cfg, key)
+        # lane count: enough parallel slave PRNGs for one chunk of feedback
+        lanes = max(1024, cfg.clauses * 2)
+        self.prng = PRNG.create(cfg, seed + 1, n_lanes=lanes)
+
+    # -- training ------------------------------------------------------------
+    def fit_batch(self, bool_x: jax.Array, labels: jax.Array
+                  ) -> feedback.FeedbackStats:
+        lits = to_literals(bool_x)
+        self.state, self.prng, stats = feedback.train_step(
+            self.cfg, self.state, self.prng, (lits, labels),
+            self.mode, self.chunk)
+        return stats
+
+    def fit(self, x: np.ndarray, y: np.ndarray, epochs: int = 1,
+            batch: int = 32, log_every: int = 0,
+            x_test: Optional[np.ndarray] = None,
+            y_test: Optional[np.ndarray] = None,
+            rng: Optional[np.random.Generator] = None) -> list[dict]:
+        """Simple host loop over epochs; returns per-epoch metric dicts."""
+        rng = rng or np.random.default_rng(0)
+        n = x.shape[0] - x.shape[0] % batch
+        history = []
+        for ep in range(epochs):
+            perm = rng.permutation(x.shape[0])[:n]
+            sel = skip = tot = corr = 0
+            for i in range(0, n, batch):
+                idx = perm[i:i + batch]
+                stats = self.fit_batch(jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+                sel += int(stats.selected_clauses)
+                skip += int(stats.total_groups - stats.active_groups)
+                tot += int(stats.total_groups)
+                corr += int(stats.correct)
+            rec = {"epoch": ep, "train_acc": corr / n,
+                   "selected_clauses": sel,
+                   "group_skip_frac": skip / max(tot, 1)}
+            if x_test is not None:
+                rec["test_acc"] = self.score(x_test, y_test, batch)
+            history.append(rec)
+            if log_every and ep % log_every == 0:
+                print(rec)
+        return history
+
+    # -- inference -----------------------------------------------------------
+    def predict(self, bool_x: jax.Array) -> jax.Array:
+        return predict(self.cfg, self.state, to_literals(bool_x))
+
+    def class_sums(self, bool_x: jax.Array) -> jax.Array:
+        sums, _ = class_sums(self.cfg, self.state, to_literals(bool_x),
+                             eval_mode=True)
+        return sums
+
+    def score(self, x: np.ndarray, y: np.ndarray, batch: int = 256) -> float:
+        correct = 0
+        for i in range(0, x.shape[0], batch):
+            p = self.predict(jnp.asarray(x[i:i + batch]))
+            correct += int((np.asarray(p) == y[i:i + batch]).sum())
+        return correct / x.shape[0]

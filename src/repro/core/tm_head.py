@@ -1,0 +1,70 @@
+"""TM readout head over backbone features (DESIGN.md §5).
+
+This is how the paper's technique attaches to the assigned LM-family
+architectures: pooled backbone features are Booleanised with a thermometer
+code (paper §II-A-a) and a Coalesced TM learns the classification — the
+"multivariate sensor task" deployment pattern the DTM targets, with the LM
+acting as the (frozen) feature extractor.
+
+The head is jit/pjit-compatible: booleanisation is pure jnp, the TM state is
+a pytree, and the train step reuses ``repro.core.feedback``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import feedback
+from .booleanize import Booleanizer, fit_thermometer, to_literals
+from .clause import predict
+from .prng import PRNG
+from .types import COALESCED, TMConfig, TMState, init_state
+
+
+@dataclasses.dataclass
+class TMHead:
+    """CoTM classifier over booleanised pooled features."""
+
+    cfg: TMConfig
+    booleanizer: Booleanizer
+    state: TMState
+    prng: PRNG
+
+    @staticmethod
+    def create(feature_dim: int, classes: int, calib: np.ndarray,
+               therm_bits: int = 4, clauses: int = 128, T: int = 64,
+               s: float = 5.0, seed: int = 0) -> "TMHead":
+        booleanizer = fit_thermometer(calib, bits=therm_bits)
+        cfg = TMConfig(tm_type=COALESCED,
+                       features=feature_dim * therm_bits,
+                       clauses=clauses, classes=classes, T=T, s=s,
+                       prng_backend="threefry")
+        state = init_state(cfg, jax.random.PRNGKey(seed))
+        prng = PRNG.create(cfg, seed + 1)
+        return TMHead(cfg, booleanizer, state, prng)
+
+    # pooled features [B, D] float -> literals [B, 2*D*bits]
+    def _literals(self, pooled: jax.Array) -> jax.Array:
+        return to_literals(self.booleanizer(pooled))
+
+    def train_batch(self, pooled: jax.Array, labels: jax.Array):
+        lits = self._literals(pooled)
+        self.state, self.prng, stats = feedback.train_step(
+            self.cfg, self.state, self.prng, (lits, labels), "batched", 4)
+        return stats
+
+    def predict(self, pooled: jax.Array) -> jax.Array:
+        return predict(self.cfg, self.state, self._literals(pooled))
+
+
+def pool_backbone_features(hidden: jax.Array, mask: jax.Array | None = None
+                           ) -> jax.Array:
+    """Mean-pool final hidden states [B, S, D] -> [B, D] (mask-aware)."""
+    if mask is None:
+        return hidden.mean(axis=1)
+    m = mask.astype(hidden.dtype)[..., None]
+    return (hidden * m).sum(1) / jnp.maximum(m.sum(1), 1.0)

@@ -1,0 +1,167 @@
+"""Core configuration and state types for the Tsetlin Machine family.
+
+The paper (DTM, Mao et al. 2025) parameterises two algorithm variants —
+Vanilla TM and Coalesced TM (CoTM) — plus the *hardware* tile geometry of the
+accelerator (clause-matrix ``x×y``, weight-matrix ``m×n``).  We keep the same
+split: :class:`TMConfig` is the *model* (what the FPGA is programmed with at
+run time, §IV-D-a) and :class:`TileConfig` is the *engine* (what is synthesised
+once — here: compiled once).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+VANILLA = "vanilla"
+COALESCED = "coalesced"
+
+
+@dataclasses.dataclass(frozen=True)
+class TMConfig:
+    """Run-time model configuration (the paper's "programming" data, §IV-D-a)."""
+
+    tm_type: str = COALESCED          # VANILLA | COALESCED
+    features: int = 784               # Boolean features f  (literals = 2f)
+    clauses: int = 256                # CoTM: shared-pool size; Vanilla: clauses/class
+    classes: int = 10                 # h
+    T: int = 500                      # clause-update threshold hyper-parameter
+    s: float = 10.0                   # sensitivity hyper-parameter
+    ta_bits: int = 8                  # L_TA — TA state register width
+    weight_bits: int = 12             # CoTM weight precision (Fig 14 sweep)
+    boost_true_positive: bool = True  # "boost true positive" mode (§II-B-e)
+    # PRNG (Fig 15 sweep)
+    lfsr_bits: int = 24               # L_LFSR — slave LFSR length
+    seed_refresh: bool = True         # master-slave re-seeding every 2^L cycles
+    prng_backend: str = "lfsr"        # lfsr (paper-faithful) | counter | threefry
+    rand_bits: int = 16               # L_{w_rand} / L_{TA_rand} comparison width
+    compute_backend: str = "jnp"      # jnp | pallas (kernels/ TPU path)
+
+    def __post_init__(self):
+        assert self.tm_type in (VANILLA, COALESCED), self.tm_type
+        assert 2 <= self.ta_bits <= 16
+        assert 2 <= self.weight_bits <= 31
+        assert self.classes >= 2
+
+    # ---- derived quantities ------------------------------------------------
+    @property
+    def literals(self) -> int:
+        return 2 * self.features
+
+    @property
+    def n_states(self) -> int:
+        """2J — total TA states."""
+        return 1 << self.ta_bits
+
+    @property
+    def include_threshold(self) -> int:
+        """J — action is Include iff state >= J (0-indexed states)."""
+        return 1 << (self.ta_bits - 1)
+
+    @property
+    def weight_clip(self) -> int:
+        return (1 << (self.weight_bits - 1)) - 1
+
+    @property
+    def total_clauses(self) -> int:
+        """Clause rows held in TA memory (Vanilla instances per class)."""
+        if self.tm_type == VANILLA:
+            return self.clauses * self.classes
+        return self.clauses
+
+    def ops_per_inference(self) -> dict:
+        """Analytical op counts (paper Fig 3): logic vs integer ops."""
+        lits = self.literals
+        if self.tm_type == COALESCED:
+            logic = self.clauses * lits * 2           # (L ∨ ¬TA) ∧ chain
+            integer = self.classes * self.clauses * 2  # weight mul-acc
+        else:
+            logic = self.classes * self.clauses * lits * 2
+            integer = self.classes * self.clauses      # ±1 accumulate
+        return {"logic_ops": logic, "integer_ops": integer}
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Static engine geometry — the 'synthesised' accelerator (§IV-A).
+
+    ``x``/``y``: clause-matrix literal/clause tile (paper: 32×27 for DTM-L).
+    ``m``/``n``: weight-matrix clause/class tile (paper: 8×4 for DTM-L).
+    ``max_*``:   buffer capacities (paper: Feature Buffer etc.).  Any TMConfig
+    with dims <= max_* runs on the same compiled executable via masks.
+    """
+
+    x: int = 128                      # literal tile (lane-dim aligned)
+    y: int = 128                      # clause tile
+    m: int = 128                      # clause tile for class-sum matmul
+    n: int = 8                        # class tile
+    max_features: int = 1024
+    max_clauses: int = 2048
+    max_classes: int = 16
+    batch_tile: int = 8
+
+    @property
+    def max_literals(self) -> int:
+        return 2 * self.max_features
+
+    def padded_dims(self) -> tuple[int, int, int]:
+        """(literals, clauses, classes) rounded up to whole tiles."""
+        rup = lambda v, t: ((v + t - 1) // t) * t
+        return (
+            rup(self.max_literals, self.x),
+            rup(self.max_clauses, self.y),
+            rup(self.max_classes, self.n),
+        )
+
+
+class TMState:
+    """Learnable state of a TM (pytree).
+
+    ``ta``     : uint/int TA states.  Vanilla: [classes*clauses, 2f]; CoTM:
+                 [clauses, 2f].  Values in [0, 2^ta_bits - 1]; action =
+                 Include iff state >= 2^(ta_bits-1).
+    ``weights``: CoTM [classes, clauses] signed int32 (Vanilla: fixed ±1
+                 polarity derived from clause parity — not stored).
+    """
+
+    def __init__(self, ta: jax.Array, weights: Optional[jax.Array]):
+        self.ta = ta
+        self.weights = weights
+
+    def tree_flatten(self):
+        return (self.ta, self.weights), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):
+        w = None if self.weights is None else self.weights.shape
+        return f"TMState(ta={self.ta.shape}:{self.ta.dtype}, weights={w})"
+
+
+jax.tree_util.register_pytree_node(
+    TMState, TMState.tree_flatten, TMState.tree_unflatten
+)
+
+
+def init_state(cfg: TMConfig, key: jax.Array, dtype=jnp.int32) -> TMState:
+    """TA states start at the include boundary (J-1 / J) like the HW init
+    (§IV-D-a: 'initializes the TA states and weights in RAM using PRNGs')."""
+    j = cfg.include_threshold
+    kt, kw = jax.random.split(key)
+    ta = jax.random.bernoulli(kt, 0.5, (cfg.total_clauses, cfg.literals))
+    ta = (j - 1 + ta.astype(jnp.int32)).astype(dtype)  # J-1 (exclude) or J (include)
+    weights = None
+    if cfg.tm_type == COALESCED:
+        # random ±1 like the reference CoTM implementation
+        w = jax.random.bernoulli(kw, 0.5, (cfg.classes, cfg.clauses))
+        weights = jnp.where(w, 1, -1).astype(jnp.int32)
+    return TMState(ta=ta, weights=weights)
+
+
+def ta_actions(cfg: TMConfig, ta: jax.Array) -> jax.Array:
+    """Include/Exclude decision per TA (bool [rows, 2f])."""
+    return ta >= jnp.asarray(cfg.include_threshold, ta.dtype)

@@ -1,0 +1,7 @@
+from .pipeline import Source, HostShardIterator, Prefetcher
+from .datasets import (BoolTaskSpec, MNIST_LIKE, FMNIST_LIKE, KMNIST_LIKE,
+                       KWS6_LIKE, make_bool_dataset, make_lm_tokens)
+
+__all__ = ["Source", "HostShardIterator", "Prefetcher", "BoolTaskSpec",
+           "MNIST_LIKE", "FMNIST_LIKE", "KMNIST_LIKE", "KWS6_LIKE",
+           "make_bool_dataset", "make_lm_tokens"]

@@ -1,0 +1,86 @@
+"""Synthetic surrogate datasets (offline container — DESIGN.md §6).
+
+Geometry matches the paper's evaluation sets so every benchmark keeps its
+real shape: MNIST-like (784 bool features, 10 classes), FMNIST/KMNIST-like
+(same geometry, harder noise), KWS6-like (1600 bool features, 6 classes).
+Generation: each class is a union of ``motifs`` (sparse bit patterns) —
+datapoints activate a random subset of their class's motifs plus background
+noise, so single clauses must learn conjunctions (not just prototypes), and
+per-class difficulty is controlled by motif overlap.
+
+LM data: token sequences from a deterministic order-2 Markov chain (so CE
+actually decreases) + the modality stubs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BoolTaskSpec:
+    name: str
+    features: int
+    classes: int
+    motifs_per_class: int = 6
+    motif_bits: int = 10
+    active_motifs: int = 3
+    background_p: float = 0.04
+    flip_p: float = 0.02
+    seed: int = 1234
+
+
+MNIST_LIKE = BoolTaskSpec("mnist-like", 784, 10)
+FMNIST_LIKE = BoolTaskSpec("fmnist-like", 784, 10, motif_bits=8,
+                           background_p=0.08, flip_p=0.05, seed=2345)
+KMNIST_LIKE = BoolTaskSpec("kmnist-like", 784, 10, motifs_per_class=8,
+                           active_motifs=2, background_p=0.06, flip_p=0.06,
+                           seed=3456)
+KWS6_LIKE = BoolTaskSpec("kws6-like", 1600, 6, motifs_per_class=10,
+                         motif_bits=14, active_motifs=4, background_p=0.05,
+                         flip_p=0.03, seed=4567)
+
+
+def _motifs(spec: BoolTaskSpec) -> np.ndarray:
+    rng = np.random.default_rng(spec.seed)
+    m = np.zeros((spec.classes, spec.motifs_per_class, spec.features),
+                 np.int8)
+    for c in range(spec.classes):
+        for k in range(spec.motifs_per_class):
+            idx = rng.choice(spec.features, spec.motif_bits, replace=False)
+            m[c, k, idx] = 1
+    return m
+
+
+def make_bool_dataset(spec: BoolTaskSpec, n: int, seed: int = 0
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (x [n, features] int8 {0,1}, y [n] int32)."""
+    motifs = _motifs(spec)
+    rng = np.random.default_rng(np.random.SeedSequence([spec.seed, seed]))
+    y = rng.integers(0, spec.classes, n).astype(np.int32)
+    x = (rng.random((n, spec.features)) < spec.background_p).astype(np.int8)
+    for i in range(n):
+        ks = rng.choice(spec.motifs_per_class, spec.active_motifs,
+                        replace=False)
+        x[i] |= motifs[y[i], ks].max(axis=0)
+    flip = rng.random((n, spec.features)) < spec.flip_p
+    x = np.where(flip, 1 - x, x).astype(np.int8)
+    return x, y
+
+
+def make_lm_tokens(vocab: int, batch: int, seq: int, seed: int = 0
+                   ) -> np.ndarray:
+    """Order-2 Markov token stream over a reduced alphabet (learnable)."""
+    rng = np.random.default_rng(seed)
+    a = min(vocab, 512)
+    # sparse deterministic transition table
+    nxt = rng.integers(0, a, (a, a, 4))
+    toks = np.zeros((batch, seq), np.int32)
+    s = rng.integers(0, a, (batch, 2))
+    toks[:, :2] = s
+    choose = rng.integers(0, 4, (batch, seq))
+    for t in range(2, seq):
+        toks[:, t] = nxt[toks[:, t - 2], toks[:, t - 1], choose[:, t]]
+    return toks

@@ -1,0 +1,109 @@
+"""Data pipeline: deterministic synthetic sources, host sharding, prefetch.
+
+The container is offline, so sources are synthetic but *structured* (so TMs
+and LMs actually learn): see datasets.py.  The pipeline layers:
+
+* ``Source``     — deterministic, seekable sample generator (epoch, index)
+                   → resume-exact after checkpoint restore;
+* ``HostShard``  — each host reads only its slice of the global batch
+                   (process_index/process_count aware);
+* ``Prefetcher`` — double-buffered background thread, device_put overlap —
+  straggler mitigation at the input layer (a slow host never stalls the
+  collective until >1 step late).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Source:
+    """Deterministic seekable source: sample = f(seed, epoch, index)."""
+
+    n: int
+    make: Callable[[np.random.Generator, int], Tuple[np.ndarray, np.ndarray]]
+    seed: int = 0
+
+    def batch(self, epoch: int, start: int, size: int):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, epoch, start]))
+        return self.make(rng, size)
+
+
+class HostShardIterator:
+    """Iterates host-local slices of a global batch, deterministically.
+
+    state = (epoch, offset) — serialisable into checkpoints so training
+    resumes on the exact next batch (fault-tolerance requirement)."""
+
+    def __init__(self, source: Source, global_batch: int,
+                 process_index: Optional[int] = None,
+                 process_count: Optional[int] = None):
+        self.source = source
+        self.global_batch = global_batch
+        self.pi = (jax.process_index() if process_index is None
+                   else process_index)
+        self.pc = (jax.process_count() if process_count is None
+                   else process_count)
+        assert global_batch % self.pc == 0
+        self.local = global_batch // self.pc
+        self.epoch = 0
+        self.offset = 0
+
+    def state(self) -> dict:
+        return {"epoch": self.epoch, "offset": self.offset}
+
+    def restore(self, st: dict):
+        self.epoch, self.offset = int(st["epoch"]), int(st["offset"])
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        if self.offset + self.global_batch > self.source.n:
+            self.epoch += 1
+            self.offset = 0
+        start = self.offset + self.pi * self.local
+        batch = self.source.batch(self.epoch, start, self.local)
+        self.offset += self.global_batch
+        return batch
+
+
+class Prefetcher:
+    """Background-thread double buffering (overlaps host compute with step)."""
+
+    def __init__(self, it: Iterator, depth: int = 2,
+                 transform: Optional[Callable] = None):
+        self.it = it
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.transform = transform or (lambda x: x)
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._run, daemon=True)
+        self.t.start()
+
+    def _run(self):
+        try:
+            for item in self.it:
+                if self._stop.is_set():
+                    return
+                self.q.put(self.transform(item))
+        except Exception as e:  # surface errors on the consumer side
+            self.q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the DTM compute hot-spots.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+padded wrappers), ref.py (pure-jnp oracles, bit-exact)."""
+from .ops import (clause_eval_op, class_sum_op, tm_infer_op,
+                  packed_clause_eval_op, ta_update_op)
+from . import ref
+
+__all__ = ["clause_eval_op", "class_sum_op", "tm_infer_op",
+           "packed_clause_eval_op", "ta_update_op", "ref"]

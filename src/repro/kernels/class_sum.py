@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: partial class-sum matrix (paper Eq 2/3, Fig 4-2).
+
+The Weight Matrix multiplies an ``m``-wide clause slice by an ``m×n`` weight
+block per cycle, accumulating partial class sums over ``p=⌈c/m⌉`` iterations.
+Here the k grid dimension is ``p``; each step contracts an MXU block:
+
+    csum[b, h] += Σ_c clause[b, c] · w[h, c]
+
+Remainder classes are pinned by the caller to ``-2^(L_csum-1)`` (Fig 6d) via
+``h_mask`` — the kernel itself only sees whole tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cl_ref, w_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cl = cl_ref[...].astype(jnp.int32)               # [bt, mt]
+    w = w_ref[...].astype(jnp.int32)                 # [H, mt]
+    acc_ref[...] += jax.lax.dot_general(
+        cl, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)            # [bt, H]
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "mt", "interpret"))
+def class_sum(clauses: jax.Array, weights: jax.Array, bt: int = 8,
+              mt: int = 128, interpret: bool = True) -> jax.Array:
+    """clauses [B, C] {0,1}, weights [H, C] int -> class sums [B, H] int32.
+
+    H rides whole in VMEM (classes are small — paper n=4); C is tiled by mt
+    (the paper's m), B by bt."""
+    B, C = clauses.shape
+    H, C2 = weights.shape
+    assert C == C2 and B % bt == 0 and C % mt == 0, ((B, C, H), (bt, mt))
+    grid = (B // bt, C // mt)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, mt), lambda b, k: (b, k)),
+            pl.BlockSpec((H, mt), lambda b, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((bt, H), lambda b, k: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bt, H), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(clauses.astype(jnp.int8), weights.astype(jnp.int32))

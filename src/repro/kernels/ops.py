@@ -1,0 +1,118 @@
+"""Public jit'd wrappers for the TM Pallas kernels.
+
+Handles padding to tile multiples, backend dispatch (Pallas on TPU /
+interpret-mode on CPU / pure-jnp reference), and the packed-path layout.
+The DTM engine and benchmarks call these, never pl.pallas_call directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .class_sum import class_sum
+from .clause_eval import clause_eval
+from .packed_clause import packed_clause_eval
+from .ta_update import ta_update
+from .tm_infer import tm_infer
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x: jax.Array, m0: int, m1: int, value=0) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)), constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("eval_mode", "backend",
+                                             "bt", "yt", "xt"))
+def clause_eval_op(literals, include, eval_mode=False, backend="pallas",
+                   bt=8, yt=128, xt=256):
+    """[B,L]×[C,L] -> [B,C]; pads every dim, strips padding on return."""
+    if backend == "ref":
+        return ref.clause_eval_ref(literals, include, eval_mode)
+    B, L = literals.shape
+    C = include.shape[0]
+    lit = _pad2(literals, bt, xt)
+    inc = _pad2(include, yt, xt)
+    out = clause_eval(lit, inc, eval_mode=eval_mode, bt=bt, yt=yt, xt=xt,
+                      interpret=_interpret_default())
+    return out[:B, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "bt", "mt"))
+def class_sum_op(clauses, weights, backend="pallas", bt=8, mt=128):
+    if backend == "ref":
+        return ref.class_sum_ref(clauses, weights)
+    B, C = clauses.shape
+    H = weights.shape[0]
+    cl = _pad2(clauses, bt, mt)
+    w = _pad2(weights, 8, mt)           # H padded to sublane multiple
+    out = class_sum(cl, w, bt=bt, mt=mt, interpret=_interpret_default())
+    return out[:B, :H]
+
+
+@functools.partial(jax.jit, static_argnames=("eval_mode", "backend",
+                                             "bt", "yt", "xt"))
+def tm_infer_op(literals, include, weights, eval_mode=True, backend="pallas",
+                bt=8, yt=128, xt=256):
+    """Fused inference [B,L]×[C,L]×[H,C] -> class sums [B,H]."""
+    if backend == "ref":
+        return ref.tm_infer_ref(literals, include, weights, eval_mode)
+    B, L = literals.shape
+    H = weights.shape[0]
+    lit = _pad2(literals, bt, xt)
+    inc = _pad2(include, yt, xt)
+    w = _pad2(weights, 8, yt)
+    out = tm_infer(lit, inc, w, eval_mode=eval_mode, bt=bt, yt=yt, xt=xt,
+                   interpret=_interpret_default())
+    return out[:B, :H]
+
+
+@functools.partial(jax.jit, static_argnames=("eval_mode", "backend",
+                                             "bt", "yt", "wt"))
+def packed_clause_eval_op(packed_literals, packed_include, eval_mode=False,
+                          backend="pallas", bt=8, yt=128, wt=128):
+    if backend == "ref":
+        return ref.packed_clause_eval_ref(packed_literals, packed_include,
+                                          eval_mode)
+    B, W = packed_literals.shape
+    C = packed_include.shape[0]
+    lit = _pad2(packed_literals, bt, wt)
+    inc = _pad2(packed_include, yt, wt)
+    out = packed_clause_eval(lit, inc, eval_mode=eval_mode, bt=bt, yt=yt,
+                             wt=wt, interpret=_interpret_default())
+    return out[:B, :C]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "seed", "p_ta", "rand_bits", "boost", "n_states", "backend", "yt", "xt"))
+def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
+                 rand_bits=16, boost=True, n_states=256, backend="pallas",
+                 yt=128, xt=256):
+    """Batched TA update [C,L] -> [C,L] (pads C/L, strips on return)."""
+    if backend == "ref":
+        return ref.ta_update_ref(ta, literals, clause_out, type1, type2,
+                                 l_mask, seed, p_ta, rand_bits, boost,
+                                 n_states)
+    C, L = ta.shape
+    # NOTE: the PRNG stream is keyed on the *padded* L, so ref comparisons
+    # must pad identically (tests pass pre-padded arrays; this wrapper is
+    # for production use where only the stream's distribution matters).
+    ta_p = _pad2(ta, yt, xt)
+    lit_p = _pad2(literals, 1, xt)
+    cl_p = _pad2(clause_out, 1, yt)
+    t1_p = _pad2(type1, 1, yt)
+    t2_p = _pad2(type2, 1, yt)
+    lm = jnp.pad(l_mask, (0, (-L) % xt))
+    out = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed, p_ta=p_ta,
+                    rand_bits=rand_bits, boost=boost, n_states=n_states,
+                    yt=yt, xt=xt, interpret=_interpret_default())
+    return out[:C, :L]

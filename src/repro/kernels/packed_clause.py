@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: bit-packed clause evaluation (VPU path).
+
+Direct analogue of the paper's LUT mapping (Fig 4-6): literals and TA
+include-actions are packed 32-per-word; a clause fires iff every packed word
+satisfies ``(~inc | lit) == ~0`` ⇔ ``(inc & ~lit) == 0``.  This path does no
+MXU work at all — it is the right choice for tiny batches (the edge
+single-datapoint regime the FPGA targets) where the matmul recast wastes
+systolic occupancy; EXPERIMENTS.md §Perf compares the two crossing over.
+
+    viol_or[b, c] = OR_w ( inc[c, w] & ~lit[b, w] )
+    clause[b, c]  = (viol_or == 0) ∧ (nonempty ∨ training)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(lit_ref, inc_ref, out_ref, viol_ref, ne_ref, *,
+            batch_tile: int, n_k: int, eval_mode: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        viol_ref[...] = jnp.zeros_like(viol_ref)
+        ne_ref[...] = jnp.zeros_like(ne_ref)
+
+    inc = inc_ref[...]                                 # [yt, wt] uint32
+    lit = lit_ref[...]                                 # [bt, wt] uint32
+    ne_ref[...] |= jnp.bitwise_or.reduce(inc, axis=1, keepdims=True).T
+
+    def body(b, viol):
+        v = jnp.bitwise_and(inc, jnp.bitwise_not(lit[b])[None, :])
+        row = jnp.bitwise_or.reduce(v, axis=1)         # [yt]
+        return viol.at[b, :].set(viol[b, :] | row)
+
+    viol_ref[...] = jax.lax.fori_loop(0, batch_tile, body, viol_ref[...])
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        fired = viol_ref[...] == 0
+        if eval_mode:
+            fired = jnp.logical_and(fired, ne_ref[...] != 0)
+        out_ref[...] = fired.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("eval_mode", "bt", "yt", "wt",
+                                             "interpret"))
+def packed_clause_eval(packed_literals: jax.Array, packed_include: jax.Array,
+                       eval_mode: bool = False, bt: int = 8, yt: int = 128,
+                       wt: int = 128, interpret: bool = True) -> jax.Array:
+    """packed_literals [B, W] uint32, packed_include [C, W] uint32
+    -> clause [B, C] int32.  W = ceil(L/32), padded to wt multiples with
+    zero words (zero include words never violate)."""
+    B, W = packed_literals.shape
+    C, W2 = packed_include.shape
+    assert W == W2 and B % bt == 0 and C % yt == 0 and W % wt == 0, (
+        (B, C, W), (bt, yt, wt))
+    grid = (B // bt, C // yt, W // wt)
+    return pl.pallas_call(
+        functools.partial(_kernel, batch_tile=bt, n_k=grid[2],
+                          eval_mode=eval_mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, wt), lambda b, c, k: (b, k)),
+            pl.BlockSpec((yt, wt), lambda b, c, k: (c, k)),
+        ],
+        out_specs=pl.BlockSpec((bt, yt), lambda b, c, k: (b, c)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bt, yt), jnp.uint32),
+            pltpu.VMEM((1, yt), jnp.uint32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(packed_literals.astype(jnp.uint32), packed_include.astype(jnp.uint32))

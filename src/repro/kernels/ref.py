@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact, integer domain).
+
+Each function mirrors one kernel's contract exactly — including the
+counter-based PRNG stream of ``ta_update`` — so tests assert *equality*,
+not allclose: the whole DTM datapath is integer arithmetic (paper §IV-B).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# clause evaluation (clause_eval.py / packed_clause.py oracle)
+# ---------------------------------------------------------------------------
+
+def clause_eval_ref(literals: jax.Array, include: jax.Array,
+                    eval_mode: bool = False) -> jax.Array:
+    """literals [B, L] {0,1}, include [C, L] {0,1} -> clause [B, C] int32."""
+    lit = literals.astype(bool)[:, None, :]
+    inc = include.astype(bool)[None, :, :]
+    fired = jnp.all(jnp.logical_or(~inc, lit), axis=-1)
+    if eval_mode:
+        fired &= include.astype(bool).any(axis=-1)[None, :]
+    return fired.astype(jnp.int32)
+
+
+def packed_clause_eval_ref(packed_literals: jax.Array,
+                           packed_include: jax.Array,
+                           eval_mode: bool = False) -> jax.Array:
+    """Same contract in the packed domain."""
+    lit = packed_literals[:, None, :]
+    inc = packed_include[None, :, :]
+    viol = jnp.bitwise_and(inc, jnp.bitwise_not(lit))
+    fired = jnp.all(viol == 0, axis=-1)
+    if eval_mode:
+        fired &= (packed_include != 0).any(axis=-1)[None, :]
+    return fired.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# class sums (class_sum.py / tm_infer.py oracle)
+# ---------------------------------------------------------------------------
+
+def class_sum_ref(clauses: jax.Array, weights: jax.Array) -> jax.Array:
+    """clauses [B, C], weights [H, C] -> [B, H] int32."""
+    return jax.lax.dot_general(
+        clauses.astype(jnp.int32), weights.astype(jnp.int32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def tm_infer_ref(literals: jax.Array, include: jax.Array, weights: jax.Array,
+                 eval_mode: bool = True) -> jax.Array:
+    cl = clause_eval_ref(literals, include, eval_mode)
+    return class_sum_ref(cl, weights)
+
+
+# ---------------------------------------------------------------------------
+# TA update (ta_update.py oracle — reproduces the in-kernel PRNG stream)
+# ---------------------------------------------------------------------------
+
+def _splitmix32(x):
+    x = (x + jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x21F0AAAD)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x735A2D97)
+    return (x ^ (x >> 15)).astype(jnp.uint32)
+
+
+def _xorshift32(x):
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    return x.astype(jnp.uint32)
+
+
+def ta_update_ref(ta, literals, clause_out, type1, type2, l_mask, seed,
+                  p_ta, rand_bits=16, boost=True, n_states=256, xt=256):
+    """Bit-exact oracle for kernels.ta_update (same per-element streams).
+
+    NOTE ``xt`` here only enters through the stream keying constant
+    ``n_l_tiles * xt == L`` — the stream is tile-layout independent by
+    construction, so the oracle needs no tiling at all."""
+    C, L = ta.shape
+    B = literals.shape[0]
+    include = ta.astype(jnp.int32) >= (n_states // 2)
+
+    gy = jax.lax.broadcasted_iota(jnp.uint32, (C, L), 0)
+    gx = jax.lax.broadcasted_iota(jnp.uint32, (C, L), 1)
+    state0 = _splitmix32(jnp.uint32(seed) ^ (gy * jnp.uint32(L) + gx))
+
+    def body(carry, xs):
+        state, delta = carry
+        lit_b, cl_b, t1_b, t2_b = xs
+        state = _xorshift32(state)
+        rand = state >> (32 - rand_bits)
+        low = rand < jnp.uint32(p_ta)
+        clb = (cl_b > 0)[:, None]
+        litb = (lit_b > 0)[None, :]
+        cl_and_lit = clb & litb
+        inc1 = cl_and_lit if boost else (cl_and_lit & ~low)
+        dec1 = ~cl_and_lit & low
+        d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
+        inc2 = (clb & ~litb & ~include).astype(jnp.int32)
+        delta = delta + jnp.where((t1_b > 0)[:, None], d1, 0) \
+                      + jnp.where((t2_b > 0)[:, None], inc2, 0)
+        return (state, delta), None
+
+    (state, delta), _ = jax.lax.scan(
+        body, (state0, jnp.zeros((C, L), jnp.int32)),
+        (literals, clause_out, type1, type2))
+    delta = delta * l_mask.astype(jnp.int32)[None, :]
+    return jnp.clip(ta.astype(jnp.int32) + delta, 0, n_states - 1)

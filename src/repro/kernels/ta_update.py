@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: TA Update Matrix (paper Fig 4-4, Alg 5 — the training
+hot-spot).
+
+The FPGA instantiates ``x×y`` TA-update blocks fed by y clause feedbacks and
+x literals per cycle, plus one L_rand-bit random number per TA.  Kernel
+mapping:
+
+* grid (clause-tiles, literal-tiles) — each step owns one (yt, xt) TA block
+  resident in VMEM (the BRAM slice of Fig 5a);
+* the batch rides inside the kernel (fori), accumulating an int32 delta —
+  the batched-delta training mode (DESIGN.md §2.7);
+* random numbers are generated *in-kernel* by a counter-based
+  splitmix32→xorshift32 stream keyed on the global element index, so no
+  [B, C, L] random tensor ever touches HBM (the PRNG-bandwidth insight of
+  paper §IV-C, re-expressed: generate where you consume).
+
+Semantics (validated bit-exactly against ref.py):
+  Type I  (t1): cl∧lit → +1 w.p. (s-1)/s (boost: always);
+                ¬(cl∧lit) → −1 w.p. 1/s        [p_ta = ⌊2^rand_bits/s⌋]
+  Type II (t2): cl∧¬lit∧¬include → +1 (deterministic)
+  new_ta = clip(ta + Σ_b delta_b · l_mask, 0, n_states-1)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _splitmix32(x):
+    x = (x + jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x21F0AAAD)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x735A2D97)
+    return (x ^ (x >> 15)).astype(jnp.uint32)
+
+
+def _xorshift32(x):
+    x = x ^ (x << 13)
+    x = x ^ (x >> 17)
+    x = x ^ (x << 5)
+    return x.astype(jnp.uint32)
+
+
+def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, out_ref, *,
+            batch: int, n_l_tiles: int, yt: int, xt: int, seed: int,
+            p_ta: int, rand_bits: int, boost: bool, n_states: int):
+    ci, li = pl.program_id(0), pl.program_id(1)
+    ta = ta_ref[...].astype(jnp.int32)                    # [yt, xt]
+    include = ta >= (n_states // 2)
+
+    # counter-based per-element stream keyed on GLOBAL element index — the
+    # result is tile-layout independent (ref.py reproduces it exactly).
+    gy = ci * yt + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 0)
+    gx = li * xt + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 1)
+    state = _splitmix32(jnp.uint32(seed) ^ (gy * jnp.uint32(n_l_tiles * xt)
+                                            + gx))
+
+    delta = jnp.zeros((yt, xt), jnp.int32)
+    lit = lit_ref[...]                                    # [B, xt] int8
+    cl = cl_ref[...]                                      # [B, yt] int8
+    t1 = t1_ref[...]                                      # [B, yt] int8
+    t2 = t2_ref[...]                                      # [B, yt] int8
+
+    def body(b, carry):
+        state, delta = carry
+        state = _xorshift32(state)
+        rand = state >> (32 - rand_bits)
+        low = rand < jnp.uint32(p_ta)                     # P = 1/s
+        clb = (cl[b] > 0)[:, None]                        # [yt, 1]
+        litb = (lit[b] > 0)[None, :]                      # [1, xt]
+        t1b = (t1[b] > 0)[:, None]
+        t2b = (t2[b] > 0)[:, None]
+        cl_and_lit = jnp.logical_and(clb, litb)
+        if boost:
+            inc1 = cl_and_lit
+        else:
+            inc1 = jnp.logical_and(cl_and_lit, jnp.logical_not(low))
+        dec1 = jnp.logical_and(jnp.logical_not(cl_and_lit), low)
+        d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
+        inc2 = jnp.logical_and(jnp.logical_and(clb, jnp.logical_not(litb)),
+                               jnp.logical_not(include)).astype(jnp.int32)
+        delta = delta + jnp.where(t1b, d1, 0) + jnp.where(t2b, inc2, 0)
+        return state, delta
+
+    _, delta = jax.lax.fori_loop(0, batch, body, (state, delta))
+    delta = delta * lmask_ref[...].astype(jnp.int32)      # Fig 6a inverse mask
+    out_ref[...] = jnp.clip(ta + delta, 0, n_states - 1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "seed", "p_ta", "rand_bits", "boost", "n_states", "yt", "xt", "interpret"))
+def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
+              type1: jax.Array, type2: jax.Array, l_mask: jax.Array,
+              seed: int, p_ta: int, rand_bits: int = 16, boost: bool = True,
+              n_states: int = 256, yt: int = 128, xt: int = 256,
+              interpret: bool = True) -> jax.Array:
+    """Batched TA update.
+
+    ta [C, L] int32, literals [B, L] {0,1}, clause_out/type1/type2 [B, C]
+    {0,1}, l_mask [L] {0,1} -> new ta [C, L] int32."""
+    C, L = ta.shape
+    B = literals.shape[0]
+    assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
+    grid = (C // yt, L // xt)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, batch=B, n_l_tiles=grid[1], yt=yt, xt=xt, seed=seed,
+            p_ta=p_ta, rand_bits=rand_bits, boost=boost, n_states=n_states),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((yt, xt), lambda c, l: (c, l)),       # ta
+            pl.BlockSpec((B, xt), lambda c, l: (0, l)),        # literals
+            pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # clause_out
+            pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type1
+            pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type2
+            pl.BlockSpec((1, xt), lambda c, l: (0, l)),        # l_mask
+        ],
+        out_specs=pl.BlockSpec((yt, xt), lambda c, l: (c, l)),
+        out_shape=jax.ShapeDtypeStruct((C, L), jnp.int32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(ta.astype(jnp.int32), literals.astype(jnp.int8),
+      clause_out.astype(jnp.int8), type1.astype(jnp.int8),
+      type2.astype(jnp.int8), l_mask.reshape(1, L).astype(jnp.int32))

@@ -1,0 +1,473 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init) — this module is the only place the 512 placeholder
+devices exist; tests/benchmarks see the real host device.
+
+Per cell this produces (EXPERIMENTS.md §Dry-run):
+  · compiled.memory_analysis()  — per-device bytes (proves it fits),
+  · compiled.cost_analysis()    — raw HLO FLOPs/bytes (scan-undercounted —
+    see flops.py docstring; exact analytic numbers reported alongside),
+  · collective bytes parsed from the post-SPMD HLO (all-gather/all-reduce/
+    reduce-scatter/all-to-all/collective-permute, ring-factor weighted),
+  · the §Roofline terms vs TPU v5e constants.
+
+CLI:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod --out experiments/dryrun
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import get_arch
+from repro.launch import flops as F
+from repro.launch.mesh import (V5E, data_axes, make_production_mesh,
+                               mesh_chips)
+from repro.models import Model, SHAPES, cell_applicable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ring-algorithm wire multipliers ((n-1)/n ≈ 1 folded in)
+_RING = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Sum output bytes × ring factor per collective kind from HLO text."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        hit = None
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in line or f" {kind}-start(" in line:
+                hit = kind
+                break
+        if hit is None or "-done(" in line:
+            continue
+        lhs = line.split("=", 1)[0] if "=" in line else ""
+        rhs = line.split("=", 1)[1]
+        head = rhs.split("(", 1)[0]          # result shapes live here
+        b = 0
+        for dt, dims in _SHAPE_RE.findall(head):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            b += n * _DTYPE_BYTES[dt]
+        out[hit] += b * _RING[hit]
+        counts[hit] += 1
+    out["counts"] = counts                    # type: ignore
+    return out
+
+
+def _struct(tree, specs, mesh):
+    def f(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(f, tree, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _batch_specs_tree(model: Model, shape, mesh):
+    dp = data_axes(mesh)
+    dp_size = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in dp:
+        dp_size *= sizes[a]
+    dp_spec = tuple(dp) if len(dp) > 1 else dp[0]
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % dp_size == 0:
+            return P(dp_spec, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    structs = model.batch_specs(shape)
+    return jax.tree.map(spec, structs), structs
+
+
+def make_train_step(model, opt_cfg, p_specs=None, dp_spec=None):
+    """Fused train step with gradient accumulation (ArchConfig.grad_accum
+    microbatches; the Cell-A memory lever — transient activations and remat
+    saves scale with the MICRObatch, grads accumulate in grad_accum_dtype).
+
+    ``p_specs``: param PartitionSpec tree — grads are constrained to it so
+    the cross-data grad sync lowers as reduce-scatter onto the FSDP shards
+    instead of a full-tensor all-reduce (Cell A iter 4)."""
+    cfg = model.cfg
+    mb = cfg.grad_accum
+    acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def constrain(g):
+        if p_specs is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, p_specs)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            return model.loss(p, b)
+
+        if mb == 1:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = constrain(grads)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]),
+                batch)
+            if dp_spec is not None:
+                # re-pin batch sharding through the microbatch reshape —
+                # GSPMD cannot push a ('pod','data') tuple-sharding through
+                # the reshape and falls back to REPLICATION (measured: 3-5×
+                # per-device peaks on every multi-pod train cell)
+                micro = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, P(None, dp_spec, *([None] * (x.ndim - 2)))),
+                    micro)
+
+            def body(gsum, b):
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, b)
+                g = constrain(g)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(acc_dt), gsum, g)
+                return constrain(gsum), l
+
+            gsum0 = constrain(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params))
+            gsum, losses = jax.lax.scan(body, gsum0, micro)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = losses.mean()
+        params, opt_state, _ = optim.apply(opt_cfg, params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def build_cell(arch_name: str, shape_name: str, multi_pod: bool):
+    """Returns (jitted_fn, arg_structs_with_sharding, model, mesh)."""
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return None, why, None, None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    dp = data_axes(mesh)
+    dp_spec = tuple(dp) if len(dp) > 1 else dp[0]
+    model.logits_pspec = P(dp_spec, None, "model")
+    model.head_pspec = P(None, "model")
+    model.act_pspec = P(dp_spec, None, None)
+    # serving weight residency (TP-only, no per-token FSDP gathers) only
+    # when the TP-sharded weights actually fit comfortably (§Perf Cell B;
+    # the XXL archs keep FSDP and pay the per-step gather instead)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    resident_ok = cfg.param_count() * 2 / tp <= 4e9
+    p_specs = model.param_pspecs(
+        mesh, serving=(shape.kind == "decode" and resident_ok))
+    p_shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    p_structs = _struct(p_shapes, p_specs, mesh)
+    b_specs, b_shapes = _batch_specs_tree(model, shape, mesh)
+    b_structs = _struct(b_shapes, b_specs, mesh)
+
+    if shape.kind == "train":
+        model.seq_pspec = (P(dp_spec, "model", None) if cfg.seq_parallel
+                           else None)
+        model.gather_pspec = (P(dp_spec, None, None) if cfg.seq_parallel
+                              else None)
+        opt_cfg = optim.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+        o_specs = optim.state_pspecs(opt_cfg, p_specs, mesh, p_shapes)
+        o_shapes = jax.eval_shape(lambda: optim.init(opt_cfg, p_shapes))
+        o_structs = _struct(o_shapes, o_specs, mesh)
+        fn = jax.jit(make_train_step(model, opt_cfg, dp_spec=dp_spec),
+                     donate_argnums=(0, 1))
+        return fn, (p_structs, o_structs, b_structs), model, mesh
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.last_logits(params, batch)
+
+        return jax.jit(prefill_step), (p_structs, b_structs), model, mesh
+
+    # decode: serve_step — one token against a cache of seq_len
+    c_specs = model.cache_pspecs(mesh, shape)
+    c_shapes = model.cache_specs(shape)
+    c_structs = _struct(c_shapes, c_specs, mesh)
+    tok_spec, _ = _batch_specs_tree(model, shape, mesh)
+    B = shape.global_batch
+    tok = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=NamedSharding(mesh, tok_spec["tokens"]))
+    idx = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+
+    def serve_step(params, cache, tokens, idx):
+        return model.decode_step(params, cache, tokens, idx)
+
+    return (jax.jit(serve_step, donate_argnums=(1,)),
+            (p_structs, c_structs, tok, idx), model, mesh)
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg = get_arch(arch_name)
+    rec: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+    }
+    fn, args, model, mesh = build_cell(arch_name, shape_name, multi_pod)
+    if fn is None:
+        rec["skipped"] = args
+        return rec
+    t0 = time.time()
+    with mesh:   # mesh context: bare-PartitionSpec sharding constraints
+        lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        live = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        rec["memory"]["per_device_peak_bytes"] = int(live)
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis_raw"] = {
+        "flops": float(ca.get("flops", -1)),
+        "bytes_accessed": float(ca.get("bytes accessed", -1)),
+    }
+    coll = collective_bytes(compiled.as_text())
+    rec["collectives"] = coll
+
+    # --- analytic terms (exact; see flops.py) ---------------------------
+    n_params = cfg.param_count()
+    chips = mesh_chips(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    hlo_fl = F.hlo_flops(cfg, shape)
+    if shape.kind == "train":
+        hbm = F.train_hbm_bytes(cfg, B, S, n_params)
+    elif shape.kind == "prefill":
+        hbm = F.train_hbm_bytes(cfg, B, S, n_params) // 3
+    else:
+        import math
+        cache_bytes = sum(
+            jnp.dtype(l.dtype).itemsize * math.prod(l.shape)
+            for l in jax.tree.leaves(model.cache_specs(shape)))
+        hbm = F.decode_hbm_bytes(cfg, B, S, n_params, cache_bytes)
+    coll_total = sum(v for k, v in coll.items() if k in _COLLECTIVES)
+    rec["analytic"] = {
+        "n_params": n_params,
+        "n_active_params": cfg.active_param_count(),
+        "hlo_flops": hlo_fl,
+        "model_flops": F.model_flops(cfg, B, S, shape.kind),
+        "hbm_bytes": hbm,
+        "collective_bytes": coll_total,
+    }
+    rec["roofline"] = {
+        "compute_s": hlo_fl / (chips * V5E.peak_flops_bf16),
+        "memory_s": hbm / (chips * V5E.hbm_bw),
+        "collective_s": coll_total / (chips * V5E.collective_bw()),
+    }
+    terms = rec["roofline"]
+    dom = max(terms, key=terms.get)
+    rec["roofline"]["dominant"] = dom
+    rec["roofline"]["useful_ratio"] = (
+        rec["analytic"]["model_flops"] / max(hlo_fl, 1))
+    if verbose:
+        print(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def run_tm_cell(multi_pod: bool, backend: str = "lfsr",
+                ta_bits_dtype="int32", clauses: int = 8192,
+                batch: int = 16384, compact_k: int = 0,
+                verbose: bool = False) -> Dict[str, Any]:
+    """The paper-technique production cell (§Perf Cell C): pod-scale CoTM
+    training — clause rows sharded over 'model', batch over 'data'/'pod',
+    integer-delta psums.  KWS6-geometry features scaled to pod-level clause
+    counts (beyond-paper scale)."""
+    import math
+    from repro.core import TMConfig, TMState, COALESCED, init_state
+    from repro.core.distributed import pod_train_step
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = TMConfig(tm_type=COALESCED, features=1600, clauses=clauses,
+                   classes=16, T=1000, s=5.0, prng_backend=backend,
+                   lfsr_bits=24, rand_bits=16)
+    rec: Dict[str, Any] = {
+        "arch": (f"dtm-cotm-kws6xl-{backend}"
+                 + (f"-compact{compact_k}" if compact_k else "")),
+        "shape": f"train_b{batch}",
+        "mesh": "2x16x16" if multi_pod else "16x16", "kind": "train",
+    }
+    dt = jnp.dtype(ta_bits_dtype)
+    ta = jax.ShapeDtypeStruct(
+        (cfg.clauses, cfg.literals), dt,
+        sharding=NamedSharding(mesh, P("model", None)))
+    w = jax.ShapeDtypeStruct(
+        (cfg.classes, cfg.clauses), jnp.int32,
+        sharding=NamedSharding(mesh, P(None, "model")))
+    dp = data_axes(mesh)
+    dp_spec = tuple(dp) if len(dp) > 1 else dp[0]
+    lits = jax.ShapeDtypeStruct((batch, cfg.literals), jnp.int8,
+                                sharding=NamedSharding(mesh, P(dp_spec)))
+    labs = jax.ShapeDtypeStruct((batch,), jnp.int32,
+                                sharding=NamedSharding(mesh, P(dp_spec)))
+
+    def step(ta, w, lits, labs):
+        st, stats = pod_train_step(cfg, TMState(ta, w), lits, labs, mesh,
+                                   seed=7, compact_k=compact_k)
+        return st.ta, st.weights, stats["correct"]
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(ta, w, lits,
+                                                             labs)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "per_device_peak_bytes": int(ma.argument_size_in_bytes
+                                     + ma.output_size_in_bytes
+                                     + ma.temp_size_in_bytes
+                                     - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis_raw"] = {"flops": float(ca.get("flops", -1))}
+    coll = collective_bytes(compiled.as_text())
+    rec["collectives"] = coll
+
+    chips = mesh_chips(mesh)
+    B, f, c, h = batch, cfg.features, cfg.clauses, cfg.classes
+    lit2 = 2 * f
+    k_eff = compact_k * 16 if compact_k else c   # K per model shard × 16 shards
+    n_rand = B * 2 * (k_eff * lit2 + c)   # sel_rand stays per clause
+    prng_ops = n_rand * (8 if backend == "lfsr" else 5)
+    flops = (2 * B * lit2 * c              # clause matmul (MXU)
+             + 2 * B * c * h               # class sums
+             + 2 * B * 2 * k_eff * lit2 * 3  # Type I/II (Alg-6 compacted)
+             + prng_ops)
+    # serial PRNG scan steps (latency proxy — the Cell C iteration target)
+    lanes = max(1024, c * 2)
+    scan_len = (math.ceil(n_rand / max(chips, 1) / lanes)
+                if backend == "lfsr" else 0)
+    hbm = (c * lit2 * (dt.itemsize * 2 + 4)      # ta r/w + delta
+           + B * lit2 * 1 + h * c * 4 * 2)
+    coll_total = sum(v for k, v in coll.items() if k in _COLLECTIVES)
+    rec["analytic"] = {
+        "hlo_flops": flops, "hbm_bytes": hbm,
+        "collective_bytes": coll_total,
+        "model_flops": 2 * B * lit2 * c,         # useful = clause+sum work
+        "prng_serial_scan_steps": scan_len,
+    }
+    rec["roofline"] = {
+        "compute_s": flops / (chips * V5E.peak_flops_bf16),
+        "memory_s": hbm / (chips * V5E.hbm_bw),
+        "collective_s": coll_total / (chips * V5E.collective_bw()),
+    }
+    t = rec["roofline"]
+    t["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: t[k])
+    t["useful_ratio"] = rec["analytic"]["model_flops"] / flops
+    if verbose:
+        print(json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main(argv: Optional[list] = None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tm", action="store_true",
+                    help="run the paper-technique (DTM) production cell")
+    ap.add_argument("--tm-backend", default="lfsr")
+    ap.add_argument("--tm-ta-dtype", default="int32")
+    ap.add_argument("--tm-compact", type=int, default=0,
+                    help="Alg-6 feedback compaction K per model shard")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    if args.tm:
+        os.makedirs(args.out, exist_ok=True)
+        rec = run_tm_cell(args.multi_pod, args.tm_backend, args.tm_ta_dtype,
+                          compact_k=args.tm_compact)
+        tag = (f"dtm-cotm-{args.tm_backend}-{args.tm_ta_dtype}"
+               + (f"-compact{args.tm_compact}" if args.tm_compact else "")
+               + f"__{'2x16x16' if args.multi_pod else '16x16'}")
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        r = rec["roofline"]
+        print(f"TM cell {tag}: compute={r['compute_s']:.3e} "
+              f"memory={r['memory_s']:.3e} collective={r['collective_s']:.3e}"
+              f" dom={r['dominant']} "
+              f"prng_scan={rec['analytic']['prng_serial_scan_steps']}")
+        return
+
+    from repro.configs import all_archs, ALIASES
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        rev = {v: k for k, v in ALIASES.items()}
+        for a in all_archs():
+            for s in SHAPES:
+                cells.append((rev.get(a, a), s))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    for arch, shp in cells:
+        tag = f"{arch.replace('.', '_')}__{shp}__" \
+              f"{'2x16x16' if args.multi_pod else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip-cached] {tag}")
+            continue
+        print(f"[cell] {tag}")
+        try:
+            rec = run_cell(arch, shp, args.multi_pod, verbose=False)
+        except Exception as e:  # record failures — they are bugs to fix
+            rec = {"arch": arch, "shape": shp, "error": repr(e)[:2000]}
+            print(f"  ERROR: {repr(e)[:300]}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        if "roofline" in rec:
+            r = rec["roofline"]
+            print(f"  ok: compute={r['compute_s']:.3e}s "
+                  f"memory={r['memory_s']:.3e}s "
+                  f"collective={r['collective_s']:.3e}s dom={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

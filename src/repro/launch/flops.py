@@ -1,0 +1,227 @@
+"""Exact analytic FLOP / HBM-traffic model per (arch × shape × kind).
+
+WHY THIS EXISTS: XLA's ``compiled.cost_analysis()`` counts a while-loop
+(scan) body ONCE, not × trip-count (verified experimentally — see
+EXPERIMENTS.md §Dry-run "scan undercount" note).  Our layer stacks and the
+flash-attention pair-list are scans, so raw HLO numbers undercount by
+~n_layers×.  This module mirrors every einsum in the model code exactly —
+including flash block-pair areas (causal skipping), MoE capacity padding,
+and SSD chunk terms — so the roofline compute term is trustworthy.  Raw
+cost_analysis values are reported alongside for transparency.
+
+All counts are *executed* matmul FLOPs (2·M·N·K per contraction), not
+"useful" model FLOPs — MODEL_FLOPS = 6·N·D is computed separately so the
+ratio exposes remat/capacity/padding waste, per the §Roofline deliverable.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import (AUDIO, ArchConfig, HYBRID, MOE, SSM,
+                                 ShapeCell, VLM)
+from repro.models.layers import FLASH_THRESHOLD, _QC, _KC, _block_pairs
+from repro.models.model import plan_segments
+
+
+def _attn_area(Sq: int, Sk: int, causal: bool, window: int) -> int:
+    """Executed score-matrix area (flash pair blocks or dense S×S)."""
+    if Sq * Sk <= FLASH_THRESHOLD:
+        return Sq * Sk
+    qc, kc = min(_QC, Sq), min(_KC, Sk)
+    pairs = _block_pairs(Sq, Sk, causal, window, 0, qc, kc)
+    return len(pairs) * qc * kc
+
+
+def _gqa_proj(cfg: ArchConfig) -> int:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return 2 * d * (hq * hd) * 2 + 2 * d * (hkv * hd) * 2   # q,o + k,v
+
+
+def _mla_proj(cfg: ArchConfig) -> int:
+    d, h = cfg.d_model, cfg.n_heads
+    r, dr, dn, dv = (cfg.kv_lora_rank, cfg.rope_head_dim, cfg.nope_head_dim,
+                     cfg.v_head_dim)
+    return (2 * d * h * (dn + dr) + 2 * d * (r + dr)
+            + 2 * r * h * dn + 2 * r * h * dv + 2 * h * dv * d)
+
+
+def _mlp(cfg: ArchConfig, dff: int) -> int:
+    mult = 3 if cfg.mlp_act == "swiglu" else 2
+    return 2 * cfg.d_model * dff * mult
+
+
+def _moe_layer(cfg: ArchConfig, tokens: int) -> int:
+    from repro.models.moe import _capacity
+    g_sz = min(cfg.moe_group, tokens)
+    G = tokens // g_sz
+    cap = _capacity(g_sz, cfg)
+    slots = G * cfg.n_experts * cap
+    f = 2 * cfg.d_model * cfg.n_experts * tokens            # router
+    f += slots * _mlp(cfg, cfg.d_expert)                    # padded experts
+    if cfg.n_shared_experts:
+        f += tokens * _mlp(cfg, cfg.n_shared_experts * cfg.d_expert)
+    return f
+
+
+def _ssd_layer(cfg: ArchConfig, B: int, S: int) -> int:
+    d, di, n = cfg.d_model, cfg.d_inner_ssm, cfg.ssm_state
+    h, P, Q = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_chunk
+    C = max(S // Q, 1)
+    tok = B * S
+    f = tok * (2 * d * (2 * di + 2 * n + h) + 2 * di * d)   # in/out proj
+    f += tok * 2 * cfg.ssm_conv * (di + 2 * n)              # conv
+    f += 2 * B * C * Q * Q * n                              # CBᵀ scores
+    f += 2 * B * C * Q * Q * h * P                          # intra M·x
+    f += 4 * B * C * Q * h * n * P                          # states + inter
+    f += 2 * B * C * h * n * P                              # chunk scan
+    return f
+
+
+def _attn_layer(cfg: ArchConfig, B: int, S: int, window: int,
+                mla: bool) -> int:
+    area = _attn_area(S, S, True, window)
+    if mla:
+        hd = cfg.nope_head_dim + cfg.rope_head_dim
+        hdv = cfg.v_head_dim
+        proj = _mla_proj(cfg)
+    else:
+        hd = hdv = cfg.hd
+        proj = _gqa_proj(cfg)
+    return B * S * proj + B * cfg.n_heads * area * (2 * hd + 2 * hdv)
+
+
+def _cross_layer(cfg: ArchConfig, B: int, Sq: int, Skv: int) -> int:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    proj = B * Sq * (2 * d * hq * hd * 2) + B * Skv * (2 * d * hkv * hd * 2)
+    area = _attn_area(Sq, Skv, False, 0)
+    return proj + B * cfg.n_heads * area * 4 * hd
+
+
+def forward_flops(cfg: ArchConfig, B: int, S: int) -> int:
+    """Exact executed forward FLOPs for the full-sequence path."""
+    tok = B * S
+    f = 2 * tok * cfg.d_model * cfg.vocab                   # lm head
+    for seg in plan_segments(cfg):
+        n = seg.n
+        if seg.name == "encoder":
+            Se = S * cfg.n_frames_ratio
+            area = _attn_area(Se, Se, False, 0)
+            f += n * (B * Se * _gqa_proj(cfg)
+                      + B * cfg.n_heads * area * 4 * cfg.hd
+                      + B * Se * _mlp(cfg, cfg.d_ff))
+            continue
+        if seg.mixer == "ssm":
+            f += n * _ssd_layer(cfg, B, S)
+        elif seg.mixer == "hybrid":
+            f += n * (_attn_layer(cfg, B, S, seg.window, False)
+                      + _ssd_layer(cfg, B, S))
+        elif seg.mixer == "xattn":
+            f += n * _cross_layer(cfg, B, S, cfg.n_image_tokens)
+        else:
+            f += n * _attn_layer(cfg, B, S, seg.window, cfg.mla)
+        if seg.cross:  # enc-dec decoder cross
+            f += n * _cross_layer(cfg, B, S, S * cfg.n_frames_ratio)
+        if seg.ffn == "moe":
+            f += n * _moe_layer(cfg, tok)
+        elif seg.ffn == "mlp":
+            f += n * tok * _mlp(cfg, cfg.d_ff)
+    return f
+
+
+def decode_flops(cfg: ArchConfig, B: int, cache_len: int) -> int:
+    """One serve_step (single new token, cache of cache_len)."""
+    f = 2 * B * cfg.d_model * cfg.vocab
+    for seg in plan_segments(cfg):
+        n = seg.n
+        if seg.name == "encoder":
+            continue
+        if seg.mixer in ("ssm",):
+            f += n * _ssd_decode(cfg, B)
+            continue
+        if seg.mixer == "hybrid":
+            f += n * _ssd_decode(cfg, B)
+        if seg.mixer == "mla":
+            h = cfg.n_heads
+            r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+            dn, dv = cfg.nope_head_dim, cfg.v_head_dim
+            f += n * B * (_mla_proj(cfg)                     # projections
+                          + 2 * h * dn * r                   # q absorb
+                          + 2 * h * cache_len * (r + dr)     # scores
+                          + 2 * h * cache_len * r            # ctx
+                          + 2 * h * r * dv)                  # out absorb
+        elif seg.mixer == "xattn":
+            f += n * B * (2 * cfg.d_model * cfg.n_heads * cfg.hd * 2
+                          + cfg.n_heads * cfg.n_image_tokens * 4 * cfg.hd)
+        elif seg.mixer in ("attn", "hybrid"):
+            eff = min(seg.window, cache_len) if seg.window else cache_len
+            f += n * B * (_gqa_proj(cfg)
+                          + cfg.n_heads * eff * 4 * cfg.hd)
+        if seg.cross:
+            f += n * B * (2 * cfg.d_model * cfg.n_heads * cfg.hd * 2
+                          + cfg.n_heads * cache_len * cfg.n_frames_ratio
+                          * 4 * cfg.hd)
+        if seg.ffn == "moe":
+            f += n * _moe_layer(cfg, B)
+        elif seg.ffn == "mlp":
+            f += n * B * _mlp(cfg, cfg.d_ff)
+    return f
+
+
+def _ssd_decode(cfg: ArchConfig, B: int) -> int:
+    d, di, n = cfg.d_model, cfg.d_inner_ssm, cfg.ssm_state
+    h, P = cfg.n_ssm_heads, cfg.ssm_head_dim
+    return B * (2 * d * (2 * di + 2 * n + h) + 2 * di * d
+                + 2 * cfg.ssm_conv * (di + 2 * n) + 6 * h * n * P)
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic model (per device ·chips = global; we return GLOBAL bytes)
+# ---------------------------------------------------------------------------
+
+def _dt(cfg: ArchConfig) -> int:
+    return 2 if cfg.param_dtype == "bfloat16" else 4
+
+
+def _opt_bytes_per_param(cfg: ArchConfig) -> int:
+    per = {"float32": 4, "bfloat16": 2, "int8": 1}[cfg.opt_state_dtype]
+    return 2 * per                                           # m and v
+
+
+def train_hbm_bytes(cfg: ArchConfig, B: int, S: int, n_params: int) -> int:
+    """Global HBM traffic for one train step (documented model):
+    params read fwd+bwd (+1 remat recompute), grads written, moments
+    read+written, params written, layer-boundary activations saved+read."""
+    pb = n_params * _dt(cfg)
+    traffic = pb * (3 if cfg.remat else 2)                  # param reads
+    traffic += pb                                            # grad write
+    traffic += n_params * _opt_bytes_per_param(cfg) * 2      # m,v r+w
+    traffic += pb                                            # param write
+    layers = cfg.n_layers + (cfg.n_enc_layers if cfg.enc_dec else 0)
+    act = B * S * cfg.d_model * _dt(cfg) * layers
+    traffic += act * 2                                       # save + read
+    traffic += B * S * cfg.vocab * 4 * 2                     # logits r/w
+    return traffic
+
+
+def decode_hbm_bytes(cfg: ArchConfig, B: int, cache_len: int,
+                     n_params: int, cache_bytes: int) -> int:
+    """params read once + full cache read + token-slice write."""
+    return n_params * _dt(cfg) + cache_bytes + B * cfg.d_model * _dt(cfg)
+
+
+def model_flops(cfg: ArchConfig, B: int, S: int, kind: str) -> int:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per prompt."""
+    n = cfg.active_param_count()
+    D = B * S if kind == "train" else B * (S if kind == "prefill" else 1)
+    mult = 6 if kind == "train" else 2
+    return mult * n * D
+
+
+def hlo_flops(cfg: ArchConfig, shape: ShapeCell) -> int:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        fwd = forward_flops(cfg, B, S)
+        return fwd * (4 if cfg.remat else 3)                # fwd+bwd(2)+remat
+    if shape.kind == "prefill":
+        return forward_flops(cfg, B, S)
+    return decode_flops(cfg, B, S)

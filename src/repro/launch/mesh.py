@@ -1,0 +1,53 @@
+"""Production mesh construction + TPU v5e hardware model.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model) — pod is pure
+DP over the (slower) inter-pod links.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host has (tests / examples): (n//m, m)."""
+    n = len(jax.devices())
+    return jax.make_mesh((max(n // model_axis, 1), model_axis),
+                         ("data", "model"))
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """TPU v5e constants (per prompt §Roofline)."""
+
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12        # FLOP/s per chip
+    hbm_bw: float = 819e9                  # B/s per chip
+    ici_link_bw: float = 50e9              # B/s per link (~)
+    ici_links_per_chip: int = 4            # 2D torus on v5e
+    hbm_bytes: float = 16e9
+
+    def collective_bw(self) -> float:
+        """Aggregate per-chip ICI bandwidth available to a collective."""
+        return self.ici_link_bw * self.ici_links_per_chip
+
+
+V5E = HardwareModel()
+
+
+def mesh_chips(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

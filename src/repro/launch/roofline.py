@@ -1,0 +1,86 @@
+"""Roofline table generator — reads experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table.
+
+Per (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line "what would move the
+dominant term" hint (rule-based from the term structure).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(path: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(path, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def _hint(rec: Dict) -> str:
+    dom = rec["roofline"]["dominant"]
+    kind = rec.get("kind", "")
+    if dom == "compute_s":
+        ur = rec["roofline"].get("useful_ratio", 1)
+        if ur < 0.55:
+            return ("compute-bound with low useful ratio — cut remat/"
+                    "attention/capacity overhead FLOPs")
+        return "compute-bound near peak — only batch/precision moves it"
+    if dom == "memory_s":
+        if kind == "decode":
+            return ("HBM-bound on cache+weights streaming — quantise KV "
+                    "cache / MQA-style head reduction")
+        return "HBM-bound — fuse, shrink optimizer state, fewer act saves"
+    return ("collective-bound — reshard to cut all-gathers, overlap "
+            "collectives with compute")
+
+
+def table(recs: List[Dict], fmt: str = "md") -> str:
+    rows = []
+    for r in recs:
+        if "roofline" not in r:
+            status = r.get("skipped") or r.get("error", "?")
+            rows.append((r.get("arch", "?"), r.get("shape", "?"),
+                         r.get("mesh", "?"), None, str(status)[:60]))
+            continue
+        rows.append((r["arch"], r["shape"], r["mesh"], r, ""))
+    out = []
+    if fmt == "md":
+        out.append("| arch | shape | mesh | compute s | memory s | "
+                   "collective s | dominant | useful | peak GB/dev | note |")
+        out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for arch, shape, mesh, r, note in rows:
+        if r is None:
+            out.append(f"| {arch} | {shape} | {mesh} | — | — | — | skip | — "
+                       f"| — | {note} |")
+            continue
+        t = r["roofline"]
+        gb = r.get("memory", {}).get("per_device_peak_bytes", 0) / 1e9
+        out.append(
+            f"| {arch} | {shape} | {mesh} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant'].replace('_s','')} | "
+            f"{t['useful_ratio']:.2f} | {gb:.1f} | {_hint(r)[:60]} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(table(recs))
+    done = sum(1 for r in recs if "roofline" in r)
+    skip = sum(1 for r in recs if "skipped" in r)
+    err = sum(1 for r in recs if "error" in r)
+    print(f"\n{done} compiled, {skip} mandated-skips, {err} errors, "
+          f"{len(recs)} total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Distributed LM training driver (pjit over the production mesh).
+
+Builds the fused train step (loss → grad → AdamW) with:
+* FSDP(data) × TP(model) param sharding from Model.param_pspecs,
+* ZeRO-1 optimizer-state sharding (optim.state_pspecs),
+* optional remat (per ArchConfig), bf16/int8 moments,
+* checkpoint/resume via repro.checkpoint + the runtime Supervisor.
+
+Also usable as a module: ``build_train_step`` returns the jitted step +
+sharded init for dryrun.py and examples/.
+
+CLI:  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+          --steps 20 --batch 8 --seq 256 --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.models import Model, SHAPES
+from repro.models.config import ArchConfig
+from .mesh import data_axes, make_host_mesh
+
+
+def make_train_state_specs(model: Model, opt_cfg: optim.AdamWConfig, mesh):
+    """(param_pspecs, opt_pspecs) for the full train state."""
+    p_specs = model.param_pspecs(mesh)
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    o_specs = optim.state_pspecs(opt_cfg, p_specs, mesh, shapes)
+    return p_specs, o_specs
+
+
+def build_train_step(model: Model, opt_cfg: optim.AdamWConfig, mesh,
+                     donate: bool = True):
+    """Returns (train_step, init_fn, (param_specs, opt_specs))."""
+    p_specs, o_specs = make_train_state_specs(model, opt_cfg, mesh)
+    dp = data_axes(mesh)
+    dp_spec = tuple(dp) if len(dp) > 1 else dp[0]
+
+    def batch_spec(leaf):
+        return P(dp_spec, *([None] * (leaf.ndim - 1)))
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params)
+        params, opt_state, om = optim.apply(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, **om, loss=loss)
+        return params, opt_state, metrics
+
+    def init_fn(key):
+        params = model.init(key)
+        return params, optim.init(opt_cfg, params)
+
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs)
+    o_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    jit_step = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, None),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    jit_init = jax.jit(init_fn, out_shardings=(p_sh, o_sh))
+    return jit_step, jit_init, (p_specs, o_specs), batch_spec
+
+
+def synth_lm_batch(model: Model, batch: int, seq: int, seed: int = 0):
+    from repro.data import make_lm_tokens
+    cfg = model.cfg
+    out = {"tokens": jnp.asarray(make_lm_tokens(cfg.vocab, batch, seq, seed))}
+    if cfg.family == "vlm":
+        out["vision"] = jnp.zeros((batch, cfg.n_image_tokens, cfg.d_model),
+                                  jnp.dtype(cfg.param_dtype))
+    if cfg.family == "audio":
+        out["frames"] = (jax.random.normal(
+            jax.random.PRNGKey(seed), (batch, seq, cfg.d_model)) * 0.02
+        ).astype(jnp.dtype(cfg.param_dtype))
+    return out
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", type=str, default="")
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch, get_smoke
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    model = Model(cfg)
+    mesh = make_host_mesh(args.model_axis)
+    opt_cfg = optim.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                                warmup_steps=max(args.steps // 10, 1),
+                                state_dtype=cfg.opt_state_dtype)
+    step_fn, init_fn, _, _ = build_train_step(model, opt_cfg, mesh)
+    params, opt_state = init_fn(jax.random.PRNGKey(0))
+    from repro import checkpoint as ckpt
+    start = 0
+    if args.ckpt:
+        got = ckpt.restore_latest(args.ckpt, (params, opt_state))
+        if got:
+            start, (params, opt_state), _ = got
+            print(f"resumed from step {start}")
+    for s in range(start, args.steps):
+        batch = synth_lm_batch(model, args.batch, args.seq, seed=s)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        print(f"step {s:4d} loss={float(metrics['loss']):.4f} "
+              f"gnorm={float(metrics['grad_norm']):.3f} dt={dt*1e3:.0f}ms")
+        if args.ckpt and (s + 1) % 10 == 0:
+            ckpt.save(args.ckpt, s + 1, (params, opt_state))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

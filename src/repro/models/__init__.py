@@ -1,0 +1,8 @@
+"""Transformer substrate for the assigned architectures."""
+from .config import (ArchConfig, ShapeCell, SHAPES, cell_applicable,
+                     DENSE, MOE, VLM, SSM, HYBRID, AUDIO)
+from .model import Model, plan_segments, Seg
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPES", "cell_applicable", "Model",
+           "plan_segments", "Seg", "DENSE", "MOE", "VLM", "SSM", "HYBRID",
+           "AUDIO"]

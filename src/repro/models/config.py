@@ -1,0 +1,208 @@
+"""Architecture configuration covering all 10 assigned families.
+
+One frozen dataclass drives model construction, init, sharding rules,
+input specs, and the dry-run.  Exact per-arch values live in
+``repro/configs/<id>.py`` (public-literature configs; see prompt table).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+DENSE, MOE, VLM, SSM, HYBRID, AUDIO = (
+    "dense", "moe", "vlm", "ssm", "hybrid", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | vlm | ssm | hybrid | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None     # default d_model // n_heads
+    mlp_act: str = "swiglu"            # swiglu | sq_relu
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    rope_theta: float = 1e6
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    d_expert: int = 0                  # per-expert FFN hidden
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0        # leading dense layers (deepseek: 1)
+    router_aux_coef: float = 0.001
+    capacity_factor: float = 1.25
+    moe_group: int = 1024              # tokens per dispatch group (EP tiling)
+
+    # --- MLA (deepseek) ------------------------------------------------------
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- SSM (mamba2 / hymba) -----------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (hymba) ------------------------------------------------------
+    sliding_window: int = 0            # 0 = full attention
+    global_attn_layers: Tuple[int, ...] = ()   # hymba: few full-attn layers
+
+    # --- VLM -----------------------------------------------------------------
+    cross_attn_every: int = 0          # insert cross-attn layer every N
+    n_image_tokens: int = 1601         # precomputed patch embeddings (stub)
+
+    # --- enc-dec (audio) ------------------------------------------------------
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    n_frames_ratio: int = 1            # encoder frames per decoder token
+
+    # --- numerics / training --------------------------------------------------
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+    zero1: bool = True                 # shard optimizer state over data axis
+    opt_state_dtype: str = "float32"   # bf16 for the XXL archs
+    grad_accum: int = 1                # microbatches per step (memory lever)
+    grad_accum_dtype: str = "float32"  # bf16 for the XXL archs
+    seq_parallel: bool = True          # shard saved boundaries over 'model'
+    kv_cache_dtype: str = "bfloat16"   # int8 halves decode cache streaming
+                                       # (per-token-head scales; §Perf Cell B)
+
+    def __post_init__(self):
+        if self.family in (MOE,):
+            assert self.n_experts > 0 and self.experts_per_tok > 0
+        if self.family == SSM:
+            assert self.ssm_state > 0
+        if self.family == VLM:
+            assert self.cross_attn_every > 0
+        if self.family == AUDIO:
+            assert self.enc_dec and self.n_enc_layers > 0
+
+    # ---- derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == SSM
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (prompt: SSM/hybrid/linear-attn only)."""
+        return self.family in (SSM, HYBRID)
+
+    @property
+    def d_inner_ssm(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner_ssm // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives roofline MODEL_FLOPS = 6·N·D)."""
+        d, v = self.d_model, self.vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        n = emb
+
+        def attn_params():
+            if self.mla:
+                q = d * (self.n_heads * (self.nope_head_dim
+                                         + self.rope_head_dim))
+                kv = (d * (self.kv_lora_rank + self.rope_head_dim)
+                      + self.kv_lora_rank * self.n_heads
+                      * (self.nope_head_dim + self.v_head_dim))
+                o = self.n_heads * self.v_head_dim * d
+                return q + kv + o
+            qo = d * self.n_heads * self.hd * 2
+            kv = d * self.n_kv_heads * self.hd * 2
+            return qo + kv
+
+        def mlp_params(dff):
+            mult = 3 if self.mlp_act == "swiglu" else 2
+            return mult * d * dff
+
+        def ssm_params():
+            di = self.d_inner_ssm
+            # in_proj (z,x,B,C,dt) + out_proj + conv + A,D
+            bc = 2 * self.ssm_state
+            return (d * (2 * di + bc + self.n_ssm_heads) + di * d
+                    + self.ssm_conv * (di + bc) + 2 * self.n_ssm_heads)
+
+        for i in range(self.n_layers):
+            n += 2 * d  # norms
+            if self.family == SSM:
+                n += ssm_params()
+                continue
+            if self.family == HYBRID:
+                n += attn_params() + ssm_params() + mlp_params(self.d_ff)
+                continue
+            n += attn_params()
+            is_moe = (self.n_experts > 0 and i >= self.first_dense_layers)
+            if is_moe:
+                n += d * self.n_experts  # router
+                mult = 3 if self.mlp_act == "swiglu" else 2
+                n += self.n_experts * mult * d * self.d_expert
+                n += self.n_shared_experts * mult * d * self.d_expert
+            else:
+                n += mlp_params(self.d_ff)
+        if self.family == VLM:
+            n_cross = self.n_layers // self.cross_attn_every
+            n += n_cross * (attn_params() + 2 * d)
+        if self.enc_dec:
+            for _ in range(self.n_enc_layers):
+                n += attn_params() + mlp_params(self.d_ff) + 2 * d
+            n += self.n_layers * (attn_params() + d)  # decoder cross-attn
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        mult = 3 if self.mlp_act == "swiglu" else 2
+        moe_layers = self.n_layers - self.first_dense_layers
+        all_experts = moe_layers * self.n_experts * mult * self.d_model * self.d_expert
+        active = moe_layers * self.experts_per_tok * mult * self.d_model * self.d_expert
+        return full - all_experts + active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (arch × input-shape) dry-run cell."""
+
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(arch: ArchConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """Prompt-mandated skips (recorded in DESIGN.md §5 / EXPERIMENTS.md)."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention (full-attn arch)"
+    return True, ""

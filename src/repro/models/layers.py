@@ -1,0 +1,526 @@
+"""Shared transformer layers: norms, RoPE, GQA/MLA/cross attention, MLPs.
+
+Functional style: every layer is ``apply(params: dict, x, ...) -> y`` with a
+matching ``init(key, cfg) -> params`` so stacks scan over stacked param
+pytrees.  Compute dtype follows the input; softmax/variance in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+
+def dense_init(key, shape, scale: float = 0.02, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(v + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, H, hd], positions [B, S] (absolute)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (with optional QKV bias, sliding window, KV cache)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [B,Sq,Hq,hd] k/v [B,Sk,Hkv,*] -> [B,Sq,Hq,hd_v]; GQA via reshape."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    q = q.reshape(B, Sq, Hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, -1).astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style block attention (exact, online-softmax, no S×S materialisation)
+# ---------------------------------------------------------------------------
+#
+# The (q-block, kv-block) pair list is built statically, so causal masking
+# skips upper-triangle blocks entirely (no 2× FLOP waste — this matters for
+# the §Roofline compute term at 32k+) and sliding windows touch only their
+# band.  One lax.scan over the pair list keeps HLO size O(1) in sequence
+# length.  Used automatically by gqa/cross attention above a size threshold.
+
+FLASH_THRESHOLD = 1 << 22            # Sq*Sk above which flash path kicks in
+_QC, _KC = 512, 1024                 # block sizes (MXU-aligned)
+
+
+def _block_pairs(Sq: int, Sk: int, causal: bool, window: int,
+                 q_pos0: int, qc: int, kc: int):
+    """Static (qi, kj) block-pair list; q block i covers absolute positions
+    [q_pos0 + i·qc, …); k block j covers [j·kc, …)."""
+    n_q, n_k = -(-Sq // qc), -(-Sk // kc)
+    pairs = []
+    for i in range(n_q):
+        qlo = q_pos0 + i * qc
+        qhi = qlo + qc - 1
+        for j in range(n_k):
+            klo, khi = j * kc, j * kc + kc - 1
+            if causal and klo > qhi:
+                continue                      # entirely in the future
+            if window > 0 and khi <= qlo - window:
+                continue                      # entirely outside the band
+            pairs.append((i, j))
+    return pairs
+
+
+def _flash_blocks(q, k, v, qc, kc):
+    """Pad + reshape to block layout; returns (qp, kp, vp, n_q, n_k, g)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    g = Hq // Hkv
+    pq, pk = (-Sq) % qc, (-Sk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    n_q, n_k = qp.shape[1] // qc, kp.shape[1] // kc
+    qp = qp.reshape(B, n_q, qc, Hkv, g, hd).astype(jnp.float32)
+    kp = kp.reshape(B, n_k, kc, Hkv, hd).astype(jnp.float32)
+    vp = vp.reshape(B, n_k, kc, Hkv, hdv).astype(jnp.float32)
+    return qp, kp, vp, n_q, n_k, g
+
+
+def _pair_arrays(Sq, Sk, causal, window, q_pos0, qc, kc):
+    pairs = _block_pairs(Sq, Sk, causal, window, q_pos0, qc, kc)
+    return (jnp.asarray([p[0] for p in pairs], jnp.int32),
+            jnp.asarray([p[1] for p in pairs], jnp.int32))
+
+
+def _blk_mask(i, j, Sk, causal, window, q_pos0, qc, kc):
+    qpos = q_pos0 + i * qc + jnp.arange(qc)[:, None]
+    kpos = j * kc + jnp.arange(kc)[None, :]
+    ok = kpos < Sk
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return ok
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, window, q_pos0, qc, kc):
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    hdv = v.shape[-1]
+    qp, kp, vp, n_q, n_k, g = _flash_blocks(q, k, v, qc, kc)
+    Hkv = kp.shape[3]
+    qi, kj = _pair_arrays(Sq, Sk, causal, window, q_pos0, qc, kc)
+
+    m0 = jnp.full((n_q, B, Hkv, g, qc), -1e30, jnp.float32)
+    l0 = jnp.zeros((n_q, B, Hkv, g, qc), jnp.float32)
+    a0 = jnp.zeros((n_q, B, Hkv, g, qc, hdv), jnp.float32)
+
+    def body(carry, ij):
+        m, l, acc = carry
+        i, j = ij
+        qb = jax.lax.dynamic_index_in_dim(qp, i, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vp, j, 1, keepdims=False)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+        ok = _blk_mask(i, j, Sk, causal, window, q_pos0, qc, kc)
+        s = jnp.where(ok[None, None, None], s, -1e30)
+        m_blk = s.max(-1)
+        m_i = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        a_i = jax.lax.dynamic_index_in_dim(acc, i, 0, keepdims=False)
+        m_new = jnp.maximum(m_i, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + p.sum(-1)
+        a_new = (a_i * corr[..., None]
+                 + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (qi, kj))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))             # [n,B,Hkv,g,qc]
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, n_q * qc, Hq, hdv)
+    return out[:, :Sq].astype(v.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_sdpa(q, k, v, scale, causal: bool = True, window: int = 0,
+               q_pos0: int = 0, qc: int = _QC, kc: int = _KC):
+    """Exact attention via online softmax over a static block-pair list,
+    with a FlashAttention-2-style custom backward (p recomputed blockwise
+    from saved (out, lse) — O(S) residual memory instead of the scan-VJP's
+    O(pairs × block²)).  q [B,Sq,Hq,hd], k/v [B,Sk,Hkv,hd(v)]."""
+    out, _ = _flash_fwd_impl(q, k, v, scale, causal, window, q_pos0, qc, kc)
+    return out
+
+
+def _flash_fwd(q, k, v, scale, causal, window, q_pos0, qc, kc):
+    out, lse = _flash_fwd_impl(q, k, v, scale, causal, window, q_pos0, qc, kc)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(scale, causal, window, q_pos0, qc, kc, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    hdv = v.shape[-1]
+    qp, kp, vp, n_q, n_k, g = _flash_blocks(q, k, v, qc, kc)
+    Hkv = kp.shape[3]
+    pq = n_q * qc - Sq
+    ob = jnp.pad(out.astype(jnp.float32), ((0, 0), (0, pq), (0, 0), (0, 0)))
+    do = jnp.pad(dout.astype(jnp.float32), ((0, 0), (0, pq), (0, 0), (0, 0)))
+    ob = ob.reshape(B, n_q, qc, Hkv, g, hdv)
+    do = do.reshape(B, n_q, qc, Hkv, g, hdv)
+    # delta_i = rowsum(dO ⊙ O)  [B, n_q, qc, Hkv, g]
+    delta = (ob * do).sum(-1)
+    qi, kj = _pair_arrays(Sq, Sk, causal, window, q_pos0, qc, kc)
+
+    dq0 = jnp.zeros_like(qp)
+    dk0 = jnp.zeros_like(kp)
+    dv0 = jnp.zeros_like(vp)
+
+    def body(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij
+        qb = jax.lax.dynamic_index_in_dim(qp, i, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kp, j, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vp, j, 1, keepdims=False)
+        do_i = jax.lax.dynamic_index_in_dim(do, i, 1, keepdims=False)
+        dl_i = jax.lax.dynamic_index_in_dim(delta, i, 1, keepdims=False)
+        lse_i = jax.lax.dynamic_index_in_dim(lse, i, 0, keepdims=False)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb) * scale
+        ok = _blk_mask(i, j, Sk, causal, window, q_pos0, qc, kc)
+        s = jnp.where(ok[None, None, None], s, -1e30)
+        p = jnp.exp(s - lse_i[..., None])                # [B,Hkv,g,qc,kc]
+        # dv_j += pᵀ · dO_i     (do_i is [B,qc,Hkv,g,hdv])
+        dv_b = jnp.einsum("bhgqk,bqhgd->bkhd", p, do_i)
+        # dp = dO_i · v_jᵀ ; ds = p ⊙ (dp − delta_i) · scale
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_i, vb)
+        ds = p * (dp - dl_i.transpose(0, 2, 3, 1)[..., None]) * scale
+        dq_b = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kb)
+        dk_b = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qb)
+        dq = dq.at[:, i].add(dq_b)
+        dk = dk.at[:, j].add(dk_b)
+        dv = dv.at[:, j].add(dv_b)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0), (qi, kj))
+    dq = dq.reshape(B, n_q * qc, Hq, hd)[:, :Sq].astype(q.dtype)
+    dk = dk.reshape(B, n_k * kc, Hkv, hd)[:, :Sk].astype(k.dtype)
+    dv = dv.reshape(B, n_k * kc, Hkv, hdv)[:, :Sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_sdpa.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _attend(q, k, v, scale, causal: bool, window: int, q_pos0: int = 0,
+            dense_mask=None):
+    """Dispatch dense vs flash path on problem size."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq * Sk <= FLASH_THRESHOLD:
+        if dense_mask is None:
+            dense_mask = causal_mask(Sq, Sk, q_pos0,
+                                     window) if causal else jnp.ones(
+                                         (1, Sq, Sk), bool)
+        return _sdpa(q, k, v, dense_mask, scale)
+    return flash_sdpa(q, k, v, scale, causal, window, q_pos0)
+
+
+def causal_mask(Sq: int, Sk: int, q_pos0, window: int = 0):
+    """mask [1, Sq, Sk]: key j visible to query i iff j<=i (and within
+    window if window>0).  q_pos0: absolute position of query row 0."""
+    qi = q_pos0 + jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m[None]
+
+
+def gqa_attention(p, cfg: ArchConfig, x, positions, mask):
+    """Full-sequence (train / prefill) attention.  Returns (out, (k, v)).
+
+    ``mask`` is either a dense [*, Sq, Sk] bool array or a spec tuple
+    ("causal"|"full", window) — spec tuples route to the flash path above
+    the size threshold (required for the 32k cells)."""
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, hq, hd)
+    k = k.reshape(B, S, hkv, hd)
+    v = v.reshape(B, S, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+    if isinstance(mask, tuple):
+        out = _attend(q, k, v, scale, causal=(mask[0] == "causal"),
+                      window=mask[1])
+    else:
+        out = _sdpa(q, k, v, mask, scale)
+    return out.reshape(B, S, hq * hd) @ p["wo"], (k, v)
+
+
+def _kv_quant(x, axis=-1):
+    """Symmetric int8 quantisation with per-token-head scales.
+
+    x [..., hd] -> (q int8 [..., hd], scale f32 [...])."""
+    s = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis),
+                    1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _kv_dequant(q, s, dtype):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache_k, cache_v, idx, window: int = 0,
+               cache_ks=None, cache_vs=None):
+    """One-token decode against a static-size cache.
+
+    cache_k/v [B, Smax, Hkv, hd] (ring buffer when window>0, Smax=window).
+    int8 KV mode (§Perf Cell B): cache_k/v int8 + cache_ks/vs f32 scales
+    [B, Smax, Hkv]; dequant is fused into the attention reads on TPU so the
+    HBM stream halves.  idx: absolute position.
+    Returns (out, k', v', ks', vs')."""
+    B, S, d = x.shape
+    assert S == 1
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    q = apply_rope(q.reshape(B, 1, hq, hd), pos, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, 1, hkv, hd), pos, cfg.rope_theta)
+    v = v.reshape(B, 1, hkv, hd)
+
+    quant = cache_k.dtype == jnp.int8
+    Smax = cache_k.shape[1]
+    slot = idx % Smax if window > 0 else idx
+    if quant:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, kq, slot, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, vq, slot, 1)
+        cache_ks = jax.lax.dynamic_update_slice_in_dim(cache_ks, ks, slot, 1)
+        cache_vs = jax.lax.dynamic_update_slice_in_dim(cache_vs, vs, slot, 1)
+        k_all = _kv_dequant(cache_k, cache_ks, x.dtype)
+        v_all = _kv_dequant(cache_v, cache_vs, x.dtype)
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, 1)
+        k_all, v_all = cache_k, cache_v
+    kj = jnp.arange(Smax)[None, :]
+    if window > 0:
+        # ring buffer: slot s holds absolute position idx - ((slot-s) mod W)
+        age = (slot - kj) % Smax
+        valid = (age <= idx) & (age < Smax)
+        mask = valid[:, None, :].repeat(B, 0)
+    else:
+        mask = (kj <= idx)[:, None, :].repeat(B, 0)
+    out = _sdpa(q, k_all, v_all, mask, 1.0 / math.sqrt(hd))
+    return (out.reshape(B, 1, hq * hd) @ p["wo"], cache_k, cache_v,
+            cache_ks, cache_vs)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image layers, enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    p = gqa_init(key, cfg, dtype)
+    p["gate"] = jnp.zeros((), dtype)          # tanh-gated (Llama-3.2 style)
+    return p
+
+
+def cross_attention(p, cfg: ArchConfig, x, kv_src, kv_mask=None,
+                    cache=None):
+    """x [B,Sq,d] attends to kv_src [B,Skv,d] (no RoPE on cross path).
+
+    cache: optional precomputed (k, v) to reuse across decode steps."""
+    B, Sq, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, Sq, hq, hd)
+    if cache is None:
+        k = (kv_src @ p["wk"]).reshape(B, -1, hkv, hd)
+        v = (kv_src @ p["wv"]).reshape(B, -1, hkv, hd)
+    else:
+        k, v = cache
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    if kv_mask is None:
+        out = _attend(q, k, v, scale, causal=False, window=0)
+    else:
+        out = _sdpa(q, k, v, kv_mask[:, None, :].repeat(Sq, 1), scale)
+    out = out.reshape(B, Sq, hq * hd) @ p["wo"]
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2: latent-compressed KV)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d, h = cfg.d_model, cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dn, dv = cfg.nope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (dn + dr)), dtype=dtype),
+        "wdkv": dense_init(ks[1], (d, r + dr), dtype=dtype),   # latent + k_rope
+        "wuk": dense_init(ks[2], (r, h * dn), dtype=dtype),
+        "wuv": dense_init(ks[3], (r, h * dv), dtype=dtype),
+        "wo": dense_init(ks[4], (h * dv, d), dtype=dtype),
+        "norm_kv": rmsnorm_init(r, dtype),
+    }
+
+
+def mla_attention(p, cfg: ArchConfig, x, positions, mask):
+    """Prefill/train path: expand latent to per-head K/V."""
+    B, S, d = x.shape
+    h = cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dn, dv = cfg.nope_head_dim, cfg.v_head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ p["wdkv"]                                   # [B,S,r+dr]
+    latent = rmsnorm(p["norm_kv"], ckv[..., :r], cfg.norm_eps)
+    k_rope = apply_rope(ckv[..., r:][:, :, None, :], positions,
+                        cfg.rope_theta)                   # [B,S,1,dr]
+    k_nope = (latent @ p["wuk"]).reshape(B, S, h, dn)
+    v = (latent @ p["wuv"]).reshape(B, S, h, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, h, dr))], -1)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    if isinstance(mask, tuple):
+        out = _attend(qf, k, v, scale, causal=(mask[0] == "causal"),
+                      window=mask[1])
+    else:
+        out = _sdpa(qf, k, v, mask, scale)
+    out = out.reshape(B, S, h * dv) @ p["wo"]
+    return out, (latent, k_rope[:, :, 0, :])
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache_lat, cache_rope, idx):
+    """Absorbed decode: score directly in latent space (the MLA memory win —
+    cache is [B, Smax, r+dr] instead of [B, Smax, H, dn+dv])."""
+    B, S, d = x.shape
+    assert S == 1
+    h = cfg.n_heads
+    r, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    dn, dv = cfg.nope_head_dim, cfg.v_head_dim
+    q = (x @ p["wq"]).reshape(B, 1, h, dn + dr)
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    q_nope, q_rope = q[..., :dn], apply_rope(q[..., dn:], pos, cfg.rope_theta)
+
+    ckv = x @ p["wdkv"]
+    latent = rmsnorm(p["norm_kv"], ckv[..., :r], cfg.norm_eps)   # [B,1,r]
+    k_rope = apply_rope(ckv[..., r:][:, :, None, :], pos,
+                        cfg.rope_theta)[:, :, 0, :]              # [B,1,dr]
+    cache_lat = jax.lax.dynamic_update_slice_in_dim(cache_lat, latent, idx, 1)
+    cache_rope = jax.lax.dynamic_update_slice_in_dim(cache_rope, k_rope, idx, 1)
+
+    wuk = p["wuk"].reshape(r, h, dn)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))                  # [B,h,r]
+    s_nope = jnp.einsum("bhr,bkr->bhk", q_abs,
+                        cache_lat.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bkd->bhk", q_rope[:, 0].astype(jnp.float32),
+                        cache_rope.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (s_nope + s_rope) * scale
+    Smax = cache_lat.shape[1]
+    mask = (jnp.arange(Smax)[None, None, :] <= idx)
+    w = jax.nn.softmax(jnp.where(mask, logits, -1e30), axis=-1)  # [B,h,k]
+    ctx = jnp.einsum("bhk,bkr->bhr", w, cache_lat.astype(jnp.float32))
+    wuv = p["wuv"].reshape(r, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, wuv.astype(jnp.float32))
+    out = out.reshape(B, 1, h * dv).astype(x.dtype) @ p["wo"]
+    return out, cache_lat, cache_rope
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, dff: int, act: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"wi": dense_init(ks[0], (d, dff), dtype=dtype),
+                "wg": dense_init(ks[1], (d, dff), dtype=dtype),
+                "wo": dense_init(ks[2], (dff, d), dtype=dtype)}
+    return {"wi": dense_init(ks[0], (d, dff), dtype=dtype),
+            "wo": dense_init(ks[1], (dff, d), dtype=dtype)}
+
+
+def mlp(p, x, act: str):
+    # activation math stays in the compute dtype (bf16): f32 pointwise here
+    # poisons the whole FFN backward into f32 — measured 2× on the per-layer
+    # grad/weight buffers of nemotron train_4k (§Perf Cell A iter 3).
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    h = x @ p["wi"]
+    h = jnp.square(jax.nn.relu(h))
+    return h @ p["wo"]

@@ -1,0 +1,434 @@
+"""Model API: build any assigned architecture from its ArchConfig.
+
+``Model`` exposes:
+  init(key)                      -> params pytree (stacked segments)
+  forward(params, batch)        -> (logits, aux_loss)
+  loss(params, batch)           -> (scalar, metrics)         [train_4k/prefill]
+  init_cache(batch)             -> decode cache pytree       [decode shapes]
+  decode_step(params, cache, tokens, idx) -> (logits, cache) [serve_step]
+  param_pspecs(mesh_axes)       -> PartitionSpec tree (FSDP×TP rules)
+  batch_specs(shape)            -> ShapeDtypeStruct inputs for the dry-run
+
+Families: dense / moe(+MLA) / vlm (cross-attn groups) / ssm / hybrid
+(Hymba global+SWA split) / audio (enc-dec).  Modality frontends are stubs —
+``batch_specs`` supplies precomputed frame/patch embeddings per the prompt.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import (AUDIO, ArchConfig, DENSE, HYBRID, MOE, SSM, SHAPES,
+                     ShapeCell, VLM)
+from .layers import causal_mask, dense_init, rmsnorm, rmsnorm_init
+from .transformer import (block_apply, block_decode, init_layer_cache,
+                          segment_apply, segment_decode, segment_init,
+                          _pdtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Seg:
+    name: str
+    n: int
+    mixer: str          # attn | mla | ssm | hybrid | xattn
+    ffn: str            # mlp | moe | none
+    cross: bool = False
+    window: int = 0
+
+
+def plan_segments(cfg: ArchConfig) -> List[Seg]:
+    fam = cfg.family
+    if fam == DENSE:
+        return [Seg("layers", cfg.n_layers, "attn", "mlp")]
+    if fam == MOE:
+        mixer = "mla" if cfg.mla else "attn"
+        segs = []
+        if cfg.first_dense_layers:
+            segs.append(Seg("dense0", cfg.first_dense_layers, mixer, "mlp"))
+        segs.append(Seg("moe", cfg.n_layers - cfg.first_dense_layers, mixer,
+                        "moe"))
+        return segs
+    if fam == SSM:
+        return [Seg("layers", cfg.n_layers, "ssm", "none")]
+    if fam == HYBRID:
+        segs, prev = [], 0
+        for i, g in enumerate(sorted(cfg.global_attn_layers)):
+            if g > prev:
+                segs.append(Seg(f"swa{i}", g - prev, "hybrid", "mlp",
+                                window=cfg.sliding_window))
+            segs.append(Seg(f"glob{i}", 1, "hybrid", "mlp", window=0))
+            prev = g + 1
+        if prev < cfg.n_layers:
+            segs.append(Seg("swa_tail", cfg.n_layers - prev, "hybrid", "mlp",
+                            window=cfg.sliding_window))
+        return segs
+    if fam == AUDIO:
+        return [Seg("encoder", cfg.n_enc_layers, "attn", "mlp"),
+                Seg("decoder", cfg.n_layers, "attn", "mlp", cross=True)]
+    if fam == VLM:
+        # handled as grouped (self×(N-1) + xattn) scan — see Model methods
+        return [Seg("self", cfg.n_layers - cfg.n_layers
+                    // cfg.cross_attn_every, "attn", "mlp"),
+                Seg("cross", cfg.n_layers // cfg.cross_attn_every, "xattn",
+                    "mlp")]
+    raise ValueError(fam)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.segs = plan_segments(cfg)
+        # set by the launcher (requires a mesh context at trace time):
+        # PartitionSpec for per-chunk CE logits [B, chunk, V] — keeps the
+        # vocab axis sharded over 'model' instead of replicating (the
+        # difference between 0.3 GB and 5 GB per chunk at vocab 152k).
+        self.logits_pspec = None
+        # PartitionSpec the unembedding matrix is gathered to before the CE
+        # scan: P(None, 'model').  Without it the chunk dot contracts over a
+        # data-sharded d and GSPMD emits a full-vocab partial-sum all-reduce
+        # per chunk (measured: 3× 5 GB buffers on qwen train_4k).
+        self.head_pspec = None
+        # PartitionSpec pinning the residual stream [B, S, d] right after
+        # the embedding gather (belt-and-braces against GSPMD propagating
+        # table shardings into activations).
+        self.act_pspec = None
+        # PartitionSpec for per-layer remat boundaries (sequence
+        # parallelism: shard S over 'model' so saved activations divide by
+        # the TP degree — §Perf Cell A lever).  Train-kind cells only.
+        self.seq_pspec = None
+        # interior spec (seq gathered, 'model' free for TP) — paired with
+        # seq_pspec; see transformer.segment_apply docstring.
+        self.gather_pspec = None
+
+    # ------------------------------------------------------------------ #
+    # init                                                                #
+    # ------------------------------------------------------------------ #
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = _pdtype(cfg)
+        keys = jax.random.split(key, len(self.segs) + 3)
+        params: Dict[str, Any] = {
+            "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model),
+                                dtype=dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1],
+                                           (cfg.d_model, cfg.vocab),
+                                           dtype=dtype)
+        if cfg.family == VLM:
+            g = cfg.cross_attn_every
+            n_groups = cfg.n_layers // g
+            sp = segment_init(keys[2], self.cfg, n_groups * (g - 1), "attn",
+                              "mlp")
+            params["self"] = jax.tree.map(
+                lambda a: a.reshape(n_groups, g - 1, *a.shape[1:]), sp)
+            params["cross"] = segment_init(keys[3], cfg, n_groups, "xattn",
+                                           "mlp")
+            return params
+        for i, s in enumerate(self.segs):
+            params[s.name] = segment_init(keys[2 + i], cfg, s.n, s.mixer,
+                                          s.ffn, s.cross)
+        if cfg.family == AUDIO:
+            params["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        return params
+
+    # ------------------------------------------------------------------ #
+    # forward (train / prefill)                                           #
+    # ------------------------------------------------------------------ #
+    def hidden(self, params, batch: Dict[str, jax.Array]):
+        """Backbone forward -> (final hidden [B,S,d], aux_loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.act_pspec is not None:
+            x = jax.lax.with_sharding_constraint(x, self.act_pspec)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family == VLM:
+            mask = ("causal", 0)
+            vision = batch["vision"]              # [B, Nv, d] (stub frontend)
+
+            def group(x, inp):
+                sp, cp = inp
+                x, a1 = segment_apply(sp, cfg, x, positions, mask, "attn",
+                                      "mlp", seq_pspec=self.seq_pspec,
+                                     gather_pspec=self.gather_pspec)
+                x, a2 = block_apply(cp, cfg, x, positions, mask, "xattn",
+                                    "mlp", kv_src=vision)
+                if self.seq_pspec is not None:
+                    x = jax.lax.with_sharding_constraint(x, self.seq_pspec)
+                return x, a1 + a2
+
+            x, auxs = jax.lax.scan(group, x, (params["self"],
+                                              params["cross"]))
+            aux += auxs.sum()
+        elif cfg.family == AUDIO:
+            frames = batch["frames"]              # [B, Se, d] (stub frontend)
+            Se = frames.shape[1]
+            enc_pos = jnp.broadcast_to(jnp.arange(Se), (B, Se))
+            enc, a1 = segment_apply(params["encoder"], cfg, frames, enc_pos,
+                                    ("full", 0), "attn", "mlp",
+                                    seq_pspec=self.seq_pspec,
+                                     gather_pspec=self.gather_pspec)
+            enc = rmsnorm(params["enc_norm"], enc, cfg.norm_eps)
+            x, a2 = segment_apply(params["decoder"], cfg, x, positions,
+                                  ("causal", 0), "attn", "mlp", kv_src=enc,
+                                  seq_pspec=self.seq_pspec,
+                                     gather_pspec=self.gather_pspec)
+            aux += a1 + a2
+        else:
+            for s in self.segs:
+                mask = None if s.mixer == "ssm" else ("causal", s.window)
+                x, a = segment_apply(params[s.name], cfg, x, positions, mask,
+                                     s.mixer, s.ffn,
+                                     seq_pspec=self.seq_pspec,
+                                     gather_pspec=self.gather_pspec)
+                aux += a
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def _head(self, params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+    def forward(self, params, batch):
+        """Full logits — small-problem/test path (O(B·S·V) memory!)."""
+        x, aux = self.hidden(params, batch)
+        return x @ self._head(params), aux
+
+    def last_logits(self, params, batch):
+        """Prefill: logits for the final position only."""
+        x, aux = self.hidden(params, batch)
+        return x[:, -1] @ self._head(params)
+
+    LOSS_CHUNK = 512
+
+    def loss(self, params, batch):
+        """Chunked CE: logits are produced [B, chunk, V] per scan step and
+        never materialised for the full sequence (vocab 152k-256k × 1M
+        tokens would be TBs — the big-vocab memory wall)."""
+        x, aux = self.hidden(params, batch)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        head = self._head(params)
+        if self.head_pspec is not None:
+            head = jax.lax.with_sharding_constraint(head, self.head_pspec)
+        xs, tgt = x[:, :-1], tokens[:, 1:]
+        n = S - 1
+        chunk = min(self.LOSS_CHUNK, n)
+        pad = (-n) % chunk
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+        valid = jnp.pad(jnp.ones((B, n), jnp.float32), ((0, 0), (0, pad)))
+        nc = (n + pad) // chunk
+        xs = xs.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+        tgt = tgt.reshape(B, nc, chunk).transpose(1, 0, 2)
+        valid = valid.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+        def body(acc, inp):
+            xc, tc, vc = inp
+            lg = (xc @ head).astype(jnp.float32)
+            if self.logits_pspec is not None:
+                lg = jax.lax.with_sharding_constraint(lg, self.logits_pspec)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, tc[..., None], -1)[..., 0]
+            return acc + ((lse - gold) * vc).sum(), None
+
+        body = jax.checkpoint(body)
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                (xs, tgt, valid))
+        ce = total / (B * n)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ #
+    # decode (serve_step)                                                 #
+    # ------------------------------------------------------------------ #
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        cache: Dict[str, Any] = {"idx": jnp.zeros((), jnp.int32)}
+        if cfg.family == VLM:
+            g = cfg.cross_attn_every
+            n_groups = cfg.n_layers // g
+            per = init_layer_cache(cfg, "attn", batch, max_len)
+            cache["self"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None, None], (n_groups, g - 1, *a.shape)).copy(), per)
+            xc = init_layer_cache(cfg, "xattn", batch, max_len,
+                                  n_kv_src=cfg.n_image_tokens)
+            cache["cross"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (n_groups, *a.shape)).copy(), xc)
+            return cache
+        for s in self.segs:
+            if s.name == "encoder":
+                continue
+            n_kv_src = 0
+            if s.cross:
+                n_kv_src = max_len * cfg.n_frames_ratio
+            per = init_layer_cache(cfg, s.mixer, batch, max_len, s.window,
+                                   n_kv_src)
+            cache[s.name] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (s.n, *a.shape)).copy(),
+                per)
+        return cache
+
+    def decode_step(self, params, cache, tokens, idx):
+        """tokens [B, 1]; idx scalar int32 (absolute position)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+
+        if cfg.family == VLM:
+            def group(x, inp):
+                sp, cp, sc, cc = inp
+                x, sc = segment_decode(sp, cfg, x, sc, idx, "attn", "mlp")
+                x, cc = block_decode(cp, cfg, x, cc, idx, "xattn", "mlp")
+                return x, (sc, cc)
+
+            x, (sc, cc) = jax.lax.scan(
+                group, x, (params["self"], params["cross"], cache["self"],
+                           cache["cross"]))
+            cache = dict(cache, self=sc, cross=cc, idx=idx + 1)
+        else:
+            new = dict(cache)
+            for s in self.segs:
+                if s.name == "encoder":
+                    continue
+                x, c = segment_decode(params[s.name], cfg, x, cache[s.name],
+                                      idx, s.mixer, s.ffn, s.window)
+                new[s.name] = c
+            new["idx"] = idx + 1
+            cache = new
+
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        return x @ head, cache
+
+    # ------------------------------------------------------------------ #
+    # dry-run input specs (no allocation)                                 #
+    # ------------------------------------------------------------------ #
+    def batch_specs(self, shape: ShapeCell) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs: Dict[str, Any] = {"tokens": tok}
+        dtype = _pdtype(cfg)
+        if cfg.family == VLM:
+            specs["vision"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), dtype)
+        if cfg.family == AUDIO:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, S * cfg.n_frames_ratio, cfg.d_model), dtype)
+        return specs
+
+    def cache_specs(self, shape: ShapeCell):
+        """ShapeDtypeStructs for the decode cache (dry-run, no alloc)."""
+        return jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, shape.seq_len))
+
+    # ------------------------------------------------------------------ #
+    # sharding rules: FSDP(data) × TP(model), pod = extra DP              #
+    # ------------------------------------------------------------------ #
+    def param_pspecs(self, mesh, serving: bool = False) -> Any:
+        """FSDP(data)×TP(model) rules.
+
+        serving=True drops the FSDP (data) factor: at serving the weights
+        must be resident (TP-sharded only) — FSDP sharding makes every
+        decode step re-all-gather the whole model (§Perf Cell B iter 1:
+        1.4 GB of all-gathers per TOKEN on stablelm decode_32k)."""
+        cfg = self.cfg
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dm, dd = sizes.get("model", 1), sizes.get("data", 1)
+
+        def spec(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+            name = names[-1] if names else ""
+            nd = leaf.ndim
+            base: List[Optional[str]]
+            if name in ("embed",):
+                # vocab over model ONLY: sharding d over data here leaks a
+                # d-sharded residual stream through the embedding gather
+                # (measured: full-batch-replicated CE dots + 5 GB partial-sum
+                # all-reduces on qwen train_4k).
+                base = ["model", None]
+            elif name in ("lm_head",):
+                base = [None, "model"]
+            elif name in ("wo", "out_proj"):
+                base = ["model", "data"]
+            elif "experts" in names and name in ("wi", "wg"):
+                base = ["model", "data", None]      # [E, d, de] — EP
+            elif "experts" in names and name == "wo":
+                base = ["model", None, "data"]      # [E, de, d]
+            elif name in ("wq", "wk", "wv", "wi", "wg", "in_proj", "wdkv",
+                          "wuk", "wuv", "router"):
+                base = ["data", "model"]
+            elif name == "conv_w":
+                base = [None, "model"]
+            else:
+                base = [None] * min(nd, 1)
+            # right-align; leading (stacked-layer) dims unsharded
+            base = [None] * (nd - len(base)) + list(base)
+            # divisibility guard (GSPMD could pad, we prefer clean shards)
+            out = []
+            for dim, ax in zip(leaf.shape, base):
+                if serving and ax == "data":
+                    ax = None
+                n = {"model": dm, "data": dd}.get(ax, 1)
+                out.append(ax if ax and dim % n == 0 else None)
+            return P(*out)
+
+        shapes = jax.eval_shape(lambda k: self.init(k),
+                                jax.random.PRNGKey(0))
+        return jax.tree_util.tree_map_with_path(spec, shapes)
+
+    def cache_pspecs(self, mesh, shape: ShapeCell):
+        """Cache sharding: batch over ALL dp axes (pod+data) when divisible;
+        else the cache sequence axis (long_500k, batch=1); kv-heads over
+        model when divisible."""
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dm = sizes.get("model", 1)
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dd = 1
+        for a in dp:
+            dd *= sizes[a]
+        dp_spec = dp if len(dp) > 1 else dp[0]
+
+        def spec(path, leaf):
+            nd = leaf.ndim
+            if nd <= 1:
+                return P()
+            # layer-stacked caches: dims [L?, B, S|N, heads?, hd?]
+            out: List[Any] = [None] * nd
+            # find batch dim: first dim equal to global_batch after leading
+            # stack dims; heuristic: dim index 1 for stacked, 0 otherwise.
+            bdim = 1 if nd >= 3 else 0
+            if leaf.shape[bdim] % dd == 0 and leaf.shape[bdim] >= dd:
+                out[bdim] = dp_spec
+            elif nd >= 3 and leaf.shape[bdim + 1] % dd == 0:
+                out[bdim + 1] = dp_spec             # shard sequence instead
+            if nd >= 4 and leaf.shape[-2] % dm == 0:
+                out[-2] = "model"                   # kv heads
+            elif nd >= 3 and out[-1] is None and leaf.shape[-1] % dm == 0:
+                out[-1] = "model"                   # latent dims (MLA)
+            return P(*out)
+
+        shapes = self.cache_specs(shape)
+        return jax.tree_util.tree_map_with_path(spec, shapes)
+
+    def batch_pspecs(self, mesh) -> Any:
+        axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+        dp = tuple(axes) if len(axes) > 1 else axes[0]
+
+        def spec(path, leaf):
+            return P(dp, *([None] * (leaf.ndim - 1)))
+
+        return spec

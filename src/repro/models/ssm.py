@@ -1,0 +1,170 @@
+"""Mamba-2 SSD (state-space duality) mixer + Hymba parallel hybrid head.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060): the
+sequence is split into chunks of Q; intra-chunk terms are computed as a
+masked "attention-like" matmul (the duality), inter-chunk terms by a scan
+over per-chunk states — so training is matmul-dominated (MXU-friendly) and
+decode is an O(1)-state recurrence (what makes ``long_500k`` tractable).
+
+Layout: heads H = expand·d_model / head_dim P, scalar A per head, shared
+B/C of size N = ssm_state (single group), depthwise causal conv over the
+(x, B, C) channels, gated output (SiLU z-branch) + D skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def ssm_init(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj emits [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), scale=0.1,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv1d: xbc [B,S,Ch], conv_w [K,Ch]."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu((out + conv_b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _split_proj(cfg: ArchConfig, proj):
+    di, n, h = cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x [B,S,H,P], dt [B,S,H] (post-softplus), A [H] (negative), Bm/Cm [B,S,N].
+    Returns y [B,S,H,P] (f32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    C_ = S // chunk
+    xr = x.reshape(B, C_, chunk, H, P).astype(jnp.float32)
+    dtr = dt.reshape(B, C_, chunk, H)
+    Br = Bm.reshape(B, C_, chunk, N).astype(jnp.float32)
+    Cr = Cm.reshape(B, C_, chunk, N).astype(jnp.float32)
+
+    dA = dtr * A[None, None, None, :]                    # [B,C,Q,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+
+    # intra-chunk (the "duality" matmul): L[i,j] = exp(cum_i - cum_j), i>=j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,C,Q,Q,H]
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(li), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)       # [B,C,Q,Q]
+    M = scores[..., None] * L                            # [B,C,Q,Q,H]
+    xdt = xr * dtr[..., None]                            # [B,C,Q,H,P]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # chunk-final states: S_c = Σ_j exp(cumQ - cum_j) B_j ⊗ (dt_j x_j)
+    decay_tail = jnp.exp(cum[:, :, -1:, :] - cum)        # [B,C,Q,H]
+    state_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                         Br, decay_tail * dtr, xr)       # [B,C,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # [B,C,H]
+
+    def scan_fn(h_prev, inp):
+        s_c, dec = inp                                   # [B,H,N,P], [B,H]
+        h_new = h_prev * dec[..., None, None] + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_before = jax.lax.scan(
+        scan_fn, h0,
+        (state_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)         # [B,C,H,N,P]
+
+    # inter-chunk: y_i += C_i · exp(cum_i) h_{chunk_start}
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cr, jnp.exp(cum), h_before)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y
+
+
+def ssm_mixer(p, cfg: ArchConfig, x):
+    """Full-sequence SSD mixer: x [B,S,d] -> (y [B,S,d], final_state)."""
+    B, S, d = x.shape
+    di, n, h, P = (cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads,
+                   cfg.ssm_head_dim)
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(B, S, h, P)
+    Bm = xbc[..., di:di + n]
+    Cm = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])                              # [h] negative
+    y = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def ssm_decode(p, cfg: ArchConfig, x, ssm_state, conv_state):
+    """One-token recurrent step.
+
+    ssm_state [B,H,N,P] f32; conv_state [B,K-1,Ch].  Returns (y, states)."""
+    B, S, d = x.shape
+    assert S == 1
+    di, n, h, P = (cfg.d_inner_ssm, cfg.ssm_state, cfg.n_ssm_heads,
+                   cfg.ssm_head_dim)
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    # conv via cached K-1 previous channel rows
+    K = cfg.ssm_conv
+    hist = jnp.concatenate([conv_state, xbc], axis=1)     # [B,K,Ch]
+    conv_out = (hist * p["conv_w"][None]).sum(1) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = hist[:, 1:]
+    xs = conv_out[..., :di].reshape(B, h, P).astype(jnp.float32)
+    Bm = conv_out[..., di:di + n].astype(jnp.float32)
+    Cm = conv_out[..., di + n:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,h]
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dtv * A[None, :])                        # [B,h]
+    new_state = (ssm_state * dA[..., None, None]
+                 + jnp.einsum("bn,bh,bhp->bhnp", Bm, dtv, xs))
+    y = jnp.einsum("bn,bhnp->bhp", Cm, new_state)
+    y = y + p["d_skip"][None, :, None] * xs
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"], new_state, new_conv_state
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    di, n = cfg.d_inner_ssm, cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_ssm_heads, n, cfg.ssm_head_dim),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+    }

@@ -1,0 +1,232 @@
+"""Model assembly for all assigned families.
+
+Blocks are pre-norm residual transformer layers whose *mixer* is GQA / MLA /
+SSD / hybrid(attn∥SSM) and whose *FFN* is dense MLP or MoE.  Layer stacks
+run under ``lax.scan`` over stacked parameter pytrees (one compiled layer
+body — keeps dry-run compiles tractable at 96-100 layers) with optional
+remat.  Heterogeneous patterns (VLM cross-attn every N, DeepSeek leading
+dense layer, Hymba global/SWA split) are expressed as separate scanned
+segments, never per-layer Python unrolling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import AUDIO, ArchConfig, DENSE, HYBRID, MOE, SSM, VLM
+from .layers import (apply_rope, causal_mask, cross_attention,
+                     cross_attn_init, dense_init, gqa_attention, gqa_decode,
+                     gqa_init, mla_attention, mla_decode, mla_init, mlp,
+                     mlp_init, rmsnorm, rmsnorm_init)
+from .moe import moe_ffn, moe_init
+from .ssm import init_ssm_cache, ssm_decode, ssm_init, ssm_mixer
+
+
+def _pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# one decoder block (mixer + ffn), family-dispatched
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ArchConfig, mixer: str, ffn: str,
+               cross: bool = False):
+    """mixer: attn|mla|ssm|hybrid|xattn ; ffn: mlp|moe|none.
+
+    ``cross=True`` adds a cross-attention sub-layer after the self mixer
+    (enc-dec decoder); mixer == "xattn" makes cross-attention the ONLY
+    mixer (VLM image-fusion layers)."""
+    dtype = _pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if mixer == "attn":
+        p["attn"] = gqa_init(ks[0], cfg, dtype)
+    elif mixer == "mla":
+        p["attn"] = mla_init(ks[0], cfg, dtype)
+    elif mixer == "ssm":
+        p["ssm"] = ssm_init(ks[0], cfg, dtype)
+    elif mixer == "hybrid":
+        p["attn"] = gqa_init(ks[0], cfg, dtype)
+        p["ssm"] = ssm_init(ks[1], cfg, dtype)
+    elif mixer == "xattn":
+        p["xattn"] = cross_attn_init(ks[0], cfg, dtype)
+    if cross and mixer != "xattn":
+        p["lnx"] = rmsnorm_init(cfg.d_model, dtype)
+        p["xattn"] = cross_attn_init(ks[3], cfg, dtype)
+    if ffn != "none":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        if ffn == "moe":
+            p["ffn"] = moe_init(ks[2], cfg, dtype)
+        else:
+            p["ffn"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                                dtype)
+    return p
+
+
+def block_apply(p, cfg: ArchConfig, x, positions, mask, mixer: str,
+                ffn: str, kv_src=None, gather_pspec=None):
+    """Full-sequence block.  Returns (x, aux_loss).
+
+    kv_src: encoder output / vision embeddings for cross paths.
+    gather_pspec: Megatron-SP placement — norms run sequence-sharded, the
+    gather happens on the NORM OUTPUT (mixer/FFN input) so the big matmuls
+    keep the model axis for TP (§Perf Cell A iter 6)."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if gather_pspec is not None:
+        h = jax.lax.with_sharding_constraint(h, gather_pspec)
+    if mixer == "attn":
+        mix, _ = gqa_attention(p["attn"], cfg, h, positions, mask)
+    elif mixer == "mla":
+        mix, _ = mla_attention(p["attn"], cfg, h, positions, mask)
+    elif mixer == "ssm":
+        mix = ssm_mixer(p["ssm"], cfg, h)
+    elif mixer == "xattn":
+        mix, _ = cross_attention(p["xattn"], cfg, h, kv_src)
+    else:  # hybrid: parallel heads, mean-fused (Hymba)
+        a, _ = gqa_attention(p["attn"], cfg, h, positions, mask)
+        s = ssm_mixer(p["ssm"], cfg, h)
+        mix = 0.5 * (a + s)
+    x = x + mix
+    if "lnx" in p:  # enc-dec decoder: cross sub-layer
+        hx = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        cx, _ = cross_attention(p["xattn"], cfg, hx, kv_src)
+        x = x + cx
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if gather_pspec is not None:
+            h2 = jax.lax.with_sharding_constraint(h2, gather_pspec)
+        if ffn == "moe":
+            gp = None
+            if gather_pspec is not None:
+                from jax.sharding import PartitionSpec as _P
+                gp = _P(gather_pspec[0], None, None)
+            y, aux = moe_ffn(p["ffn"], cfg, h2, group_pspec=gp)
+        else:
+            y = mlp(p["ffn"], h2, cfg.mlp_act)
+        x = x + y
+    return x, aux
+
+
+def block_decode(p, cfg: ArchConfig, x, cache, idx, mixer: str, ffn: str,
+                 window: int = 0):
+    """Single-token block step against this layer's cache dict."""
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        mix, ck, cv, cks, cvs = gqa_decode(
+            p["attn"], cfg, h, cache["k"], cache["v"], idx, window,
+            cache.get("ks"), cache.get("vs"))
+        cache = dict(cache, k=ck, v=cv)
+        if cks is not None:
+            cache.update(ks=cks, vs=cvs)
+    elif mixer == "mla":
+        mix, cl, cr = mla_decode(p["attn"], cfg, h, cache["lat"],
+                                 cache["rope"], idx)
+        cache = dict(cache, lat=cl, rope=cr)
+    elif mixer == "ssm":
+        mix, s, c = ssm_decode(p["ssm"], cfg, h, cache["ssm"], cache["conv"])
+        cache = dict(cache, ssm=s, conv=c)
+    elif mixer == "xattn":
+        mix, _ = cross_attention(p["xattn"], cfg, h, None,
+                                 cache=(cache["xk"], cache["xv"]))
+    else:  # hybrid
+        a, ck, cv, cks, cvs = gqa_decode(
+            p["attn"], cfg, h, cache["k"], cache["v"], idx, window,
+            cache.get("ks"), cache.get("vs"))
+        s, st, cs = ssm_decode(p["ssm"], cfg, h, cache["ssm"], cache["conv"])
+        mix = 0.5 * (a + s)
+        cache = dict(cache, k=ck, v=cv, ssm=st, conv=cs)
+        if cks is not None:
+            cache.update(ks=cks, vs=cvs)
+    x = x + mix
+    if "lnx" in p:  # enc-dec decoder: cross over cached encoder K/V
+        hx = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        cx, _ = cross_attention(p["xattn"], cfg, hx, None,
+                                cache=(cache["xk"], cache["xv"]))
+        x = x + cx
+    if ffn != "none":
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = moe_ffn(p["ffn"], cfg, h2)
+        else:
+            y = mlp(p["ffn"], h2, cfg.mlp_act)
+        x = x + y
+    return x, cache
+
+
+def init_layer_cache(cfg: ArchConfig, mixer: str, batch: int, max_len: int,
+                     window: int = 0, n_kv_src: int = 0
+                     ) -> Dict[str, jax.Array]:
+    """Static-shape cache for one layer.  n_kv_src>0 adds cross K/V slots."""
+    dtype = _pdtype(cfg)
+    cache: Dict[str, jax.Array] = {}
+    if mixer in ("attn", "hybrid"):
+        n = min(window, max_len) if window > 0 else max_len
+        kvdt = jnp.dtype(cfg.kv_cache_dtype)
+        if kvdt != jnp.int8:
+            kvdt = dtype          # non-quantised caches follow param dtype
+        cache["k"] = jnp.zeros((batch, n, cfg.n_kv_heads, cfg.hd), kvdt)
+        cache["v"] = jnp.zeros((batch, n, cfg.n_kv_heads, cfg.hd), kvdt)
+        if kvdt == jnp.int8:
+            cache["ks"] = jnp.zeros((batch, n, cfg.n_kv_heads), jnp.float32)
+            cache["vs"] = jnp.zeros((batch, n, cfg.n_kv_heads), jnp.float32)
+    if mixer == "mla":
+        cache["lat"] = jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype)
+        cache["rope"] = jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype)
+    if mixer in ("ssm", "hybrid"):
+        cache.update(init_ssm_cache(cfg, batch, dtype))
+    if n_kv_src > 0:
+        cache["xk"] = jnp.zeros((batch, n_kv_src, cfg.n_kv_heads, cfg.hd),
+                                dtype)
+        cache["xv"] = jnp.zeros((batch, n_kv_src, cfg.n_kv_heads, cfg.hd),
+                                dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# scanned homogeneous segments
+# ---------------------------------------------------------------------------
+
+def segment_init(key, cfg: ArchConfig, n: int, mixer: str, ffn: str,
+                 cross: bool = False):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, cfg, mixer, ffn, cross))(keys)
+
+
+def segment_apply(stacked, cfg: ArchConfig, x, positions, mask, mixer: str,
+                  ffn: str, kv_src=None, seq_pspec=None, gather_pspec=None):
+    """seq_pspec: PartitionSpec for the per-layer carry (sequence
+    parallelism — the SAVED remat boundaries shard over 'model', each layer
+    re-gathers; Megatron-SP pattern, the Cell-A §Perf lever).
+    gather_pspec: interior spec (seq gathered, model axis free for TP) —
+    without the explicit entry-gather GSPMD keeps activations seq-sharded
+    through the FFN and replicates the WEIGHTS instead (measured: full
+    18432×73728 gathers on nemotron, §Perf Cell A iter 5)."""
+    def body(carry, layer_p):
+        y, aux = block_apply(layer_p, cfg, carry, positions, mask, mixer,
+                             ffn, kv_src, gather_pspec=gather_pspec)
+        if seq_pspec is not None:
+            y = jax.lax.with_sharding_constraint(y, seq_pspec)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return x, auxs.sum()
+
+
+def segment_decode(stacked, cfg: ArchConfig, x, caches, idx, mixer: str,
+                   ffn: str, window: int = 0):
+    def body(carry, inp):
+        layer_p, cache = inp
+        y, cache = block_decode(layer_p, cfg, carry, cache, idx, mixer, ffn,
+                                window)
+        return y, cache
+
+    x, caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, caches

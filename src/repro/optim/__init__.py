@@ -1,0 +1,5 @@
+from .adam import (AdamWConfig, AdamState, init, apply, schedule,
+                   global_norm, zero_pspecs, state_pspecs)
+
+__all__ = ["AdamWConfig", "AdamState", "init", "apply", "schedule",
+           "global_norm", "zero_pspecs", "state_pspecs"]

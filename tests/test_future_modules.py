@@ -1,0 +1,86 @@
+"""Paper §VI future-work modules: Convolutional TM and Regression TM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import to_literals
+from repro.core.conv_tm import (ConvTMConfig, init as conv_init,
+                                predict as conv_predict,
+                                train_step as conv_step)
+from repro.core.regression_tm import (RegressionTMConfig, init as rtm_init,
+                                      predict as rtm_predict,
+                                      train_step as rtm_step)
+
+
+def _translated_motifs(n, seed=0):
+    rng = np.random.default_rng(seed)
+    motifs = np.array([
+        [[1, 1, 1], [0, 0, 0], [1, 1, 1]],
+        [[1, 0, 1], [1, 0, 1], [1, 0, 1]],
+        [[0, 1, 0], [1, 1, 1], [0, 1, 0]],
+    ], np.int8)
+    y = rng.integers(0, 3, n).astype(np.int32)
+    x = (rng.random((n, 8, 8)) < 0.05).astype(np.int8)
+    for i in range(n):
+        r, c = rng.integers(0, 6, 2)
+        x[i, r:r + 3, c:c + 3] = motifs[y[i]]
+    return x, y
+
+
+def test_conv_tm_position_invariance():
+    """ConvTM classifies motifs at RANDOM positions (flat TMs cannot —
+    measured gap > 0.4; see benchmarks/convtm_bench.py)."""
+    cfg = ConvTMConfig(img_h=8, img_w=8, patch=3, clauses=48, classes=3,
+                       T=12, s=3.0)
+    state, prng = conv_init(cfg, jax.random.PRNGKey(0))
+    x, y = _translated_motifs(640)
+    xtr, ytr, xte, yte = x[:512], y[:512], x[512:], y[512:]
+    step = jax.jit(lambda s, p, im, lb: conv_step(cfg, s, p, im, lb))
+    for ep in range(4):
+        for i in range(0, 512, 32):
+            state, prng, _ = step(state, prng, jnp.asarray(xtr[i:i + 32]),
+                                  jnp.asarray(ytr[i:i + 32]))
+    pred = np.asarray(conv_predict(cfg, state, jnp.asarray(xte)))
+    assert (pred == yte).mean() > 0.85
+
+
+def test_conv_tm_state_bounds():
+    cfg = ConvTMConfig(img_h=6, img_w=6, patch=3, clauses=16, classes=2,
+                       T=8, s=3.0)
+    state, prng = conv_init(cfg, jax.random.PRNGKey(0))
+    x, y = _translated_motifs(32)
+    x = x[:, :6, :6]
+    state, prng, _ = conv_step(cfg, state, prng, jnp.asarray(x),
+                               jnp.asarray(y % 2))
+    ta = np.asarray(state.ta)
+    assert ta.min() >= 0 and ta.max() <= cfg.tm_config().n_states - 1
+
+
+def test_regression_tm_learns_boolean_function():
+    rng = np.random.default_rng(0)
+    f = 12
+    x = (rng.random((1024, f)) < 0.5).astype(np.int8)
+    y = (0.6 * x[:, 0] + 0.3 * (x[:, 1] & x[:, 2])
+         + 0.1 * x[:, 3]).astype(np.float32)
+    xtr, ytr, xte, yte = x[:768], y[:768], x[768:], y[768:]
+    cfg = RegressionTMConfig(features=f, clauses=128, T=128, s=3.0)
+    state, prng = rtm_init(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(lambda s, p, l, t: rtm_step(cfg, s, p, l, t))
+    for ep in range(10):
+        for i in range(0, 768, 32):
+            state, prng, _ = step(state, prng,
+                                  to_literals(jnp.asarray(xtr[i:i + 32])),
+                                  jnp.asarray(ytr[i:i + 32]))
+    pred = np.asarray(rtm_predict(cfg, state,
+                                  to_literals(jnp.asarray(xte))))
+    mae = np.abs(pred - yte).mean()
+    base = np.abs(yte.mean() - yte).mean()
+    assert mae < base * 0.8, (mae, base)
+
+
+def test_regression_tm_prediction_range():
+    cfg = RegressionTMConfig(features=8, clauses=32, T=32)
+    state, prng = rtm_init(cfg, jax.random.PRNGKey(0))
+    lits = to_literals(jnp.ones((4, 8), jnp.int8))
+    p = np.asarray(rtm_predict(cfg, state, lits))
+    assert (p >= 0).all() and (p <= 1).all()

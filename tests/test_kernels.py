@@ -1,0 +1,130 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes/dtypes.  All TM kernels are integer — asserts are EXACT
+equality, not allclose."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.booleanize import pack_literals
+from repro.kernels import (class_sum_op, clause_eval_op,
+                           packed_clause_eval_op, ta_update_op, tm_infer_op)
+from repro.kernels import ref
+
+SHAPES = [
+    (1, 64, 100),       # single datapoint (edge inference regime)
+    (8, 128, 256),      # tile-exact
+    (16, 300, 500),     # remainders everywhere
+    (5, 257, 1023),     # prime-ish
+]
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(42)
+
+
+def _mk(rng, B, C, L, inc_p=0.06):
+    lit = jnp.asarray((rng.random((B, L)) < 0.5).astype(np.int8))
+    inc = jnp.asarray((rng.random((C, L)) < inc_p).astype(np.int8))
+    inc = inc.at[min(3, C - 1)].set(0)          # an empty clause
+    return lit, inc
+
+
+@pytest.mark.parametrize("B,C,L", SHAPES)
+@pytest.mark.parametrize("eval_mode", [False, True])
+def test_clause_eval_matches_oracle(rng, B, C, L, eval_mode):
+    lit, inc = _mk(rng, B, C, L)
+    got = clause_eval_op(lit, inc, eval_mode=eval_mode)
+    want = ref.clause_eval_ref(lit, inc, eval_mode=eval_mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,C,L", SHAPES)
+def test_class_sum_matches_oracle(rng, B, C, L):
+    cl = jnp.asarray((rng.random((B, C)) < 0.3).astype(np.int8))
+    w = jnp.asarray(rng.integers(-2047, 2048, (7, C)).astype(np.int32))
+    got = class_sum_op(cl, w)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.class_sum_ref(cl, w)))
+
+
+@pytest.mark.parametrize("B,C,L", SHAPES)
+@pytest.mark.parametrize("eval_mode", [False, True])
+def test_fused_tm_infer_matches_oracle(rng, B, C, L, eval_mode):
+    lit, inc = _mk(rng, B, C, L)
+    w = jnp.asarray(rng.integers(-7, 8, (10, C)).astype(np.int32))
+    got = tm_infer_op(lit, inc, w, eval_mode=eval_mode)
+    want = ref.tm_infer_ref(lit, inc, w, eval_mode=eval_mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,C,L", SHAPES)
+@pytest.mark.parametrize("eval_mode", [False, True])
+def test_packed_clause_matches_oracle_and_unpacked(rng, B, C, L, eval_mode):
+    lit, inc = _mk(rng, B, C, L)
+    pl_, pi = pack_literals(lit), pack_literals(inc)
+    got = packed_clause_eval_op(pl_, pi, eval_mode=eval_mode)
+    want_packed = ref.packed_clause_eval_ref(pl_, pi, eval_mode=eval_mode)
+    want_dense = ref.clause_eval_ref(lit, inc, eval_mode=eval_mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_packed))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_dense))
+
+
+@pytest.mark.parametrize("C,L,B", [(128, 256, 1), (256, 512, 4),
+                                   (384, 768, 9)])
+@pytest.mark.parametrize("boost", [True, False])
+def test_ta_update_matches_oracle(rng, C, L, B, boost):
+    ta = jnp.asarray(rng.integers(0, 256, (C, L)).astype(np.int32))
+    lit = jnp.asarray((rng.random((B, L)) < 0.5).astype(np.int8))
+    cl = jnp.asarray((rng.random((B, C)) < 0.3).astype(np.int8))
+    t1 = jnp.asarray((rng.random((B, C)) < 0.2).astype(np.int8))
+    t2 = jnp.asarray(((rng.random((B, C)) < 0.2)
+                      & (np.asarray(t1) == 0)).astype(np.int8))
+    lm = jnp.ones((L,), jnp.int32).at[L - 11:].set(0)
+    got = ta_update_op(ta, lit, cl, t1, t2, lm, seed=3, p_ta=6554,
+                       boost=boost)
+    want = ref.ta_update_ref(ta, lit, cl, t1, t2, lm, seed=3, p_ta=6554,
+                             boost=boost)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # masked literal columns never move
+    np.testing.assert_array_equal(np.asarray(got)[:, L - 11:],
+                                  np.asarray(ta)[:, L - 11:])
+
+
+def test_ta_update_bounds(rng):
+    """TA states stay in [0, 2^L_TA-1] even under saturating feedback."""
+    C, L, B = 128, 256, 8
+    ta = jnp.asarray(rng.integers(0, 256, (C, L)).astype(np.int32))
+    ta = ta.at[0].set(255).at[1].set(0)
+    lit = jnp.ones((B, L), jnp.int8)
+    cl = jnp.ones((B, C), jnp.int8)
+    t1 = jnp.ones((B, C), jnp.int8)
+    t2 = jnp.zeros((B, C), jnp.int8)
+    lm = jnp.ones((L,), jnp.int32)
+    out = np.asarray(ta_update_op(ta, lit, cl, t1, t2, lm, seed=0,
+                                  p_ta=6554, boost=True))
+    assert out.min() >= 0 and out.max() <= 255
+    assert (out[0] == 255).all()     # saturated high stays
+
+
+def test_tm_pallas_backend_equals_jnp(rng):
+    """kernels wired as TMConfig.compute_backend='pallas' — bit-exact vs
+    the jnp path at the TM level (clause outs + class sums)."""
+    import dataclasses
+    import jax
+    from repro.core import COALESCED, TMConfig, init_state, to_literals
+    from repro.core.clause import class_sums
+
+    cfg_j = TMConfig(tm_type=COALESCED, features=50, clauses=40, classes=5,
+                     T=16, s=4.0, prng_backend="threefry",
+                     compute_backend="jnp")
+    cfg_p = dataclasses.replace(cfg_j, compute_backend="pallas")
+    state = init_state(cfg_j, jax.random.PRNGKey(0))
+    lits = to_literals(jnp.asarray(
+        (rng.random((16, 50)) < 0.4).astype(np.int8)))
+    for ev in (False, True):
+        sj, cj = class_sums(cfg_j, state, lits, eval_mode=ev)
+        sp, cp = class_sums(cfg_p, state, lits, eval_mode=ev)
+        np.testing.assert_array_equal(np.asarray(sj), np.asarray(sp))
+        np.testing.assert_array_equal(np.asarray(cj), np.asarray(cp))

@@ -1,0 +1,149 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (COALESCED, PRNG, TMConfig, VANILLA, init_state,
+                        ta_actions, to_literals)
+from repro.core.clause import clause_outputs_logical, clause_outputs_matmul
+from repro.core.feedback import select_clauses, train_step
+from repro.core.prng import lfsr_step, make_cluster, _TAPS
+
+SMALL = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def tm_problem(draw):
+    f = draw(st.integers(4, 24))
+    c = draw(st.integers(2, 16))
+    h = draw(st.integers(2, 5))
+    b = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return f, c, h, b, seed
+
+
+@given(tm_problem())
+@SMALL
+def test_matmul_clause_path_equals_logical_oracle(prob):
+    """The MXU recast is EXACTLY the Eq-1 AND-chain, for any shapes."""
+    f, c, h, b, seed = prob
+    rng = np.random.default_rng(seed)
+    cfg = TMConfig(tm_type=COALESCED, features=f, clauses=c, classes=h,
+                   T=8, s=3.0, prng_backend="threefry")
+    lit = jnp.asarray((rng.random((b, 2 * f)) < 0.5).astype(np.int8))
+    inc = jnp.asarray((rng.random((c, 2 * f)) < 0.2))
+    for ev in (False, True):
+        a = clause_outputs_matmul(cfg, inc, lit, ev)
+        o = clause_outputs_logical(cfg, inc, lit, ev)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(o))
+
+
+@given(tm_problem())
+@SMALL
+def test_ta_states_always_in_bounds_after_training(prob):
+    f, c, h, b, seed = prob
+    rng = np.random.default_rng(seed)
+    cfg = TMConfig(tm_type=COALESCED, features=f, clauses=c, classes=h,
+                   T=8, s=3.0, ta_bits=6, prng_backend="threefry")
+    state = init_state(cfg, jax.random.PRNGKey(seed))
+    prng = PRNG.create(cfg, seed)
+    x = jnp.asarray((rng.random((b, f)) < 0.5).astype(np.int8))
+    y = jnp.asarray(rng.integers(0, h, b).astype(np.int32))
+    state, prng, _ = train_step(cfg, state, prng, (to_literals(x), y),
+                                "batched", 1)
+    ta = np.asarray(state.ta)
+    assert ta.min() >= 0 and ta.max() <= cfg.n_states - 1
+    if cfg.tm_type == COALESCED:
+        w = np.asarray(state.weights)
+        assert np.abs(w).max() <= cfg.weight_clip
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 500))
+@SMALL
+def test_select_probability_integer_exact(seed, T):
+    """Alg 3 fixed-point comparison == closed-form (T∓csum)/2T decision."""
+    rng = np.random.default_rng(seed)
+    cfg = TMConfig(T=min(T, 500), s=4.0, features=8, clauses=16, classes=2)
+    csum = int(rng.integers(-2 * cfg.T, 2 * cfg.T))
+    r = jnp.asarray(rng.integers(0, 1 << cfg.rand_bits, 16, dtype=np.uint32))
+    for y_c in (0, 1):
+        got = np.asarray(select_clauses(cfg, jnp.asarray(csum),
+                                        jnp.asarray(y_c), r))
+        cs = np.clip(csum, -cfg.T, cfg.T)
+        p_num = (cfg.T - cs) if y_c == 1 else (cfg.T + cs)
+        want = (np.asarray(r).astype(np.int64) * 2 * cfg.T
+                < (p_num << cfg.rand_bits)).astype(np.int32)
+        np.testing.assert_array_equal(got, want)
+
+
+@given(st.sampled_from(sorted(_TAPS)), st.integers(1, 2**31 - 1))
+@SMALL
+def test_lfsr_is_maximal_length(bits, seed):
+    """Galois LFSR with our tap tables has period 2^L − 1 (m-sequence)."""
+    if bits > 16:
+        return  # too slow to cycle exhaustively
+    state0 = np.uint32(seed & ((1 << bits) - 1)) or np.uint32(1)
+    s = jnp.asarray([state0], jnp.uint32)
+    seen_start = int(s[0])
+    period = 0
+    x = s
+    for _ in range(2 ** bits):
+        x = lfsr_step(x, bits)
+        period += 1
+        if int(x[0]) == seen_start:
+            break
+    assert period == 2 ** bits - 1, (bits, period)
+
+
+@given(st.integers(0, 2**31 - 1))
+@SMALL
+def test_empty_clause_semantics(seed):
+    """All-exclude clause: fires in training mode, silent in eval mode."""
+    rng = np.random.default_rng(seed)
+    cfg = TMConfig(features=6, clauses=4, classes=2, T=4, s=3.0)
+    lit = jnp.asarray((rng.random((3, 12)) < 0.5).astype(np.int8))
+    inc = jnp.zeros((4, 12), bool)
+    train = clause_outputs_logical(cfg, inc, lit, eval_mode=False)
+    evalm = clause_outputs_logical(cfg, inc, lit, eval_mode=True)
+    assert np.asarray(train).all()
+    assert not np.asarray(evalm).any()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 10))
+@SMALL
+def test_negated_class_never_target(seed, h):
+    from repro.core.feedback import negated_class
+    rng = np.random.default_rng(seed)
+    tgt = jnp.asarray(int(rng.integers(0, h)))
+    rands = jnp.asarray(rng.integers(0, 2**16, 64, dtype=np.uint32))
+    neg = np.asarray(jax.vmap(lambda r: negated_class(h, tgt, r))(rands))
+    assert (neg != int(tgt)).all()
+    assert (neg >= 0).all() and (neg < h).all()
+
+
+@given(st.integers(0, 2**31 - 1))
+@SMALL
+def test_dtm_padded_regions_inert(seed):
+    """Padded TA columns/clause rows/classes never influence results and
+    never receive updates (Fig 6 mask semantics)."""
+    from repro.core import DTMEngine, TileConfig
+    rng = np.random.default_rng(seed)
+    tile = TileConfig(x=32, y=16, m=16, n=4, max_features=48,
+                      max_clauses=64, max_classes=8)
+    eng = DTMEngine(tile)
+    cfg = TMConfig(tm_type=COALESCED, features=20, clauses=24, classes=3,
+                   T=8, s=3.0, prng_backend="threefry")
+    prog = eng.program(cfg, jax.random.PRNGKey(seed))
+    x = jnp.asarray((rng.random((8, 20)) < 0.5).astype(np.int8))
+    y = jnp.asarray(rng.integers(0, 3, 8).astype(np.int32))
+    lits = eng.pad_features(x, cfg)
+    prng = PRNG.create(cfg, seed)
+    new_prog, _, _ = eng.train_step(prog, prng, lits, y)
+    ta0, ta1 = np.asarray(prog.ta), np.asarray(new_prog.ta)
+    lm = np.asarray(prog.l_mask) == 0
+    cm = np.asarray(prog.cl_mask) == 0
+    np.testing.assert_array_equal(ta1[:, lm], ta0[:, lm])   # padded literals
+    np.testing.assert_array_equal(ta1[cm, :], ta0[cm, :])   # padded clauses
+    sums, _ = eng.infer(new_prog, lits)
+    assert (np.asarray(jnp.argmax(sums, -1)) < 3).all()     # padded classes

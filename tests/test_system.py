@@ -1,0 +1,92 @@
+"""End-to-end behaviour tests for the DTM system (paper-level claims).
+
+These validate the *relative* paper claims on synthetic surrogates
+(DESIGN.md §6): both TM types learn; sequential (paper-faithful) and
+batched (scale) modes converge; LFSR-backend training works; the clause-
+skip statistic grows as the model converges (Fig 7 mechanism).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (COALESCED, TMConfig, TsetlinMachine, VANILLA)
+from repro.data import make_bool_dataset, BoolTaskSpec
+
+SPEC = BoolTaskSpec("test", features=64, classes=4, motifs_per_class=4,
+                    motif_bits=8, active_motifs=2, background_p=0.03,
+                    flip_p=0.02, seed=99)
+
+
+def _data(n=768):
+    x, y = make_bool_dataset(SPEC, n)
+    return x[:512], y[:512], x[512:], y[512:]
+
+
+@pytest.mark.parametrize("tm_type", [COALESCED, VANILLA])
+@pytest.mark.parametrize("mode", ["batched", "sequential"])
+def test_tm_learns(tm_type, mode):
+    xtr, ytr, xte, yte = _data()
+    cfg = TMConfig(tm_type=tm_type, features=SPEC.features, clauses=32,
+                   classes=SPEC.classes, T=16, s=4.0,
+                   prng_backend="threefry")
+    tm = TsetlinMachine(cfg, seed=0, mode=mode, chunk=8)
+    tm.fit(xtr, ytr, epochs=2, batch=32)
+    acc = tm.score(xte, yte)
+    assert acc > 0.85, (tm_type, mode, acc)
+
+
+def test_lfsr_backend_learns():
+    xtr, ytr, xte, yte = _data()
+    cfg = TMConfig(tm_type=COALESCED, features=SPEC.features, clauses=32,
+                   classes=SPEC.classes, T=16, s=4.0, prng_backend="lfsr",
+                   lfsr_bits=16, seed_refresh=True)
+    tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+    tm.fit(xtr, ytr, epochs=2, batch=32)
+    assert tm.score(xte, yte) > 0.8
+
+
+def test_clause_skip_grows_with_convergence():
+    """Fig 7 mechanism: feedback (and thus group activity) shrinks as the
+    model converges, so skippable group fraction rises."""
+    xtr, ytr, _, _ = _data()
+    cfg = TMConfig(tm_type=COALESCED, features=SPEC.features, clauses=64,
+                   classes=SPEC.classes, T=16, s=4.0,
+                   prng_backend="threefry")
+    tm = TsetlinMachine(cfg, seed=0, mode="sequential")
+    hist = tm.fit(xtr, ytr, epochs=6, batch=64)
+    first, last = hist[0], hist[-1]
+    assert last["selected_clauses"] < first["selected_clauses"]
+    assert last["group_skip_frac"] >= first["group_skip_frac"]
+
+
+def test_weight_bits_matter():
+    """Fig 14 mechanism: very low weight precision hurts accuracy."""
+    xtr, ytr, xte, yte = _data()
+
+    def run(bits):
+        cfg = TMConfig(tm_type=COALESCED, features=SPEC.features, clauses=32,
+                       classes=SPEC.classes, T=64, s=4.0, weight_bits=bits,
+                       prng_backend="threefry")
+        tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+        tm.fit(xtr, ytr, epochs=3, batch=32)
+        return tm.score(xte, yte)
+
+    assert run(12) >= run(2) - 0.05  # low precision no better than 12-bit
+
+
+def test_tm_head_on_backbone_features():
+    """DESIGN.md §5: CoTM readout over float backbone features."""
+    from repro.core import TMHead
+    rng = np.random.default_rng(0)
+    protos = rng.standard_normal((3, 16))
+    y = rng.integers(0, 3, 512).astype(np.int32)
+    feats = protos[y] + 0.3 * rng.standard_normal((512, 16))
+    head = TMHead.create(16, 3, calib=feats[:128], therm_bits=4, clauses=32,
+                         T=16, s=4.0)
+    for ep in range(3):
+        for i in range(0, 384, 32):
+            head.train_batch(jnp.asarray(feats[i:i + 32], jnp.float32),
+                             jnp.asarray(y[i:i + 32]))
+    pred = np.asarray(head.predict(jnp.asarray(feats[384:], jnp.float32)))
+    assert (pred == y[384:]).mean() > 0.85
