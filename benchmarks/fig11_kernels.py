@@ -17,13 +17,9 @@ from repro.core import COALESCED, TMConfig
 from repro.core.booleanize import pack_literals
 from repro.kernels import (clause_eval_op, packed_clause_eval_op,
                            tm_infer_op)
-from repro.launch.mesh import V5E
+from repro.launch.tm_perf import roofline_s as _roofline_s
 
 from .common import FAST, row, time_call
-
-
-def _roofline_s(flops: float, bytes_: float) -> float:
-    return max(flops / V5E.peak_flops_bf16, bytes_ / V5E.hbm_bw)
 
 
 def run() -> None:

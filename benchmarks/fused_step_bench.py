@@ -1,0 +1,111 @@
+"""Fused vs. unfused training-step wall-clock across the Fig-11 tile sweep.
+
+Compares three implementations of the training-step front half (clause
+eval -> class sums -> Alg-3 feedback selection for both rounds):
+
+* ``fused``    — ONE Pallas launch (kernels/fused_step.py), clause matrix
+                 consumed in VMEM, selection masks emitted in-kernel;
+* ``unfused``  — the seed pipeline: two Pallas launches with the [B, C]
+                 clause matrix materialised in HBM between them, plus a jnp
+                 selection pass;
+* ``ref``      — the pure-jnp oracle (the CPU fast path).
+
+On this CPU container the Pallas columns are interpret-mode numbers
+(relative only); the jnp ``ref`` column is the meaningful CPU wall-clock.
+On TPU the same harness measures the HBM-round-trip win directly.
+
+Writes ``BENCH_fused.json`` (machine-readable: wall-clock + ops/s per path
+per shape) for the nightly CI artifact — the PR-over-PR perf trajectory.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.fused_step_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fused_step_op, unfused_step_op
+from repro.launch.tm_perf import train_front_costs
+
+from .common import FAST, row, time_call
+
+OUT_PATH = os.environ.get("BENCH_FUSED_PATH", "BENCH_fused.json")
+
+# Fig-11-style sweep: (tag, B, features, clauses, classes).  DTM-S/M/L-ish
+# model sizes plus the edge single-datapoint regime.
+SWEEP = [
+    ("edge_b1", 1, 64, 128, 4),
+    ("dtm_s", 8, 64, 128, 4),
+    ("dtm_m", 16, 256, 256, 10),
+    ("dtm_l", 32, 784, 512, 10),
+]
+
+
+def _mk(rng, B, f, C, H):
+    L = 2 * f
+    lit = jnp.asarray((rng.random((B, L)) < 0.5).astype(np.int8))
+    inc = jnp.asarray((rng.random((C, L)) < 0.05).astype(np.int8))
+    w = jnp.asarray(rng.integers(-15, 16, (H, C)).astype(np.int32))
+    lab = jnp.asarray(rng.integers(0, H, B).astype(np.int32))
+    neg = jnp.asarray((lab + 1) % H)
+    r1 = jnp.asarray(rng.integers(0, 1 << 16, (B, C), dtype=np.uint32))
+    r2 = jnp.asarray(rng.integers(0, 1 << 16, (B, C), dtype=np.uint32))
+    clm = jnp.ones((C,), jnp.int32)
+    hm = jnp.ones((H,), jnp.int32)
+    T = jnp.asarray(16, jnp.int32)
+    wf = jnp.asarray(0, jnp.int32)
+    return (lit, inc, w, lab, neg, r1, r2, clm, hm, T, wf), L
+
+
+def run(smoke: bool | None = None, out_path: str = OUT_PATH) -> dict:
+    smoke = FAST if smoke is None else smoke
+    sweep = SWEEP[:2] if smoke else SWEEP
+    iters = 1 if smoke else 3
+    rng = np.random.default_rng(0)
+    entries = []
+    for tag, B, f, C, H in sweep:
+        prob, L = _mk(rng, B, f, C, H)
+        costs = train_front_costs(B, L, C, H)
+        flops = costs["flops"]
+        paths = {
+            "fused": lambda p=prob: fused_step_op(*p),
+            "unfused": lambda p=prob: unfused_step_op(*p),
+            "ref": lambda p=prob: fused_step_op(*p, backend="ref"),
+        }
+        for path, fn in paths.items():
+            us = time_call(fn, warmup=1, iters=iters)
+            ops_per_s = flops / (us * 1e-6)
+            rl = costs["fused_roofline_s" if path == "fused"
+                       else "unfused_roofline_s"]
+            row(f"fused_step/{tag}/{path}", us,
+                f"ops_per_s={ops_per_s:.3e};roofline_s={rl:.2e}")
+            entries.append({
+                "name": tag, "path": path,
+                "shape": {"B": B, "features": f, "clauses": C, "classes": H},
+                "us_per_call": us, "ops": flops, "ops_per_s": ops_per_s,
+                "v5e_roofline_s": rl,
+            })
+    payload = {
+        "benchmark": "fused_step",
+        "smoke": bool(smoke),
+        "interpret_mode_pallas": True,   # relative numbers off-TPU
+        "entries": entries,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"# wrote {out_path} ({len(entries)} entries)")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep, single timing iteration")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke or None, out_path=args.out)

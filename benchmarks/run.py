@@ -1,24 +1,39 @@
 """Benchmark harness entry — one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run``  (FAST=1 for quick sweeps)
-Prints ``name,us_per_call,derived`` CSV.
+``PYTHONPATH=src python -m benchmarks.run [--smoke]``
+(``--smoke`` = FAST=1 sizes — what nightly CI runs; fused_step_bench
+additionally drops to a single timing iteration.  ``FAST=1`` env still
+works for ad-hoc quick sweeps.)
+
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_fused.json``
+(machine-readable fused-vs-unfused training-step numbers — uploaded as a
+CI artifact to track the perf trajectory PR-over-PR).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunk sizes + single timing iteration")
+    args = ap.parse_args()
+    if args.smoke:
+        # must land before benchmark modules import benchmarks.common
+        os.environ["FAST"] = "1"
+
     from . import (fig3_opcounts, fig7_clause_skip, fig11_kernels,
-                   fig14_weight_bits, fig15_lfsr, roofline_bench,
-                   table1_accuracy, table2_kws6, table2_supp,
-                   convtm_bench)
+                   fig14_weight_bits, fig15_lfsr, fused_step_bench,
+                   roofline_bench, table1_accuracy, table2_kws6,
+                   table2_supp, convtm_bench)
     print("name,us_per_call,derived")
     for mod in (table1_accuracy, table2_kws6, table2_supp, fig3_opcounts,
                 fig7_clause_skip, fig11_kernels, fig14_weight_bits,
-                fig15_lfsr, convtm_bench, roofline_bench):
+                fig15_lfsr, convtm_bench, roofline_bench, fused_step_bench):
         try:
             mod.run()
         except Exception:

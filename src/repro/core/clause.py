@@ -63,13 +63,46 @@ def vanilla_polarity(clauses_per_class: int) -> jax.Array:
     return jnp.where(idx % 2 == 0, 1, -1).astype(jnp.int32)
 
 
-def clause_outputs_pallas(
+def clause_outputs_mxu_kernel(
     cfg: TMConfig, include: jax.Array, literals: jax.Array, eval_mode: bool
 ) -> jax.Array:
-    """Pallas kernel path (MXU-tiled; interpret-mode on CPU)."""
+    """MXU-tiled Pallas kernel path (interpret-mode on CPU)."""
     from repro.kernels import clause_eval_op
     return clause_eval_op(literals.astype(jnp.int8),
                           include.astype(jnp.int8), eval_mode=eval_mode)
+
+
+def clause_outputs_packed(
+    cfg: TMConfig, include: jax.Array, literals: jax.Array, eval_mode: bool
+) -> jax.Array:
+    """Bit-packed VPU kernel path — 32 literals per word, no MXU work.
+    The right datapath for the edge single-datapoint regime (Fig 11)."""
+    from repro.kernels import packed_clause_eval_op
+    from .booleanize import pack_literals
+    packed_lit = pack_literals(literals.astype(jnp.int8))
+    packed_inc = pack_literals(include.astype(jnp.int8))
+    return packed_clause_eval_op(packed_lit, packed_inc, eval_mode=eval_mode)
+
+
+def clause_fn_for_path(path: str):
+    """Map a kernels.select_path() decision onto a clause-eval callable."""
+    from repro import kernels
+    if path == kernels.PATH_PACKED:
+        return clause_outputs_packed
+    if path == kernels.PATH_REF:
+        return clause_outputs_matmul
+    return clause_outputs_mxu_kernel
+
+
+def clause_outputs_pallas(
+    cfg: TMConfig, include: jax.Array, literals: jax.Array, eval_mode: bool
+) -> jax.Array:
+    """Dispatcher-selected kernel path (paper Fig 11 crossover): the
+    bit-packed VPU kernel for edge-sized batches, the MXU matmul kernel for
+    throughput batches (both interpret-mode on CPU)."""
+    from repro import kernels
+    path = kernels.select_path(cfg, batch=literals.shape[0])
+    return clause_fn_for_path(path)(cfg, include, literals, eval_mode)
 
 
 def class_sums(

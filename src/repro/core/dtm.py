@@ -26,10 +26,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+# Fig 6d: remainder class sums pinned to min (shared with the kernels)
+from repro.kernels.ref import NEG_INF_SUM as _NEG_INF_SUM
 from .prng import PRNG
 from .types import COALESCED, TMConfig, TileConfig, VANILLA
-
-_NEG_INF_SUM = -(1 << 24)  # Fig 6d: remainder class sums pinned to min
 
 
 @jax.tree_util.register_pytree_node_class
@@ -71,9 +72,38 @@ class DTMProgram:
 
 
 class DTMEngine:
-    """Compiled-once tiled TM executor (inference + training)."""
+    """Compiled-once tiled TM executor (inference + training).
 
-    def __init__(self, tile: TileConfig, rand_bits: int = 16):
+    ``backend`` selects the compute datapath, resolved ONCE at construction
+    (so jit caches stay size-1 across model reprogramming):
+
+    * ``"auto"``   — dispatcher decision: the fused Pallas training-step
+      kernel + TA-update kernel when the kernels compile natively
+      (TPU / ``REPRO_INTERPRET=0``), the bit-equivalent pure-jnp reference
+      otherwise (interpret-mode Pallas is orders of magnitude slower than
+      jnp on CPU — see kernels/ops.py).  NOTE the engine's training path
+      only has fused-kernel and jnp-ref implementations, so
+      ``REPRO_KERNEL_PATH`` values other than ``ref`` keep the kernel
+      backend; ``mxu``/``packed_vpu`` affect the eval/inference dispatch
+      (clause_outputs_pallas), not the train step.
+    * ``"kernel"`` — force the Pallas path (interpret-mode on CPU; used by
+      the parity tests).
+    * ``"ref"``    — force the jnp reference path.
+    """
+
+    def __init__(self, tile: TileConfig, rand_bits: int = 16,
+                 backend: str = "auto"):
+        assert backend in ("auto", "kernel", "ref"), backend
+        if backend == "auto":
+            # any kernel path (fused or a forced REPRO_KERNEL_PATH variant)
+            # keeps the Pallas backend; only an explicit "ref" override or
+            # interpret mode (CPU) drops to the jnp reference.
+            path = kops.select_path(None, batch=None, training=True)
+            use_kernel = (path != kops.PATH_REF
+                          and not kops.resolve_interpret())
+            backend = "kernel" if use_kernel else "ref"
+        self.backend = backend
+        self._kb = "pallas" if backend == "kernel" else "ref"
         self.tile = tile
         self.rand_bits = rand_bits
         self.L, self.R, self.H = tile.padded_dims()
@@ -143,17 +173,26 @@ class DTMEngine:
     # ------------------------------------------------------------------ #
     def _infer_impl(self, prog: DTMProgram, lits: jax.Array):
         include = (prog.ta >= (prog.n_states >> 1)).astype(jnp.int32)  # [R,L]
-        viol = jax.lax.dot_general(
-            (1 - lits.astype(jnp.int32)) * prog.l_mask[None, :], include,
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.int32)                          # [B,R]
-        nonempty = (include * prog.l_mask[None, :]).max(axis=1)
-        cl = ((viol == 0) & (nonempty == 1)).astype(jnp.int32)
-        cl = cl * prog.cl_mask[None, :]
-        sums = jax.lax.dot_general(
-            cl, prog.weights,
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.int32)                          # [B,H]
+        if self.backend == "kernel":
+            # unfused MXU pair — the dispatcher's "mxu" eval path.  Padded
+            # TA columns are zero, so include already honours l_mask.
+            cl = kops.clause_eval_op(lits.astype(jnp.int8),
+                                     include.astype(jnp.int8),
+                                     eval_mode=True)
+            cl = cl * prog.cl_mask[None, :]
+            sums = kops.class_sum_op(cl, prog.weights)
+        else:
+            viol = jax.lax.dot_general(
+                (1 - lits.astype(jnp.int32)) * prog.l_mask[None, :], include,
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)                      # [B,R]
+            nonempty = (include * prog.l_mask[None, :]).max(axis=1)
+            cl = ((viol == 0) & (nonempty == 1)).astype(jnp.int32)
+            cl = cl * prog.cl_mask[None, :]
+            sums = jax.lax.dot_general(
+                cl, prog.weights,
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)                      # [B,H]
         sums = jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
         return sums, cl
 
@@ -170,78 +209,75 @@ class DTMEngine:
     # ------------------------------------------------------------------ #
     def _train_impl(self, prog: DTMProgram, prng: PRNG, lits: jax.Array,
                     labels: jax.Array):
+        """One batched train step through the fused dispatcher path.
+
+        Front half (clause eval → class sums → Alg-3 feedback selection for
+        the target and negated rounds) is ONE fused kernel launch — the
+        ``[B, R]`` clause matrix never round-trips through HBM between
+        stages.  Back half is the in-kernel-PRNG TA-update kernel over both
+        feedback rounds, plus jnp weight/stat reductions.  ``backend="ref"``
+        runs the bit-equivalent jnp oracles through the same structure.
+        """
         B = lits.shape[0]
         n_cls = prog.h_mask.sum()
-        include_b = prog.ta >= (prog.n_states >> 1)                    # [R,L] bool
 
-        # training-mode clause outputs: empty (or padded) clauses fire=1,
-        # then cl_mask zeroes padded rows (Fig 6b).
-        viol = jax.lax.dot_general(
-            (1 - lits.astype(jnp.int32)) * prog.l_mask[None, :],
-            include_b.astype(jnp.int32),
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        cl = (viol == 0).astype(jnp.int32) * prog.cl_mask[None, :]     # [B,R]
-        sums = jax.lax.dot_general(
-            cl, prog.weights,
-            dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        sums_m = jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
+        # batched random draws (one stream position per datapoint)
+        prng, c_rand = prng.bits((B,))
+        prng, sel_rand = prng.bits((2, B, self.R))
+        prng, seed_bits = prng.bits((2,))
+        # seed_bits are rand_bits wide — shift by rand_bits (not a fixed 16)
+        # so the composed seed keeps 2*rand_bits of entropy
+        ta_seed = (seed_bits[0] << jnp.uint32(self.rand_bits)) | seed_bits[1]
+
+        # negated class among the *valid* classes
+        rn = (c_rand % (jnp.maximum(n_cls - 1, 1).astype(jnp.uint32))
+              ).astype(jnp.int32)
+        neg = jnp.where(rn < labels, rn, rn + 1)                       # [B]
+
+        include = (prog.ta >= (prog.n_states >> 1)).astype(jnp.int8)   # [R,L]
+        cl, sums_m, sel_lab, sel_neg = kops.fused_step_op(
+            lits.astype(jnp.int8), include, prog.weights, labels, neg,
+            sel_rand[0], sel_rand[1], prog.cl_mask, prog.h_mask,
+            prog.T, prog.w_frozen.astype(jnp.int32),
+            rand_bits=self.rand_bits, backend=self._kb)
         correct = (jnp.argmax(sums_m, -1) == labels).sum()
 
-        def per_point(carry, xs):
-            prng, acc_ta, acc_w, acc_sel = carry
-            lit, lab, sm, out = xs
-            prng, c_rand = prng.bits((1,))
-            prng, sel_rand = prng.bits((2, self.R))
-            prng, ta_rand = prng.bits((2, self.R, self.L))
-            # negated class among the *valid* classes
-            rn = (c_rand[0] % jnp.uint32(jnp.maximum(n_cls - 1, 1))
-                  ).astype(jnp.int32)
-            neg = jnp.where(rn < lab, rn, rn + 1)
-            d_ta = jnp.zeros((self.R, self.L), jnp.int32)
-            d_w = jnp.zeros_like(prog.weights)
-            d_sel = jnp.zeros((self.R,), jnp.int32)
-            for r, (cls, y_c) in enumerate(((lab, 1), (neg, 0))):
-                csum = jnp.clip(jnp.take(sm, cls), -prog.T, prog.T)
-                p_num = jnp.where(y_c == 1, prog.T - csum, prog.T + csum)
-                sel = (sel_rand[r].astype(jnp.int32) * (2 * prog.T)
-                       < (p_num << self.rand_bits)).astype(jnp.int32)
-                w_row = prog.weights[cls]                              # [R]
-                # Vanilla eligibility: only the class's own block (w != 0).
-                elig = jnp.where(prog.w_frozen, (w_row != 0), True)
-                sel = sel * prog.cl_mask * elig.astype(jnp.int32)
-                sign_pos = w_row >= 0
-                is_t1 = jnp.where(y_c == 1, sign_pos, ~sign_pos)
-                t1 = (sel == 1) & is_t1
-                t2 = (sel == 1) & ~is_t1
-                clb = out.astype(bool)
-                litb = lit.astype(bool)
-                low = ta_rand[r] < prog.p_ta
-                cl_and_lit = clb[:, None] & litb[None, :]
-                inc1 = jnp.where(prog.boost, cl_and_lit, cl_and_lit & ~low)
-                dec1 = ~cl_and_lit & low
-                d1 = jnp.where(inc1, 1, jnp.where(dec1, -1, 0))
-                inc2 = clb[:, None] & ~litb[None, :] & ~include_b
-                d = (t1[:, None] * d1 + t2[:, None] * inc2.astype(jnp.int32))
-                d = d * prog.l_mask[None, :]                  # Fig 6a inverse
-                d_ta = d_ta + d
-                step = jnp.where(y_c == 1, 1, -1)
-                d_w = d_w.at[cls].add(sel * out * step)
-                d_sel = d_sel + sel
-            return (prng, acc_ta + d_ta, acc_w + d_w, acc_sel + d_sel), None
+        # Type I / Type II split per round (sign of the class's weight row)
+        w_lab = jnp.take(prog.weights, labels, axis=0)                 # [B,R]
+        w_neg = jnp.take(prog.weights, neg, axis=0)
+        t1_lab = sel_lab * (w_lab >= 0)
+        t2_lab = sel_lab * (w_lab < 0)
+        t1_neg = sel_neg * (w_neg < 0)
+        t2_neg = sel_neg * (w_neg >= 0)
 
-        acc0 = (prng, jnp.zeros((self.R, self.L), jnp.int32),
-                jnp.zeros_like(prog.weights), jnp.zeros((self.R,), jnp.int32))
-        (prng, d_ta, d_w, d_sel), _ = jax.lax.scan(
-            per_point, acc0, (lits, labels, sums_m, cl))
+        # TA update over both rounds flattened into the batch axis; randoms
+        # are generated where they are consumed (counter stream keyed on
+        # ta_seed) — no [B, R, L] random tensor ever exists.
+        lit2 = jnp.concatenate([lits, lits], axis=0)                   # [2B,L]
+        cl2 = jnp.concatenate([cl, cl], axis=0)
+        t1 = jnp.concatenate([t1_lab, t1_neg], axis=0)
+        t2 = jnp.concatenate([t2_lab, t2_neg], axis=0)
+        new_ta = kops.ta_update_op(
+            prog.ta, lit2, cl2, t1, t2, prog.l_mask, seed=ta_seed,
+            p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
+            n_states=prog.n_states, backend=self._kb)
 
-        new_ta = jnp.clip(prog.ta + d_ta, 0, prog.n_states - 1)
+        # Alg 4 weight nudges: one-hot scatter-add as two int32 matmuls
+        hr = jnp.arange(self.H, dtype=jnp.int32)
+        lab_oh = (labels[:, None] == hr[None, :]).astype(jnp.int32)    # [B,H]
+        neg_oh = (neg[:, None] == hr[None, :]).astype(jnp.int32)
+        contract_b = (((0,), (0,)), ((), ()))
+        d_w = (jax.lax.dot_general(lab_oh, sel_lab * cl, contract_b,
+                                   preferred_element_type=jnp.int32)
+               - jax.lax.dot_general(neg_oh, sel_neg * cl, contract_b,
+                                     preferred_element_type=jnp.int32))
         new_w = jnp.where(prog.w_frozen, prog.weights,
                           jnp.clip(prog.weights + d_w, -prog.w_clip,
                                    prog.w_clip))
         new_prog = dataclasses.replace(prog, ta=new_ta, weights=new_w)
+
         # Alg 6 group-skip accounting on the engine's y-tile granularity
+        d_sel = (sel_lab + sel_neg).sum(axis=0)                        # [R]
         g = (d_sel > 0).astype(jnp.int32).reshape(-1, self.tile.y).max(-1)
         gmask = prog.cl_mask.reshape(-1, self.tile.y).max(-1)
         stats = {"selected": d_sel.sum(), "active_groups": (g * gmask).sum(),

@@ -33,6 +33,12 @@ from .clause import class_sums, vanilla_polarity
 from .prng import PRNG
 from .types import COALESCED, TMConfig, TMState, VANILLA, ta_actions
 
+# The inference front half of both training modes dispatches by workload
+# shape: class_sums resolves ``compute_backend="pallas"`` through
+# kernels.ops.select_path (packed-VPU kernel for edge batches, MXU matmul
+# kernel otherwise; see clause.clause_outputs_pallas) and runs the jnp
+# matmul recast for the default backend.
+
 # Width of a clause "group" for skip statistics — the paper's y (DTM-L: 27,
 # here tile-aligned).
 SKIP_GROUP = 32

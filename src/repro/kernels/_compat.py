@@ -1,0 +1,12 @@
+"""Version-compat shims for jax.experimental.pallas.
+
+The TPU compiler-params dataclass was renamed ``TPUCompilerParams`` ->
+``CompilerParams`` across JAX releases; resolve whichever this JAX has so
+the kernels import cleanly on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(cl_ref, w_ref, out_ref, acc_ref, *, n_k: int):
     k = pl.program_id(1)
@@ -58,7 +60,7 @@ def class_sum(clauses: jax.Array, weights: jax.Array, bt: int = 8,
         out_specs=pl.BlockSpec((bt, H), lambda b, k: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bt, H), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(clauses.astype(jnp.int8), weights.astype(jnp.int32))

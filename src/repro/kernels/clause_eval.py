@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(neg_lit_ref, inc_ref, out_ref, acc_ref, cnt_ref, *,
             n_k: int, eval_mode: bool):
@@ -76,7 +78,7 @@ def clause_eval(literals: jax.Array, include: jax.Array,
             pltpu.VMEM((bt, yt), jnp.int32),
             pltpu.VMEM((1, yt), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(neg, include.astype(jnp.int8))

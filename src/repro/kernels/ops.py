@@ -1,12 +1,26 @@
-"""Public jit'd wrappers for the TM Pallas kernels.
+"""Public jit'd wrappers + batch-size–aware dispatch for the TM kernels.
 
 Handles padding to tile multiples, backend dispatch (Pallas on TPU /
 interpret-mode on CPU / pure-jnp reference), and the packed-path layout.
 The DTM engine and benchmarks call these, never pl.pallas_call directly.
+
+Two knobs are resolved HERE, once, for every kernel:
+
+* ``REPRO_INTERPRET`` — ``auto`` (default: interpret iff the JAX backend is
+  not a TPU), ``1`` (force interpret — CI determinism), ``0`` (force
+  compiled).  Read at trace time; flip it before the first kernel call.
+* ``REPRO_KERNEL_PATH`` — force one of ``mxu | packed_vpu | fused | ref``
+  instead of the shape-based :func:`select_path` choice.
+
+:func:`select_path` is the MATADOR-style datapath selector: the MXU matmul
+recast for throughput batches, the bit-packed VPU path for the edge
+single-datapoint regime, and the fused training-step kernel for train
+steps (paper Fig 11 crossover; arXiv:2403.10538 §V).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -14,13 +28,54 @@ import jax.numpy as jnp
 from . import ref
 from .class_sum import class_sum
 from .clause_eval import clause_eval
+from .fused_step import fused_step
 from .packed_clause import packed_clause_eval
 from .ta_update import ta_update
 from .tm_infer import tm_infer
 
+# Kernel path names (the dispatchable datapath variants).
+PATH_MXU = "mxu"              # int8 matmul recast on the systolic array
+PATH_PACKED = "packed_vpu"    # 32-literals-per-word bitwise VPU path
+PATH_FUSED = "fused"          # single-launch training-step front half
+PATH_REF = "ref"              # pure-jnp oracle (also the CPU fast path)
+_PATHS = (PATH_MXU, PATH_PACKED, PATH_FUSED, PATH_REF)
 
-def _interpret_default() -> bool:
+# Below this batch the matmul recast wastes systolic occupancy and the
+# packed VPU path wins (edge single-datapoint regime, Fig 11).
+PACKED_MAX_BATCH = 4
+
+
+def resolve_interpret() -> bool:
+    """Single source of truth for Pallas interpret mode (REPRO_INTERPRET)."""
+    env = os.environ.get("REPRO_INTERPRET", "auto").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    if env not in ("", "auto"):
+        raise ValueError(
+            f"REPRO_INTERPRET={env!r} not recognised; use auto, 1, or 0")
     return jax.default_backend() != "tpu"
+
+
+def select_path(cfg=None, batch=None, training: bool = False) -> str:
+    """Pick the kernel path for a workload shape.
+
+    cfg      optional TMConfig (reserved for model-shape heuristics)
+    batch    datapoints per call (None = unknown -> throughput default)
+    training True for the train-step datapath -> the fused kernel
+    """
+    env = os.environ.get("REPRO_KERNEL_PATH", "").strip().lower()
+    if env in _PATHS:
+        return env
+    if env:   # typo'd forces must not silently fall back to the heuristic
+        raise ValueError(
+            f"REPRO_KERNEL_PATH={env!r} not recognised; use one of {_PATHS}")
+    if training:
+        return PATH_FUSED
+    if batch is not None and batch <= PACKED_MAX_BATCH:
+        return PATH_PACKED
+    return PATH_MXU
 
 
 def _pad2(x: jax.Array, m0: int, m1: int, value=0) -> jax.Array:
@@ -29,6 +84,11 @@ def _pad2(x: jax.Array, m0: int, m1: int, value=0) -> jax.Array:
     if p0 == 0 and p1 == 0:
         return x
     return jnp.pad(x, ((0, p0), (0, p1)), constant_values=value)
+
+
+def _pad1(x: jax.Array, m: int, value=0) -> jax.Array:
+    p = (-x.shape[0]) % m
+    return x if p == 0 else jnp.pad(x, (0, p), constant_values=value)
 
 
 @functools.partial(jax.jit, static_argnames=("eval_mode", "backend",
@@ -43,7 +103,7 @@ def clause_eval_op(literals, include, eval_mode=False, backend="pallas",
     lit = _pad2(literals, bt, xt)
     inc = _pad2(include, yt, xt)
     out = clause_eval(lit, inc, eval_mode=eval_mode, bt=bt, yt=yt, xt=xt,
-                      interpret=_interpret_default())
+                      interpret=resolve_interpret())
     return out[:B, :C]
 
 
@@ -55,7 +115,7 @@ def class_sum_op(clauses, weights, backend="pallas", bt=8, mt=128):
     H = weights.shape[0]
     cl = _pad2(clauses, bt, mt)
     w = _pad2(weights, 8, mt)           # H padded to sublane multiple
-    out = class_sum(cl, w, bt=bt, mt=mt, interpret=_interpret_default())
+    out = class_sum(cl, w, bt=bt, mt=mt, interpret=resolve_interpret())
     return out[:B, :H]
 
 
@@ -72,7 +132,7 @@ def tm_infer_op(literals, include, weights, eval_mode=True, backend="pallas",
     inc = _pad2(include, yt, xt)
     w = _pad2(weights, 8, yt)
     out = tm_infer(lit, inc, w, eval_mode=eval_mode, bt=bt, yt=yt, xt=xt,
-                   interpret=_interpret_default())
+                   interpret=resolve_interpret())
     return out[:B, :H]
 
 
@@ -88,24 +148,27 @@ def packed_clause_eval_op(packed_literals, packed_include, eval_mode=False,
     lit = _pad2(packed_literals, bt, wt)
     inc = _pad2(packed_include, yt, wt)
     out = packed_clause_eval(lit, inc, eval_mode=eval_mode, bt=bt, yt=yt,
-                             wt=wt, interpret=_interpret_default())
+                             wt=wt, interpret=resolve_interpret())
     return out[:B, :C]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "seed", "p_ta", "rand_bits", "boost", "n_states", "backend", "yt", "xt"))
+    "rand_bits", "backend", "yt", "xt"))
 def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
                  rand_bits=16, boost=True, n_states=256, backend="pallas",
                  yt=128, xt=256):
-    """Batched TA update [C,L] -> [C,L] (pads C/L, strips on return)."""
+    """Batched TA update [C,L] -> [C,L] (pads C/L, strips on return).
+
+    ``seed``/``p_ta``/``boost``/``n_states`` may be traced scalars — a new
+    per-step seed or a DTMProgram swap never retraces."""
     if backend == "ref":
         return ref.ta_update_ref(ta, literals, clause_out, type1, type2,
                                  l_mask, seed, p_ta, rand_bits, boost,
                                  n_states)
     C, L = ta.shape
-    # NOTE: the PRNG stream is keyed on the *padded* L, so ref comparisons
-    # must pad identically (tests pass pre-padded arrays; this wrapper is
-    # for production use where only the stream's distribution matters).
+    # The PRNG stream is keyed on the padded row stride (ceil(L/xt)*xt);
+    # ref.ta_update_ref keys identically, so kernel and ref match
+    # bit-for-bit on any shape.
     ta_p = _pad2(ta, yt, xt)
     lit_p = _pad2(literals, 1, xt)
     cl_p = _pad2(clause_out, 1, yt)
@@ -114,5 +177,70 @@ def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
     lm = jnp.pad(l_mask, (0, (-L) % xt))
     out = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed, p_ta=p_ta,
                     rand_bits=rand_bits, boost=boost, n_states=n_states,
-                    yt=yt, xt=xt, interpret=_interpret_default())
+                    yt=yt, xt=xt, interpret=resolve_interpret())
     return out[:C, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("rand_bits", "backend",
+                                             "bt", "yt", "xt"))
+def fused_step_op(literals, include, weights, labels, neg_labels,
+                  rand_lab, rand_neg, cl_mask, h_mask, T, w_frozen,
+                  rand_bits=16, backend="pallas", bt=8, yt=128, xt=256):
+    """Fused training-step front half (clause eval + class sums + Alg-3
+    feedback selection for both rounds) in ONE kernel launch.
+
+    literals [B,L] {0,1}; include [R,L] {0,1}; weights [H,R] int32;
+    labels/neg_labels [B] int32; rand_lab/rand_neg [B,R] uint32
+    (< 2^rand_bits); cl_mask [R]; h_mask [H]; T / w_frozen int32 scalars
+    (traced).  Pads every dim, strips padding on return.
+
+    Returns (clause [B,R], class_sums [B,H] with Fig-6d pinning,
+    sel_lab [B,R], sel_neg [B,R]) — all int32, bit-exact vs. the unfused
+    ``clause_eval_op -> class_sum_op -> feedback-select`` pipeline and
+    :func:`ref.fused_step_ref`.
+    """
+    if backend == "ref":
+        return ref.fused_step_ref(literals, include, weights, labels,
+                                  neg_labels, rand_lab, rand_neg, cl_mask,
+                                  h_mask, T, w_frozen, rand_bits)
+    B, L = literals.shape
+    R = include.shape[0]
+    H = weights.shape[0]
+    # one-hots feed the in-kernel csum extraction; weight rows are plain
+    # gathers (cheaper than the equivalent one-hot matmul, same values)
+    hr = jnp.arange(H, dtype=jnp.int32)
+    lab_oh = (labels[:, None] == hr[None, :]).astype(jnp.int32)    # [B, H]
+    neg_oh = (neg_labels[:, None] == hr[None, :]).astype(jnp.int32)
+    w_lab = jnp.take(weights, labels, axis=0)                      # [B, R]
+    w_neg = jnp.take(weights, neg_labels, axis=0)
+
+    lit = _pad2(literals, bt, xt)
+    inc = _pad2(include, yt, xt)
+    w = _pad2(weights, 8, yt)
+    clause, sums, sel_lab, sel_neg = fused_step(
+        lit, inc, w, _pad2(lab_oh, bt, 8), _pad2(neg_oh, bt, 8),
+        _pad2(w_lab, bt, yt), _pad2(w_neg, bt, yt),
+        _pad2(rand_lab, bt, yt), _pad2(rand_neg, bt, yt),
+        _pad1(cl_mask.astype(jnp.int32), yt),
+        _pad1(h_mask.astype(jnp.int32), 8),
+        T, w_frozen, rand_bits=rand_bits, bt=bt, yt=yt, xt=xt,
+        interpret=resolve_interpret())
+    return (clause[:B, :R], sums[:B, :H], sel_lab[:B, :R], sel_neg[:B, :R])
+
+
+@functools.partial(jax.jit, static_argnames=("rand_bits",))
+def unfused_step_op(literals, include, weights, labels, neg_labels,
+                    rand_lab, rand_neg, cl_mask, h_mask, T, w_frozen,
+                    rand_bits=16):
+    """The seed three-stage pipeline, kept as the fused kernel's measured
+    baseline: clause_eval launch -> HBM clause matrix -> class_sum launch ->
+    jnp Alg-3 selection pass.  Same signature/outputs as fused_step_op."""
+    cl = clause_eval_op(literals, include, eval_mode=False)
+    cl = cl * cl_mask[None, :].astype(jnp.int32)
+    sums = class_sum_op(cl, weights)
+    sums = jnp.where(h_mask[None, :] > 0, sums, ref.NEG_INF_SUM)
+    sel_lab = ref._round_select(sums, labels, 1, rand_lab, weights,
+                                cl_mask, T, w_frozen, rand_bits)
+    sel_neg = ref._round_select(sums, neg_labels, 0, rand_neg, weights,
+                                cl_mask, T, w_frozen, rand_bits)
+    return cl, sums, sel_lab, sel_neg

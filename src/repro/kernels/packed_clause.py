@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(lit_ref, inc_ref, out_ref, viol_ref, ne_ref, *,
             batch_tile: int, n_k: int, eval_mode: bool):
@@ -75,7 +77,7 @@ def packed_clause_eval(packed_literals: jax.Array, packed_include: jax.Array,
             pltpu.VMEM((bt, yt), jnp.uint32),
             pltpu.VMEM((1, yt), jnp.uint32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(packed_literals.astype(jnp.uint32), packed_include.astype(jnp.uint32))

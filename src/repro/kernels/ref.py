@@ -57,6 +57,52 @@ def tm_infer_ref(literals: jax.Array, include: jax.Array, weights: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# fused training step (fused_step.py oracle)
+# ---------------------------------------------------------------------------
+
+NEG_INF_SUM = -(1 << 24)  # Fig 6d remainder pinning (= fused_step.NEG_INF_SUM)
+
+
+def _round_select(sums, cls, y_c, rand, weights, cl_mask, T, w_frozen,
+                  rand_bits):
+    """Alg 3 integer-exact clause selection for one feedback round."""
+    T = jnp.asarray(T, jnp.int32)
+    csum = jnp.take_along_axis(sums, cls[:, None], axis=1)        # [B, 1]
+    cs = jnp.clip(csum, -T, T)
+    p_num = jnp.where(jnp.asarray(y_c) == 1, T - cs, T + cs)
+    lhs = rand.astype(jnp.int32) * (2 * T)
+    sel = lhs < (p_num << rand_bits)                              # [B, R]
+    w_r = jnp.take(weights, cls, axis=0)                          # [B, R]
+    elig = jnp.where(jnp.asarray(w_frozen, jnp.int32) > 0, w_r != 0, True)
+    sel = sel & (cl_mask[None, :] > 0) & elig
+    return sel.astype(jnp.int32)
+
+
+def fused_step_ref(literals, include, weights, labels, neg_labels,
+                   rand_lab, rand_neg, cl_mask, h_mask, T, w_frozen,
+                   rand_bits: int = 16):
+    """Oracle for kernels.fused_step — the unfused pipeline spelled out:
+    clause_eval (training mode) → class_sum → Fig-6 masking → Alg-3
+    feedback selection for the target and negated rounds.
+
+    Clause eval uses the violation-matmul recast (bit-exact vs. the Eq-1
+    AND-chain — test_properties.py) so this oracle also serves as the DTM
+    engine's CPU fast path without materialising a [B, R, L] broadcast."""
+    viol = jax.lax.dot_general(
+        (1 - literals.astype(jnp.int32)), include.astype(jnp.int32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    clause = (viol == 0).astype(jnp.int32) * cl_mask[None, :].astype(jnp.int32)
+    sums = class_sum_ref(clause, weights)
+    sums = jnp.where(h_mask[None, :] > 0, sums, NEG_INF_SUM)
+    sel_lab = _round_select(sums, labels, 1, rand_lab, weights, cl_mask,
+                            T, w_frozen, rand_bits)
+    sel_neg = _round_select(sums, neg_labels, 0, rand_neg, weights, cl_mask,
+                            T, w_frozen, rand_bits)
+    return clause, sums, sel_lab, sel_neg
+
+
+# ---------------------------------------------------------------------------
 # TA update (ta_update.py oracle — reproduces the in-kernel PRNG stream)
 # ---------------------------------------------------------------------------
 
@@ -78,27 +124,35 @@ def ta_update_ref(ta, literals, clause_out, type1, type2, l_mask, seed,
                   p_ta, rand_bits=16, boost=True, n_states=256, xt=256):
     """Bit-exact oracle for kernels.ta_update (same per-element streams).
 
-    NOTE ``xt`` here only enters through the stream keying constant
-    ``n_l_tiles * xt == L`` — the stream is tile-layout independent by
-    construction, so the oracle needs no tiling at all."""
+    The stream is keyed on the element's global (row, col) index with the
+    row stride rounded up to a whole number of ``xt``-wide tiles — exactly
+    the stride the kernel sees after ops.ta_update_op pads L.  The oracle
+    therefore matches the padded kernel bit-for-bit on ANY shape (padded
+    columns have their own stream positions, but those never land in the
+    [:C, :L] region), so CPU-ref and TPU-kernel training runs are
+    reproducible against each other."""
     C, L = ta.shape
     B = literals.shape[0]
-    include = ta.astype(jnp.int32) >= (n_states // 2)
+    boost = jnp.asarray(boost)
+    n_states = jnp.asarray(n_states, jnp.int32)
+    include = ta.astype(jnp.int32) >= (n_states >> 1)
 
+    stride = ((L + xt - 1) // xt) * xt
     gy = jax.lax.broadcasted_iota(jnp.uint32, (C, L), 0)
     gx = jax.lax.broadcasted_iota(jnp.uint32, (C, L), 1)
-    state0 = _splitmix32(jnp.uint32(seed) ^ (gy * jnp.uint32(L) + gx))
+    state0 = _splitmix32(jnp.asarray(seed, jnp.uint32)
+                         ^ (gy * jnp.uint32(stride) + gx))
 
     def body(carry, xs):
         state, delta = carry
         lit_b, cl_b, t1_b, t2_b = xs
         state = _xorshift32(state)
         rand = state >> (32 - rand_bits)
-        low = rand < jnp.uint32(p_ta)
+        low = rand < jnp.asarray(p_ta, jnp.uint32)
         clb = (cl_b > 0)[:, None]
         litb = (lit_b > 0)[None, :]
         cl_and_lit = clb & litb
-        inc1 = cl_and_lit if boost else (cl_and_lit & ~low)
+        inc1 = jnp.where(boost, cl_and_lit, cl_and_lit & ~low)
         dec1 = ~cl_and_lit & low
         d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
         inc2 = (clb & ~litb & ~include).astype(jnp.int32)

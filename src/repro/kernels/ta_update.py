@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _splitmix32(x):
     x = (x + jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
@@ -44,19 +46,24 @@ def _xorshift32(x):
     return x.astype(jnp.uint32)
 
 
-def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, out_ref, *,
-            batch: int, n_l_tiles: int, yt: int, xt: int, seed: int,
-            p_ta: int, rand_bits: int, boost: bool, n_states: int):
+def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, params_ref,
+            out_ref, *, batch: int, n_l_tiles: int, yt: int, xt: int,
+            rand_bits: int):
     ci, li = pl.program_id(0), pl.program_id(1)
+    # dynamic model scalars ride in SMEM — a DTMProgram swap or a fresh
+    # per-step seed never retraces (cache-size == 1 semantics, §IV-D-a).
+    seed = params_ref[0, 0]
+    p_ta = params_ref[0, 1]
+    boost = params_ref[0, 2] > 0
+    n_states = params_ref[0, 3].astype(jnp.int32)
     ta = ta_ref[...].astype(jnp.int32)                    # [yt, xt]
-    include = ta >= (n_states // 2)
+    include = ta >= (n_states >> 1)
 
     # counter-based per-element stream keyed on GLOBAL element index — the
     # result is tile-layout independent (ref.py reproduces it exactly).
     gy = ci * yt + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 0)
     gx = li * xt + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 1)
-    state = _splitmix32(jnp.uint32(seed) ^ (gy * jnp.uint32(n_l_tiles * xt)
-                                            + gx))
+    state = _splitmix32(seed ^ (gy * jnp.uint32(n_l_tiles * xt) + gx))
 
     delta = jnp.zeros((yt, xt), jnp.int32)
     lit = lit_ref[...]                                    # [B, xt] int8
@@ -68,16 +75,14 @@ def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, out_ref, *,
         state, delta = carry
         state = _xorshift32(state)
         rand = state >> (32 - rand_bits)
-        low = rand < jnp.uint32(p_ta)                     # P = 1/s
+        low = rand < p_ta                                 # P = 1/s
         clb = (cl[b] > 0)[:, None]                        # [yt, 1]
         litb = (lit[b] > 0)[None, :]                      # [1, xt]
         t1b = (t1[b] > 0)[:, None]
         t2b = (t2[b] > 0)[:, None]
         cl_and_lit = jnp.logical_and(clb, litb)
-        if boost:
-            inc1 = cl_and_lit
-        else:
-            inc1 = jnp.logical_and(cl_and_lit, jnp.logical_not(low))
+        inc1 = jnp.where(boost, cl_and_lit,
+                         jnp.logical_and(cl_and_lit, jnp.logical_not(low)))
         dec1 = jnp.logical_and(jnp.logical_not(cl_and_lit), low)
         d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
         inc2 = jnp.logical_and(jnp.logical_and(clb, jnp.logical_not(litb)),
@@ -90,25 +95,31 @@ def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, out_ref, *,
     out_ref[...] = jnp.clip(ta + delta, 0, n_states - 1)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "seed", "p_ta", "rand_bits", "boost", "n_states", "yt", "xt", "interpret"))
+@functools.partial(jax.jit, static_argnames=("rand_bits", "yt", "xt",
+                                             "interpret"))
 def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
               type1: jax.Array, type2: jax.Array, l_mask: jax.Array,
-              seed: int, p_ta: int, rand_bits: int = 16, boost: bool = True,
-              n_states: int = 256, yt: int = 128, xt: int = 256,
+              seed, p_ta, rand_bits: int = 16, boost=True,
+              n_states=256, yt: int = 128, xt: int = 256,
               interpret: bool = True) -> jax.Array:
     """Batched TA update.
 
     ta [C, L] int32, literals [B, L] {0,1}, clause_out/type1/type2 [B, C]
-    {0,1}, l_mask [L] {0,1} -> new ta [C, L] int32."""
+    {0,1}, l_mask [L] {0,1} -> new ta [C, L] int32.  ``seed``/``p_ta``/
+    ``boost``/``n_states`` may be traced scalars (they ride in SMEM)."""
     C, L = ta.shape
     B = literals.shape[0]
     assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
     grid = (C // yt, L // xt)
+    params = jnp.stack([
+        jnp.asarray(seed, jnp.uint32),
+        jnp.asarray(p_ta, jnp.uint32),
+        jnp.asarray(boost, jnp.uint32),
+        jnp.asarray(n_states, jnp.uint32),
+    ]).reshape(1, 4)
     return pl.pallas_call(
-        functools.partial(
-            _kernel, batch=B, n_l_tiles=grid[1], yt=yt, xt=xt, seed=seed,
-            p_ta=p_ta, rand_bits=rand_bits, boost=boost, n_states=n_states),
+        functools.partial(_kernel, batch=B, n_l_tiles=grid[1], yt=yt, xt=xt,
+                          rand_bits=rand_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((yt, xt), lambda c, l: (c, l)),       # ta
@@ -117,12 +128,15 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
             pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type1
             pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type2
             pl.BlockSpec((1, xt), lambda c, l: (0, l)),        # l_mask
+            pl.BlockSpec((1, 4), lambda c, l: (0, 0),
+                         memory_space=pltpu.SMEM),             # scalars
         ],
         out_specs=pl.BlockSpec((yt, xt), lambda c, l: (c, l)),
         out_shape=jax.ShapeDtypeStruct((C, L), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(ta.astype(jnp.int32), literals.astype(jnp.int8),
       clause_out.astype(jnp.int8), type1.astype(jnp.int8),
-      type2.astype(jnp.int8), l_mask.reshape(1, L).astype(jnp.int32))
+      type2.astype(jnp.int8), l_mask.reshape(1, L).astype(jnp.int32),
+      params)

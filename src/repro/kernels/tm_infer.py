@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 
 def _kernel(neg_lit_ref, inc_ref, w_ref, out_ref, viol_ref, cnt_ref, acc_ref,
             *, n_c: int, n_k: int, eval_mode: bool):
@@ -92,7 +94,7 @@ def tm_infer(literals: jax.Array, include: jax.Array, weights: jax.Array,
             pltpu.VMEM((1, yt), jnp.int32),
             pltpu.VMEM((bt, H), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(neg, include.astype(jnp.int8), weights.astype(jnp.int32))

@@ -1,0 +1,57 @@
+"""Analytic TM-datapath performance model (TPU v5e roofline terms).
+
+The benchmark harness reports interpret-mode wall-clock off-TPU, so the
+hardware-model figures here are the numbers EXPERIMENTS.md tracks across
+kernel iterations: analytic op counts / v5e roofline seconds.  Centralised
+in launch/ (next to the LM flops model) so the per-figure benchmark modules
+don't each carry their own copy.
+
+``train_front_costs`` models the training-step front half (clause eval ->
+class sums -> Alg-3 feedback selection) in its two implementations:
+
+* unfused — the seed three-stage path: the ``[B, C]`` int32 clause matrix
+  is written to HBM by clause_eval, read back by class_sum, and the class
+  sums are re-read by the jnp selection pass;
+* fused   — one launch: the clause tile feeds the class-sum matmul in
+  VMEM; the clause matrix is written once (the TA-update kernel consumes
+  it) and the selection masks are emitted in-kernel.
+
+The delta is pure HBM traffic — the quantity the FPGA design eliminates by
+construction and the fused kernel eliminates on TPU.
+"""
+from __future__ import annotations
+
+from .mesh import V5E
+
+
+def roofline_s(flops: float, bytes_: float) -> float:
+    """Seconds at the v5e roofline: max(compute term, HBM term)."""
+    return max(flops / V5E.peak_flops_bf16, bytes_ / V5E.hbm_bw)
+
+
+def train_front_costs(B: int, L: int, C: int, H: int) -> dict:
+    """Analytic op/byte counts for the training-step front half.
+
+    B datapoints, L literals, C clause rows, H classes.  Literals/include
+    are int8, everything else int32."""
+    # ops: violation matmul + class-sum matmul + two selection compares
+    flops = 2 * B * C * L + 2 * B * C * H + 6 * B * C
+    lit = B * L                       # int8
+    inc = C * L                       # int8
+    w = H * C * 4
+    clause = B * C * 4
+    sums = B * H * 4
+    sel_io = 2 * B * C * 4            # two rounds of randoms in
+    sel_out = 2 * B * C * 4           # two selection masks out
+    shared = lit + inc + w + sums + sel_io + sel_out
+    # unfused: clause written + read back, sums written + re-read by select
+    unfused_bytes = shared + 2 * clause + sums
+    # fused: clause written once (TA-update consumer), nothing re-read
+    fused_bytes = shared + clause
+    return {
+        "flops": flops,
+        "unfused_bytes": unfused_bytes,
+        "fused_bytes": fused_bytes,
+        "unfused_roofline_s": roofline_s(flops, unfused_bytes),
+        "fused_roofline_s": roofline_s(flops, fused_bytes),
+    }

@@ -21,6 +21,7 @@ def run_py(code: str, devices: int = 8) -> str:
     return r.stdout
 
 
+@pytest.mark.slow
 def test_tm_dp_equals_local_batched():
     """DP psum of integer deltas == single-device batched mode, exactly."""
     run_py("""
@@ -54,6 +55,7 @@ def test_tm_dp_equals_local_batched():
     """)
 
 
+@pytest.mark.slow
 def test_lm_fsdp_tp_train_step_runs():
     """4-device (2 data × 2 model) FSDP×TP train step on a smoke arch."""
     run_py("""
@@ -78,6 +80,7 @@ def test_lm_fsdp_tp_train_step_runs():
     """, devices=4)
 
 
+@pytest.mark.slow
 def test_compressed_psum_shardmap():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
@@ -107,6 +110,7 @@ def test_compressed_psum_shardmap():
     """)
 
 
+@pytest.mark.slow
 def test_elastic_restart_supervisor(tmp_path):
     """Inject a device failure; supervisor shrinks the mesh, restores the
     checkpoint, and finishes training on fewer devices."""
@@ -146,6 +150,7 @@ def test_elastic_restart_supervisor(tmp_path):
     """)
 
 
+@pytest.mark.slow
 def test_tm_pod_step_and_alg6_compaction_exact():
     """Pod-scale CoTM step (clause×batch sharding) + Alg-6 feedback
     compaction: bit-exact vs the dense path when K >= #selected/shard."""

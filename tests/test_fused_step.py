@@ -1,0 +1,192 @@
+"""Fused training-step kernel + dispatcher validation.
+
+Acceptance contract (ISSUE 1): the fused kernel's outputs equal BOTH
+(a) the unfused ``clause_eval_op -> class_sum_op -> feedback-select``
+pipeline and (b) the pure-jnp oracle ``ref.fused_step_ref`` — bit-exactly
+(int32 class sums, identical selection masks) across Vanilla and CoTM
+configs, including remainder-mask (non-multiple-of-tile) shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import COALESCED, TMConfig
+from repro.core.feedback import select_clauses
+from repro.kernels import (PATH_FUSED, PATH_MXU, PATH_PACKED,
+                           class_sum_op, clause_eval_op, fused_step_op,
+                           ref, select_path)
+
+NEG_INF_SUM = ref.NEG_INF_SUM
+
+# (B, R, L, H, n_valid_clauses, n_valid_classes): three remainder cases, one
+# tile-exact case, one edge single-datapoint case.
+SHAPES = [
+    (8, 128, 256, 8, 128, 8),     # tile-exact
+    (5, 100, 200, 6, 90, 5),      # remainders everywhere
+    (16, 300, 500, 10, 290, 9),   # multi-tile with remainder masks
+    (1, 64, 100, 4, 60, 3),       # edge single datapoint
+]
+
+
+def _mk_problem(seed, B, R, L, H, n_cl, n_h, vanilla=False):
+    rng = np.random.default_rng(seed)
+    lit = jnp.asarray((rng.random((B, L)) < 0.5).astype(np.int8))
+    inc = jnp.asarray((rng.random((R, L)) < 0.05).astype(np.int8))
+    inc = inc.at[min(2, R - 1)].set(0)                  # an empty clause
+    if vanilla:
+        # block-diagonal frozen ±1 rows (Eq 3), like DTMEngine.program
+        w = np.zeros((H, R), np.int32)
+        c = max(n_cl // n_h, 1)
+        pol = np.where(np.arange(c) % 2 == 0, 1, -1)
+        for cls in range(n_h):
+            w[cls, cls * c:(cls + 1) * c] = pol
+        w = jnp.asarray(w)
+    else:
+        w = jnp.asarray(rng.integers(-15, 16, (H, R)).astype(np.int32))
+    lab = jnp.asarray(rng.integers(0, n_h, B).astype(np.int32))
+    neg = jnp.asarray((lab + 1) % n_h)
+    r1 = jnp.asarray(rng.integers(0, 1 << 16, (B, R), dtype=np.uint32))
+    r2 = jnp.asarray(rng.integers(0, 1 << 16, (B, R), dtype=np.uint32))
+    clm = (jnp.arange(R) < n_cl).astype(jnp.int32)
+    hm = (jnp.arange(H) < n_h).astype(jnp.int32)
+    T = jnp.asarray(16, jnp.int32)
+    wf = jnp.asarray(1 if vanilla else 0, jnp.int32)
+    return lit, inc, w, lab, neg, r1, r2, clm, hm, T, wf
+
+
+def _unfused_pipeline(lit, inc, w, lab, neg, r1, r2, clm, hm, T, wf):
+    """The seed three-stage path: two kernel launches + jnp Alg-3 select.
+
+    Deliberately NOT ops.unfused_step_op: this formulation goes through
+    core.feedback.select_clauses, so the parity assertion cross-checks the
+    kernel against the production feedback module, not against a helper
+    that shares code with the ref oracle."""
+    cfg = TMConfig(T=int(T), s=4.0, features=8, clauses=16, classes=2)
+    cl = clause_eval_op(lit, inc, eval_mode=False) * clm[None, :]
+    sums = class_sum_op(cl, w)
+    sums = jnp.where(hm[None, :] > 0, sums, NEG_INF_SUM)
+    outs = [cl, sums]
+    for cls, y_c, rnd in ((lab, 1, r1), (neg, 0, r2)):
+        csum = jnp.take_along_axis(sums, cls[:, None], axis=1)     # [B, 1]
+        sel = select_clauses(cfg, csum, jnp.asarray(y_c), rnd)
+        w_r = jnp.take(w, cls, axis=0)
+        elig = jnp.where(wf > 0, w_r != 0, True)
+        outs.append(sel * (clm[None, :] > 0) * elig)
+    return tuple(outs)
+
+
+@pytest.mark.parametrize("B,R,L,H,n_cl,n_h", SHAPES)
+@pytest.mark.parametrize("vanilla", [False, True])
+def test_fused_step_matches_unfused_and_ref(B, R, L, H, n_cl, n_h, vanilla):
+    from repro.kernels import unfused_step_op
+    prob = _mk_problem(7, B, R, L, H, n_cl, n_h, vanilla)
+    got = fused_step_op(*prob)
+    want_ref = ref.fused_step_ref(*prob)
+    want_unf = _unfused_pipeline(*prob)
+    want_op = unfused_step_op(*prob)      # the benchmarked baseline op
+    for name, g, wr, wu, wo in zip(("clause", "sums", "sel_lab", "sel_neg"),
+                                   got, want_ref, want_unf, want_op):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wr),
+                                      err_msg=f"{name} vs ref")
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wu),
+                                      err_msg=f"{name} vs unfused")
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wo),
+                                      err_msg=f"{name} vs unfused_step_op")
+
+
+def test_fused_step_ref_backend_matches_kernel():
+    """backend='ref' in the op wrapper is the same function, unpadded."""
+    prob = _mk_problem(11, 5, 100, 200, 6, 90, 5)
+    got_k = fused_step_op(*prob, backend="pallas")
+    got_r = fused_step_op(*prob, backend="ref")
+    for g, r in zip(got_k, got_r):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+def test_fused_step_sums_are_int32_and_pinned():
+    prob = _mk_problem(3, 8, 128, 256, 8, 120, 5)
+    _, sums, _, _ = fused_step_op(*prob)
+    assert sums.dtype == jnp.int32
+    assert (np.asarray(sums)[:, 5:] == NEG_INF_SUM).all()
+
+
+# --------------------------------------------------------------------------
+# dispatcher
+# --------------------------------------------------------------------------
+
+def test_select_path_shape_heuristics(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_PATH", raising=False)
+    assert select_path(None, batch=1) == PATH_PACKED
+    assert select_path(None, batch=4) == PATH_PACKED
+    assert select_path(None, batch=32) == PATH_MXU
+    assert select_path(None, batch=None) == PATH_MXU
+    assert select_path(None, batch=1, training=True) == PATH_FUSED
+    assert select_path(None, batch=1024, training=True) == PATH_FUSED
+
+
+def test_select_path_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_PATH", "packed_vpu")
+    assert select_path(None, batch=1024, training=True) == PATH_PACKED
+    monkeypatch.setenv("REPRO_KERNEL_PATH", "mxu")
+    assert select_path(None, batch=1) == PATH_MXU
+    monkeypatch.setenv("REPRO_KERNEL_PATH", "warp_drive")   # typo'd force
+    with pytest.raises(ValueError, match="REPRO_KERNEL_PATH"):
+        select_path(None, batch=1)
+
+
+def test_resolve_interpret_env(monkeypatch):
+    from repro.kernels import resolve_interpret
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    assert resolve_interpret() is True
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    assert resolve_interpret() is False
+    monkeypatch.setenv("REPRO_INTERPRET", "auto")
+    assert resolve_interpret() == (jax.default_backend() != "tpu")
+
+
+# --------------------------------------------------------------------------
+# engine-level parity: kernel backend vs jnp-ref backend
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dtm_engine_kernel_backend_matches_ref():
+    """A DTM train step is bit-identical between the fused-kernel and
+    jnp-ref backends — selection counts, batch accuracy, weight updates,
+    TA states (the ref TA stream is keyed on the kernel's padded stride),
+    and inference outputs — so CPU(ref) and TPU(kernel) runs reproduce
+    each other.  Uses non-tile-multiple engine dims deliberately."""
+    from repro.core import DTMEngine, PRNG, TileConfig, VANILLA
+
+    rng = np.random.default_rng(5)
+    tile = TileConfig(x=32, y=16, m=16, n=4, max_features=48,
+                      max_clauses=64, max_classes=8)
+    for tm_type, feats, cl, h in ((COALESCED, 20, 24, 3),
+                                  (VANILLA, 16, 8, 4)):
+        cfg = TMConfig(tm_type=tm_type, features=feats, clauses=cl,
+                       classes=h, T=8, s=3.0, prng_backend="threefry")
+        x = jnp.asarray((rng.random((8, feats)) < 0.5).astype(np.int8))
+        y = jnp.asarray(rng.integers(0, h, 8).astype(np.int32))
+        results = {}
+        for backend in ("ref", "kernel"):
+            eng = DTMEngine(tile, backend=backend)
+            prog = eng.program(cfg, jax.random.PRNGKey(0))
+            lits = eng.pad_features(x, cfg)
+            new_prog, _, stats = eng.train_step(prog, PRNG.create(cfg, 7),
+                                                lits, y)
+            assert eng.cache_sizes()[1] == 1
+            # inference branch parity (kernel path: clause_eval + class_sum
+            # ops; ref path: jnp recast) on the PRE-update program
+            sums, clo = eng.infer(prog, lits)
+            results[backend] = (new_prog, stats, np.asarray(sums),
+                                np.asarray(clo))
+        pr, sr, sums_r, clo_r = results["ref"]
+        pk, sk, sums_k, clo_k = results["kernel"]
+        np.testing.assert_array_equal(sums_r, sums_k)
+        np.testing.assert_array_equal(clo_r, clo_k)
+        assert int(sr["selected"]) == int(sk["selected"])
+        assert int(sr["correct"]) == int(sk["correct"])
+        assert int(sr["active_groups"]) == int(sk["active_groups"])
+        np.testing.assert_array_equal(np.asarray(pr.weights),
+                                      np.asarray(pk.weights))
+        np.testing.assert_array_equal(np.asarray(pr.ta), np.asarray(pk.ta))

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# Every test here trains a TM variant for multiple epochs (2-5 s each) —
+# nightly tier; tier-1 runs -m "not slow".
+pytestmark = pytest.mark.slow
 
 from repro.core import to_literals
 from repro.core.conv_tm import (ConvTMConfig, init as conv_init,

@@ -21,7 +21,14 @@ def _batch(cfg, B, S, dtype=jnp.bfloat16):
     return b
 
 
-@pytest.mark.parametrize("name", all_archs())
+# two representative families stay in tier-1 (dense + SSM); the other
+# eight archs run nightly — each smoke is a 10-55 s trace+compile on CPU.
+_FAST_ARCHS = ("qwen1_5_0_5b", "mamba2_1_3b")
+
+
+@pytest.mark.parametrize(
+    "name", [n if n in _FAST_ARCHS else pytest.param(n, marks=pytest.mark.slow)
+             for n in all_archs()])
 def test_arch_smoke_train_step(name):
     """Reduced same-family config: one forward/loss on CPU, shapes + no
     NaNs (the FULL configs are exercised only via the dry-run)."""
@@ -36,6 +43,7 @@ def test_arch_smoke_train_step(name):
     assert np.isfinite(gn) and gn > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", all_archs())
 def test_arch_smoke_decode_step(name):
     cfg = get_smoke(name)
@@ -51,6 +59,7 @@ def test_arch_smoke_decode_step(name):
 
 @pytest.mark.parametrize("name", ["qwen1_5_0_5b", "mamba2_1_3b",
                                   "hymba_1_5b"])
+@pytest.mark.slow
 def test_decode_matches_forward(name):
     """Step-by-step decode reproduces the teacher-forced forward pass —
     validates KV caches, SSD recurrence==chunked scan, SWA ring buffers."""
@@ -71,6 +80,7 @@ def test_decode_matches_forward(name):
     assert diff < 2e-3, (name, diff)
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_tolerance():
     """§Perf Cell B: int8 KV cache (per-token-head scales) stays within a
     small relative error of the exact decode path."""
@@ -93,6 +103,7 @@ def test_int8_kv_cache_decode_tolerance():
     assert rel < 0.05, rel
 
 
+@pytest.mark.slow
 def test_flash_equals_dense_forward_and_grad():
     rng = np.random.default_rng(0)
     B, Sq, Sk, Hq, Hkv, hd = 2, 160, 160, 4, 2, 16
@@ -175,6 +186,9 @@ def test_analytic_flops_matches_cost_analysis_single_layer():
     batch = {"tokens": jnp.ones((B, S), jnp.int32)}
     c = jax.jit(lambda p, b: m.forward(p, b)[0]).lower(params,
                                                        batch).compile()
-    raw = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):      # pre-0.4.x JAX: one dict per device
+        ca = ca[0]
+    raw = ca["flops"]
     ana = F.forward_flops(cfg, B, S)
     assert 0.9 < raw / ana < 1.1, (raw, ana)

@@ -1,8 +1,18 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+Skipped (not errored) when hypothesis isn't installed — the tier-1 CI env
+only needs requirements-dev.txt, but a bare env must still collect cleanly.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
+
+pytestmark = pytest.mark.slow  # 25-example sweeps; nightly tier (ci.yml)
 
 from repro.core import (COALESCED, PRNG, TMConfig, VANILLA, init_state,
                         ta_actions, to_literals)

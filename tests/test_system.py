@@ -13,6 +13,10 @@ import pytest
 from repro.core import (COALESCED, TMConfig, TsetlinMachine, VANILLA)
 from repro.data import make_bool_dataset, BoolTaskSpec
 
+# Multi-epoch training on synthetic data — nightly tier (ci.yml); the fast
+# tier-1 subset runs with -m "not slow".
+pytestmark = pytest.mark.slow
+
 SPEC = BoolTaskSpec("test", features=64, classes=4, motifs_per_class=4,
                     motif_bits=8, active_motifs=2, background_p=0.03,
                     flip_p=0.02, seed=99)
@@ -31,7 +35,9 @@ def test_tm_learns(tm_type, mode):
                    classes=SPEC.classes, T=16, s=4.0,
                    prng_backend="threefry")
     tm = TsetlinMachine(cfg, seed=0, mode=mode, chunk=8)
-    tm.fit(xtr, ytr, epochs=2, batch=32)
+    # 3 epochs: the batched-CoTM variant sits right at the 0.85 bar after 2
+    # (0.83 measured); one more epoch clears it with margin on every variant.
+    tm.fit(xtr, ytr, epochs=3, batch=32)
     acc = tm.score(xte, yte)
     assert acc > 0.85, (tm_type, mode, acc)
 
