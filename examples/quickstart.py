@@ -1,24 +1,29 @@
-"""Quickstart: train a Coalesced Tsetlin Machine in ~20 lines.
+"""Quickstart: the unified compile/program/run API in ~15 lines.
+
+A TMSpec describes the model; the TM estimator lowers it onto a
+compiled-once DTM engine and drives training/eval (fit/predict/score).
+Swap `TMSpec.coalesced` for `.vanilla(...)`, `.conv(...)`,
+`.regression(...)` or `.head(...)` — same shell, same engine design.
 
 PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import COALESCED, TMConfig, TsetlinMachine
+from repro.api import TM, TMSpec
 from repro.data import MNIST_LIKE, make_bool_dataset
 
 # 784 Boolean features, 10 classes — MNIST geometry (synthetic surrogate).
 x, y = make_bool_dataset(MNIST_LIKE, 1024)
 xtr, ytr, xte, yte = x[:768], y[:768], x[768:], y[768:]
 
-cfg = TMConfig(
-    tm_type=COALESCED,     # or VANILLA
+spec = TMSpec.coalesced(
     features=MNIST_LIKE.features,
-    clauses=128,           # shared clause pool (Fig 1e)
     classes=MNIST_LIKE.classes,
-    T=32, s=6.0,           # threshold + sensitivity hyper-parameters
-    prng_backend="threefry",
+    clauses=256,           # shared clause pool (Fig 1e)
+    T=48, s=6.0,           # threshold + sensitivity hyper-parameters
 )
-tm = TsetlinMachine(cfg, seed=0, mode="batched")
-history = tm.fit(xtr, ytr, epochs=3, batch=32, x_test=xte, y_test=yte)
+tm = TM(spec, seed=0)
+history = tm.fit(xtr, ytr, epochs=5, batch=32, x_test=xte, y_test=yte)
 for h in history:
     print(h)
-print(f"final test accuracy: {tm.score(xte, yte):.3f}")
+acc = tm.score(xte, yte)
+print(f"final test accuracy: {acc:.3f}")
+assert acc > 0.8, acc

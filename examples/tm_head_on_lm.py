@@ -3,14 +3,19 @@
 pooled hidden states are thermometer-Booleanised and a CoTM learns the
 classification with integer-only training.
 
+Unified API: the head is ``TMSpec.head(calib, ...)`` — the booleanizer is
+folded into the spec, and the program runs on the same compiled-once DTM
+engine as every other TM variant.
+
 PYTHONPATH=src python examples/tm_head_on_lm.py
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import TM, TMSpec
 from repro.configs import get_smoke
-from repro.core import TMHead, pool_backbone_features
+from repro.core import pool_backbone_features
 from repro.models import Model
 
 # frozen backbone (reduced config)
@@ -31,17 +36,13 @@ def features(tokens):
     h, _ = model.hidden(params, {"tokens": tokens})
     return pool_backbone_features(h).astype(jnp.float32)
 
-feats = np.asarray(jax.vmap(lambda i: 0)(jnp.arange(1)))  # warm jit noop
 feats = np.concatenate([np.asarray(features(jnp.asarray(toks[i:i + 64])))
                         for i in range(0, N, 64)])
 
-head = TMHead.create(cfg.d_model, 3, calib=feats[:128], therm_bits=4,
-                     clauses=64, T=16, s=4.0)
-for ep in range(3):
-    for i in range(0, 448, 32):
-        head.train_batch(jnp.asarray(feats[i:i + 32]),
-                         jnp.asarray(y[i:i + 32]))
-pred = np.asarray(head.predict(jnp.asarray(feats[448:])))
-acc = (pred == y[448:]).mean()
+spec = TMSpec.head(feats[:128], classes=3, therm_bits=6, clauses=128,
+                   T=32, s=4.0)
+head = TM(spec, seed=0)
+head.fit(feats[:448], y[:448], epochs=5, batch=32)
+acc = head.score(feats[448:], y[448:], batch=64)
 print(f"TM-head accuracy on LM features: {acc:.3f}")
 assert acc > 0.7

@@ -1,0 +1,373 @@
+"""One engine, every TM — the unified ``compile → program → run`` front-end.
+
+The paper's core claim (§IV, Fig 5–6) is that ONE synthesised datapath runs
+*any* TM model via run-time reprogramming.  This module is the toolchain
+that makes the claim usable (the MATADOR lesson, arXiv:2403.10538): a
+single front-end that lowers heterogeneous TM workloads onto one fixed
+engine.
+
+    spec   = TMSpec.coalesced(features=784, classes=10, clauses=128)
+    engine = api.compile(api.tile_for(spec))        # compiled ONCE
+    prog   = engine.lower(spec, jax.random.PRNGKey(0))   # pure data
+    ...                                             # engine.train_step(...)
+
+or, batteries included, the uniform estimator shell:
+
+    tm = api.TM(spec)
+    tm.fit(x, y, epochs=3)
+    tm.score(x_test, y_test)
+    tm.save("ckpt/")                                # via repro.checkpoint
+
+Five spec kinds lower onto the same engine executables:
+
+* ``vanilla`` / ``coalesced`` — the paper's two algorithms (Eq 3 block
+  weights vs dense learned weights) on the flat datapath.
+* ``conv``       — patch extraction is host-side :meth:`TMSpec.to_bool`;
+  per-patch clause eval + OR-over-patches ride the shared clause datapath
+  (patch axis padded to the engine's ``max_patches`` and masked).
+* ``regression`` — a program *flag*: error-driven clause selection through
+  the same Alg-3 fixed-point margin compare, weights frozen.
+* ``head``       — a CoTM whose thermometer booleanizer is folded into the
+  spec (the lowered program sees ordinary literals).
+
+Swapping programs (any kind → any kind) never recompiles an engine stage;
+``engine.cache_report()`` proves it and ``launch/serve_tm.py`` serves it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core.booleanize import Booleanizer, fit_thermometer
+from repro.core.dtm import DTMEngine, DTMProgram
+from repro.core.evaluate import accuracy, batched_predict, fit_loop
+from repro.core.prng import PRNG
+from repro.core.types import COALESCED, TMConfig, TileConfig, VANILLA
+
+KINDS = ("vanilla", "coalesced", "conv", "regression", "head")
+
+
+@functools.lru_cache(maxsize=None)
+def _position_code(img_h: int, img_w: int, patch: int) -> np.ndarray:
+    """Thermometer patch-position bits [P, pos_bits] — a pure function of
+    the conv geometry, built once per spec shape (not per batch)."""
+    oh, ow = img_h - patch + 1, img_w - patch + 1
+    pi = np.arange(oh)[:, None].repeat(ow, 1).reshape(-1)            # [P]
+    pj = np.arange(ow)[None, :].repeat(oh, 0).reshape(-1)
+    rt = (pi[:, None] > np.arange(oh - 1)[None, :]).astype(np.int8)
+    ct = (pj[:, None] > np.arange(ow - 1)[None, :]).astype(np.int8)
+    return np.concatenate([rt, ct], -1)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TMSpec:
+    """Tagged union over the TM model family — everything ``lower`` needs.
+
+    Use the per-kind constructors (``TMSpec.vanilla(...)`` etc.); the raw
+    dataclass fields are the serialised form (``to_dict``/``from_dict``).
+    """
+
+    kind: str
+    features: int = 0                 # flat kinds: Boolean feature count
+    clauses: int = 128                # CoTM pool size / Vanilla per-class
+    classes: int = 2
+    T: int = 16
+    s: float = 4.0
+    ta_bits: int = 8
+    weight_bits: int = 12
+    rand_bits: int = 16
+    prng_backend: str = "counter"
+    boost_true_positive: bool = True
+    # conv geometry (kind == "conv")
+    img_h: int = 0
+    img_w: int = 0
+    patch: int = 0
+    # head booleanizer (kind == "head"): thermometer cuts [f_raw, bits]
+    thresholds: Optional[np.ndarray] = None
+
+    # ---- constructors ------------------------------------------------------
+    @classmethod
+    def vanilla(cls, features: int, classes: int, clauses: int = 128,
+                **kw) -> "TMSpec":
+        return cls(kind="vanilla", features=features, classes=classes,
+                   clauses=clauses, **kw)
+
+    @classmethod
+    def coalesced(cls, features: int, classes: int, clauses: int = 128,
+                  **kw) -> "TMSpec":
+        return cls(kind="coalesced", features=features, classes=classes,
+                   clauses=clauses, **kw)
+
+    @classmethod
+    def conv(cls, img_h: int, img_w: int, patch: int, classes: int,
+             clauses: int = 64, **kw) -> "TMSpec":
+        assert 0 < patch <= min(img_h, img_w)
+        return cls(kind="conv", img_h=img_h, img_w=img_w, patch=patch,
+                   classes=classes, clauses=clauses, **kw)
+
+    @classmethod
+    def regression(cls, features: int, clauses: int = 128, T: int = 128,
+                   s: float = 3.0, **kw) -> "TMSpec":
+        return cls(kind="regression", features=features, clauses=clauses,
+                   T=T, s=s, **kw)
+
+    @classmethod
+    def head(cls, calib: np.ndarray, classes: int, therm_bits: int = 4,
+             clauses: int = 128, T: int = 64, s: float = 5.0,
+             **kw) -> "TMSpec":
+        """CoTM readout over float features; fits the thermometer
+        booleanizer from a calibration array [n, f_raw]."""
+        booleanizer = fit_thermometer(np.asarray(calib), bits=therm_bits)
+        return cls(kind="head", classes=classes, clauses=clauses, T=T, s=s,
+                   thresholds=booleanizer.thresholds, **kw)
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+    # ---- derived geometry --------------------------------------------------
+    @property
+    def pos_bits(self) -> int:
+        # thermometer-coded patch upper-left position (Granmo §3)
+        return (self.img_h - self.patch) + (self.img_w - self.patch)
+
+    @property
+    def n_patches(self) -> int:
+        if self.kind != "conv":
+            return 1
+        return (self.img_h - self.patch + 1) * (self.img_w - self.patch + 1)
+
+    @property
+    def bool_features(self) -> int:
+        """Boolean features seen by the clause datapath."""
+        if self.kind == "conv":
+            return self.patch * self.patch + self.pos_bits
+        if self.kind == "head":
+            return int(self.thresholds.shape[0] * self.thresholds.shape[1])
+        return self.features
+
+    def tm_config(self) -> TMConfig:
+        common = dict(features=self.bool_features, clauses=self.clauses,
+                      s=self.s, ta_bits=self.ta_bits,
+                      weight_bits=self.weight_bits, rand_bits=self.rand_bits,
+                      prng_backend=self.prng_backend,
+                      boost_true_positive=self.boost_true_positive)
+        if self.kind == "vanilla":
+            return TMConfig(tm_type=VANILLA, classes=self.classes, T=self.T,
+                            **common)
+        if self.kind == "regression":
+            # classes=2 is the minimum legal geometry; the class machinery
+            # is bypassed by the program's regression flag
+            return TMConfig(tm_type=COALESCED, classes=2,
+                            T=min(self.T, 8191), **common)
+        return TMConfig(tm_type=COALESCED, classes=self.classes, T=self.T,
+                        **common)
+
+    # ---- host-side input encoding (engine.encode finishes the layout) ------
+    def to_bool(self, x: jax.Array) -> jax.Array:
+        """Raw model input -> Boolean features.
+
+        vanilla/coalesced/regression: [B, f] {0,1} passthrough;
+        head: [B, f_raw] float -> thermometer bits [B, f_raw*k];
+        conv: [B, H, W] {0,1} images -> patch features [B, P, f_patch]."""
+        if self.kind == "head":
+            return Booleanizer(self.thresholds)(jnp.asarray(x))
+        if self.kind == "conv":
+            return self._patch_features(jnp.asarray(x))
+        return jnp.asarray(x)
+
+    def _patch_features(self, images: jax.Array) -> jax.Array:
+        """[B, H, W] {0,1} -> [B, P, patch² + pos_bits] (bits + thermometer
+        position code), the Granmo conv literal recipe minus the complement
+        half (the engine layout adds it)."""
+        B = images.shape[0]
+        kh = kw = self.patch
+        oh, ow = self.img_h - kh + 1, self.img_w - kw + 1
+        rows = []
+        for di in range(kh):            # static loops — K is tiny
+            for dj in range(kw):
+                rows.append(images[:, di:di + oh, dj:dj + ow])
+        patches = jnp.stack(rows, axis=-1).reshape(B, oh * ow, kh * kw)
+        pos = jnp.asarray(_position_code(self.img_h, self.img_w, self.patch))
+        pos = jnp.broadcast_to(pos[None], (B, *pos.shape))
+        return jnp.concatenate([patches.astype(jnp.int8), pos], -1)
+
+    # ---- label/output codec (ONE definition for estimator AND server) ------
+    def encode_labels(self, y) -> jax.Array:
+        """Targets -> the int32 labels the engine step consumes.
+
+        Regression: floats in [0, 1] -> integer vote targets in [0, T];
+        everything else: class ids."""
+        if self.kind == "regression":
+            t = self.tm_config().T
+            v = jnp.round(jnp.asarray(y, jnp.float32) * t)
+            return jnp.clip(v, 0, t).astype(jnp.int32)
+        return jnp.asarray(y, jnp.int32)
+
+    def decode_output(self, sums: jax.Array, cl: jax.Array) -> jax.Array:
+        """Engine infer outputs -> model prediction.
+
+        Regression: clipped clause-vote count scaled back to [0, 1]
+        float32; everything else: argmax class ids."""
+        if self.kind == "regression":
+            t = self.tm_config().T
+            votes = jnp.clip(cl.sum(-1), 0, t)
+            return votes.astype(jnp.float32) / t
+        return jnp.argmax(sums, axis=-1)
+
+    # ---- serialisation (repro.checkpoint extra payload) --------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d["thresholds"] is not None:
+            d["thresholds"] = np.asarray(d["thresholds"]).tolist()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TMSpec":
+        d = dict(d)
+        if d.get("thresholds") is not None:
+            d["thresholds"] = np.asarray(d["thresholds"], np.float32)
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# compile — the "synthesis" step (once per engine geometry)
+# ---------------------------------------------------------------------------
+
+def tile_for(*specs: TMSpec, x: int = 128, y: int = 128, m: int = 128,
+             n: int = 8, batch_tile: int = 8) -> TileConfig:
+    """Smallest engine geometry that fits every given spec (multi-tenant
+    sizing: pass all models a server will host)."""
+    assert specs
+    cfgs = [s.tm_config() for s in specs]
+    return TileConfig(
+        x=x, y=y, m=m, n=n, batch_tile=batch_tile,
+        max_features=max(c.features for c in cfgs),
+        max_clauses=max(c.total_clauses for c in cfgs),
+        max_classes=max(c.classes for c in cfgs),
+        max_patches=max(s.n_patches for s in specs))
+
+
+def compile(tile: Optional[TileConfig] = None, backend: str = "auto",
+            rand_bits: int = 16) -> DTMEngine:
+    """Compile the one engine (the FPGA 'synthesis' analogue).  Everything
+    after this — any model, any TM kind — is programming, not compiling."""
+    return DTMEngine(tile or TileConfig(), rand_bits=rand_bits,
+                     backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# TM — the uniform estimator shell (replaces the five bespoke drivers)
+# ---------------------------------------------------------------------------
+
+class TM:
+    """``fit / partial_fit / predict / score / save / load`` for any TMSpec.
+
+    Owns a :class:`DTMProgram` (+ PRNG stream) and runs it on a shared or
+    private compiled-once :class:`DTMEngine`.  ``score`` returns accuracy
+    for classification kinds and ``-MAE`` for regression (higher = better).
+    """
+
+    def __init__(self, spec: TMSpec, engine: Optional[DTMEngine] = None,
+                 tile: Optional[TileConfig] = None, backend: str = "auto",
+                 seed: int = 0):
+        self.spec = spec
+        self.cfg = spec.tm_config()
+        self.engine = (engine if engine is not None
+                       else compile(tile or tile_for(spec), backend,
+                                    rand_bits=self.cfg.rand_bits))
+        self.program: DTMProgram = self.engine.lower(
+            spec, jax.random.PRNGKey(seed))
+        self.prng = PRNG.create(self.cfg, seed + 1)
+        self.steps = 0
+
+    # ---- data plumbing -----------------------------------------------------
+    def _encode(self, x) -> jax.Array:
+        return self.engine.encode(self.spec, jnp.asarray(x))
+
+    # ---- training ----------------------------------------------------------
+    def partial_fit(self, x, y) -> dict:
+        """One engine train step on a batch; returns the stats dict."""
+        lits, lab = self._encode(x), self.spec.encode_labels(y)
+        step = self.engine.train_fn(self.spec)
+        self.program, self.prng, stats = step(self.program, self.prng,
+                                              lits, lab)
+        self.steps += 1
+        return stats
+
+    def fit(self, x, y, epochs: int = 1, batch: int = 32,
+            log_every: int = 0, x_test=None, y_test=None,
+            rng: Optional[np.random.Generator] = None) -> list:
+        extra = None
+        if self.spec.kind == "regression":
+            # accuracy is not defined against vote targets — report MAE
+            extra = lambda agg, n: {
+                "train_mae": agg.get("abs_err", 0) / max(n * self.cfg.T, 1),
+                "train_acc": None}
+        return fit_loop(self.partial_fit, x, y, epochs=epochs, batch=batch,
+                        rng=rng, log_every=log_every,
+                        score_fn=(None if x_test is None else self.score),
+                        x_test=x_test, y_test=y_test, extra_metrics=extra)
+
+    # ---- inference ---------------------------------------------------------
+    def _infer(self, x):
+        lits = self._encode(x)
+        return self.engine.infer_fn(self.spec)(self.program, lits)
+
+    def predict(self, x) -> jax.Array:
+        """Class ids [B] (classification) or predictions in [0,1] [B]
+        (regression)."""
+        return self.spec.decode_output(*self._infer(x))
+
+    def class_sums(self, x) -> jax.Array:
+        sums, _ = self._infer(x)
+        return sums
+
+    def score(self, x, y, batch: int = 256) -> float:
+        if self.spec.kind == "regression":
+            pred = batched_predict(self.predict, x, batch=batch)
+            return -float(np.abs(pred - np.asarray(y)).mean())
+        return accuracy(self.predict, x, y, batch=batch)
+
+    # ---- persistence (repro.checkpoint: atomic, step-addressed) ------------
+    def save(self, ckpt_dir: str, step: Optional[int] = None,
+             keep: int = 3) -> str:
+        tree = {"ta": self.program.ta, "weights": self.program.weights,
+                "prng": self.prng}
+        extra = {"spec": self.spec.to_dict(),
+                 "tile": dataclasses.asdict(self.engine.tile),
+                 "backend": self.engine.backend, "steps": self.steps}
+        return checkpoint.save(ckpt_dir, self.steps if step is None else step,
+                               tree, extra=extra, keep=keep)
+
+    @classmethod
+    def load(cls, ckpt_dir: str, engine: Optional[DTMEngine] = None,
+             step: Optional[int] = None, seed: int = 0) -> "TM":
+        step = checkpoint.latest_step(ckpt_dir) if step is None else step
+        assert step is not None, f"no checkpoint under {ckpt_dir}"
+        with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                               "meta.json")) as f:
+            extra = json.load(f)["extra"]
+        spec = TMSpec.from_dict(extra["spec"])
+        if engine is None:
+            engine = compile(TileConfig(**extra["tile"]),
+                             backend=extra["backend"],
+                             rand_bits=spec.tm_config().rand_bits)
+        tm = cls(spec, engine=engine, seed=seed)
+        tree, _ = checkpoint.restore(
+            ckpt_dir, step,
+            like={"ta": tm.program.ta, "weights": tm.program.weights,
+                  "prng": tm.prng})
+        tm.program = dataclasses.replace(
+            tm.program, ta=jnp.asarray(tree["ta"]),
+            weights=jnp.asarray(tree["weights"]))
+        tm.prng = tree["prng"]
+        tm.steps = int(extra.get("steps", 0))
+        return tm

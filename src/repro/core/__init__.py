@@ -7,6 +7,7 @@ from .clause import (clause_outputs_logical, clause_outputs_matmul,
                      class_sums, predict, vanilla_polarity)
 from .prng import PRNG, LFSRState, make_cluster, lfsr_step, cluster_next
 from .feedback import train_step, FeedbackStats
+from .evaluate import accuracy, batched_predict, fit_loop
 from .tm import TsetlinMachine
 from .dtm import DTMEngine, DTMProgram
 from .tm_head import TMHead, pool_backbone_features
@@ -19,6 +20,6 @@ __all__ = [
     "clause_outputs_matmul", "class_sums", "predict", "vanilla_polarity",
     "PRNG", "LFSRState", "make_cluster", "lfsr_step", "cluster_next",
     "train_step", "FeedbackStats", "TsetlinMachine", "DTMEngine",
-    "conv_tm", "regression_tm",
+    "conv_tm", "regression_tm", "accuracy", "batched_predict", "fit_loop",
     "DTMProgram", "TMHead", "pool_backbone_features",
 ]

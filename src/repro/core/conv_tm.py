@@ -1,6 +1,13 @@
 """Convolutional Tsetlin Machine (paper §VI future work; Granmo et al.,
 arXiv:1905.09688) as a DTM module.
 
+.. deprecated:: ISSUE 2
+    Use ``repro.api.TM(TMSpec.conv(...))`` — the conv dataflow now lowers
+    onto the compiled-once DTM engine (patch gather + OR-over-patches as
+    pre/post stages around the shared clause datapath,
+    ``DTMEngine._train_conv``).  This module remains the standalone
+    reference implementation the nightly parity/quality tests pin.
+
 A clause evaluates on every K×K patch of the Booleanised image (literals =
 patch bits + thermometer-coded patch position) and fires iff ANY patch
 matches (OR over patches).  During training each firing clause picks ONE

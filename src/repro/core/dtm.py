@@ -16,6 +16,25 @@ Unification trick (the paper's own, Eq 3): Vanilla TM is executed on the
 CoTM datapath as a *block-diagonal frozen ±1 weight matrix* over a pool of
 ``classes × clauses/class`` rows; CoTM is a dense learned weight matrix over
 a shared pool.  One engine, both algorithms.
+
+Unified front-end (ISSUE 2): the engine also lowers the rest of the TM
+family onto the same fixed stage executables —
+
+* **Conv TM** — patch extraction is host-side data prep (:meth:`encode`);
+  per-patch clause evaluation reuses the shared clause datapath over a
+  ``[B·P, L]`` view; OR-over-patches / random-matching-patch feedback are
+  the conv pre/post stages (``_infer_conv`` / ``_train_conv``, compiled
+  once, patch axis padded to ``tile.max_patches`` and masked per program).
+* **Regression TM** — a *program flag* (``DTMProgram.regression``): the
+  same ``_train`` executable computes the error-driven clause selection
+  with the Alg-3 fixed-point margin compare and routes it into the shared
+  TA-update kernel; weights are frozen unit votes.
+* **TM head** — a CoTM program whose booleanizer lives in the spec; the
+  engine sees ordinary literals.
+
+``engine.lower(spec, key)`` (spec = :class:`repro.api.TMSpec`, duck-typed)
+returns a :class:`DTMProgram`; swapping programs never recompiles any
+stage (``cache_report()`` — every executable stays at one jit cache entry).
 """
 from __future__ import annotations
 
@@ -48,6 +67,8 @@ class DTMProgram:
     p_ta      uint32 []     precomputed ⌊2^rand_bits / s⌋ (§IV-B-c)
     boost     bool  []      boost-true-positive flag
     n_states  int32 []      2^ta_bits (TA clip bound; runtime-selectable)
+    regression bool []      True = error-driven feedback (Regression TM)
+    p_mask    int32 [P]     1 = real patch slot (conv programs; flat: [1,0..])
     """
 
     ta: jax.Array
@@ -61,10 +82,16 @@ class DTMProgram:
     boost: jax.Array
     n_states: jax.Array
     w_clip: jax.Array
+    regression: jax.Array
+    p_mask: jax.Array
 
     def tree_flatten(self):
-        fields = dataclasses.astuple(self)
-        return fields, None
+        # NOT dataclasses.astuple: that deep-copies every leaf on each
+        # flatten, and flatten runs on every jit dispatch (hot path).
+        return ((self.ta, self.weights, self.cl_mask, self.l_mask,
+                 self.h_mask, self.w_frozen, self.T, self.p_ta, self.boost,
+                 self.n_states, self.w_clip, self.regression, self.p_mask),
+                None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -107,8 +134,12 @@ class DTMEngine:
         self.tile = tile
         self.rand_bits = rand_bits
         self.L, self.R, self.H = tile.padded_dims()
+        self.P = tile.max_patches
         self._infer = jax.jit(self._infer_impl)
         self._train = jax.jit(self._train_impl)
+        # conv stage executables (only ever compiled if a conv program runs)
+        self._infer_conv = jax.jit(self._infer_conv_impl)
+        self._train_conv = jax.jit(self._train_conv_impl)
 
     # ------------------------------------------------------------------ #
     # programming (paper §IV-D-a)                                         #
@@ -159,46 +190,132 @@ class DTMEngine:
             T=jnp.asarray(cfg.T, jnp.int32), p_ta=p_ta,
             boost=jnp.asarray(cfg.boost_true_positive),
             n_states=jnp.asarray(cfg.n_states, jnp.int32),
-            w_clip=jnp.asarray(cfg.weight_clip, jnp.int32))
+            w_clip=jnp.asarray(cfg.weight_clip, jnp.int32),
+            regression=jnp.asarray(False),
+            p_mask=(jnp.arange(self.P) < 1).astype(jnp.int32))
 
-    def pad_features(self, bool_x: jax.Array, cfg: TMConfig) -> jax.Array:
-        """Host-side literal layout: [x pad | ~x pad] -> [B, L]."""
-        f, half = cfg.features, self.L // 2
-        x = bool_x.astype(jnp.int8)
+    def lower(self, spec, key: jax.Array,
+              ta: Optional[jax.Array] = None,
+              weights: Optional[jax.Array] = None) -> DTMProgram:
+        """Lower a :class:`repro.api.TMSpec` (duck-typed: ``kind``,
+        ``tm_config()``, ``n_patches``) to run-time program data.
+
+        Every TM variant becomes the same uniform :class:`DTMProgram`
+        pytree, so swapping any program for any other never retraces an
+        engine executable."""
+        cfg = spec.tm_config()
+        n_p = int(getattr(spec, "n_patches", 1))
+        assert n_p <= self.P, (
+            f"spec needs {n_p} patch slots, engine has {self.P} "
+            f"(TileConfig.max_patches)")
+        # the spec's PRNG emits rand_bits-wide numbers; the engine's
+        # fixed-point compares shift by ITS rand_bits — they must agree or
+        # the Alg-3 select probabilities silently collapse to ~0 or ~1
+        assert cfg.rand_bits == self.rand_bits, (
+            f"spec rand_bits={cfg.rand_bits} != engine rand_bits="
+            f"{self.rand_bits}")
+        prog = self.program(cfg, key, ta=ta, weights=weights)
+        if n_p != 1:
+            prog = dataclasses.replace(
+                prog, p_mask=(jnp.arange(self.P) < n_p).astype(jnp.int32))
+        if getattr(spec, "kind", None) == "regression":
+            # all clauses vote +1 through a frozen unit weight row; the
+            # select path reads the clipped vote count, not class sums
+            if weights is None:
+                w = jnp.zeros((self.H, self.R), jnp.int32)
+                w = w.at[0, :cfg.clauses].set(1)
+                prog = dataclasses.replace(prog, weights=w)
+            prog = dataclasses.replace(
+                prog, w_frozen=jnp.asarray(True),
+                regression=jnp.asarray(True))
+        return prog
+
+    def _layout(self, bool_feats: jax.Array) -> jax.Array:
+        """[..., f] {0,1} -> engine literal layout [..., L] = [x pad|~x pad]."""
+        f, half = bool_feats.shape[-1], self.L // 2
+        x = bool_feats.astype(jnp.int8)
         z = jnp.zeros((*x.shape[:-1], half - f), jnp.int8)
         return jnp.concatenate([x, z, 1 - x, z], axis=-1)
 
+    def pad_features(self, bool_x: jax.Array,
+                     cfg: Optional[TMConfig] = None) -> jax.Array:
+        """Host-side literal layout: [x pad | ~x pad] -> [B, L]."""
+        return self._layout(bool_x)
+
+    def encode(self, spec, x: jax.Array) -> jax.Array:
+        """Host-side data prep: raw model input -> engine literal layout.
+
+        Flat kinds (vanilla/coalesced/regression/head) -> ``[B, L]``;
+        conv -> ``[B, max_patches, L]`` (patch slots zero-padded; the
+        per-program ``p_mask`` hides them from the datapath)."""
+        feats = spec.to_bool(x)
+        lits = self._layout(feats)
+        if lits.ndim == 3:
+            lits = jnp.pad(lits, ((0, 0), (0, self.P - lits.shape[1]),
+                                  (0, 0)))
+        return lits
+
     # ------------------------------------------------------------------ #
-    # inference (Eq 1 + Eq 2/3 on the padded grid)                        #
+    # shared datapath stages                                              #
     # ------------------------------------------------------------------ #
-    def _infer_impl(self, prog: DTMProgram, lits: jax.Array):
+    def _clause_outputs(self, prog: DTMProgram, lits: jax.Array,
+                        eval_mode: bool) -> jax.Array:
+        """Clause-matrix stage: [N, L] literals -> [N, R] int32 outputs."""
         include = (prog.ta >= (prog.n_states >> 1)).astype(jnp.int32)  # [R,L]
         if self.backend == "kernel":
             # unfused MXU pair — the dispatcher's "mxu" eval path.  Padded
             # TA columns are zero, so include already honours l_mask.
             cl = kops.clause_eval_op(lits.astype(jnp.int8),
                                      include.astype(jnp.int8),
-                                     eval_mode=True)
-            cl = cl * prog.cl_mask[None, :]
-            sums = kops.class_sum_op(cl, prog.weights)
+                                     eval_mode=eval_mode)
         else:
             viol = jax.lax.dot_general(
                 (1 - lits.astype(jnp.int32)) * prog.l_mask[None, :], include,
                 dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.int32)                      # [B,R]
-            nonempty = (include * prog.l_mask[None, :]).max(axis=1)
-            cl = ((viol == 0) & (nonempty == 1)).astype(jnp.int32)
-            cl = cl * prog.cl_mask[None, :]
+                preferred_element_type=jnp.int32)                      # [N,R]
+            cl = (viol == 0)
+            if eval_mode:
+                nonempty = (include * prog.l_mask[None, :]).max(axis=1)
+                cl = cl & (nonempty[None, :] == 1)
+            cl = cl.astype(jnp.int32)
+        return cl * prog.cl_mask[None, :]
+
+    def _class_sums(self, prog: DTMProgram, cl: jax.Array) -> jax.Array:
+        """Weight-matrix stage: [B, R] clauses -> pinned [B, H] sums."""
+        if self.backend == "kernel":
+            sums = kops.class_sum_op(cl, prog.weights)
+        else:
             sums = jax.lax.dot_general(
                 cl, prog.weights,
                 dimension_numbers=(((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.int32)                      # [B,H]
-        sums = jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
-        return sums, cl
+        return jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
+
+    # ------------------------------------------------------------------ #
+    # inference (Eq 1 + Eq 2/3 on the padded grid)                        #
+    # ------------------------------------------------------------------ #
+    def _infer_impl(self, prog: DTMProgram, lits: jax.Array):
+        cl = self._clause_outputs(prog, lits, eval_mode=True)
+        return self._class_sums(prog, cl), cl
+
+    def _infer_conv_impl(self, prog: DTMProgram, plits: jax.Array):
+        """Conv pre/post stages around the shared clause datapath:
+        per-patch clause eval on the [B·P, L] view, OR over real patches,
+        then the ordinary weight-matrix stage."""
+        B, P, L = plits.shape
+        cl_p = self._clause_outputs(prog, plits.reshape(B * P, L),
+                                    eval_mode=True)
+        cl_p = cl_p.reshape(B, P, self.R) * prog.p_mask[None, :, None]
+        cl = cl_p.max(axis=1)                                          # [B,R]
+        return self._class_sums(prog, cl), cl
 
     def infer(self, prog: DTMProgram, lits: jax.Array):
         """lits [B, L] (from pad_features) -> (class_sums [B,H], clause [B,R])."""
         return self._infer(prog, lits)
+
+    def infer_conv(self, prog: DTMProgram, plits: jax.Array):
+        """plits [B, P, L] (from encode) -> (class_sums [B,H], clause [B,R])."""
+        return self._infer_conv(prog, plits)
 
     def predict(self, prog: DTMProgram, lits: jax.Array) -> jax.Array:
         sums, _ = self.infer(prog, lits)
@@ -220,6 +337,7 @@ class DTMEngine:
         """
         B = lits.shape[0]
         n_cls = prog.h_mask.sum()
+        reg = prog.regression                                          # bool []
 
         # batched random draws (one stream position per datapoint)
         prng, c_rand = prng.bits((B,))
@@ -229,26 +347,49 @@ class DTMEngine:
         # so the composed seed keeps 2*rand_bits of entropy
         ta_seed = (seed_bits[0] << jnp.uint32(self.rand_bits)) | seed_bits[1]
 
+        # Regression programs carry the integer vote target in `labels`
+        # (may exceed the class count) — the class-indexed machinery below
+        # runs on a pinned in-range label so its discarded outputs stay
+        # deterministic on every backend.
+        cls_lab = jnp.where(reg, 0, labels)
         # negated class among the *valid* classes
         rn = (c_rand % (jnp.maximum(n_cls - 1, 1).astype(jnp.uint32))
               ).astype(jnp.int32)
-        neg = jnp.where(rn < labels, rn, rn + 1)                       # [B]
+        neg = jnp.where(rn < cls_lab, rn, rn + 1)                      # [B]
 
         include = (prog.ta >= (prog.n_states >> 1)).astype(jnp.int8)   # [R,L]
         cl, sums_m, sel_lab, sel_neg = kops.fused_step_op(
-            lits.astype(jnp.int8), include, prog.weights, labels, neg,
+            lits.astype(jnp.int8), include, prog.weights, cls_lab, neg,
             sel_rand[0], sel_rand[1], prog.cl_mask, prog.h_mask,
             prog.T, prog.w_frozen.astype(jnp.int32),
             rand_bits=self.rand_bits, backend=self._kb)
-        correct = (jnp.argmax(sums_m, -1) == labels).sum()
+        # batch accuracy is meaningless against a regression vote target
+        correct = jnp.where(reg, 0, (jnp.argmax(sums_m, -1) == labels).sum())
 
-        # Type I / Type II split per round (sign of the class's weight row)
-        w_lab = jnp.take(prog.weights, labels, axis=0)                 # [B,R]
+        # Regression TM (program flag): clipped clause-vote count vs the
+        # target, P(update) = |err|/2T via the same Alg-3 fixed-point
+        # compare; under-prediction grows clauses (Type I), over-prediction
+        # prunes them (Type II).  Shares the TA-update kernel below.
+        votes = jnp.clip(cl.sum(axis=-1), 0, prog.T)                   # [B]
+        err = labels - votes                                           # [B]
+        sel_reg = ((sel_rand[0].astype(jnp.int32) * (2 * prog.T))
+                   < (jnp.abs(err)[:, None] << self.rand_bits))
+        sel_reg = sel_reg.astype(jnp.int32) * prog.cl_mask[None, :]
+        abs_err = jnp.abs(err).sum()
+
+        # Type I / Type II split per round (sign of the class's weight row;
+        # regression programs split by the sign of the vote error instead)
+        w_lab = jnp.take(prog.weights, cls_lab, axis=0)                # [B,R]
         w_neg = jnp.take(prog.weights, neg, axis=0)
-        t1_lab = sel_lab * (w_lab >= 0)
-        t2_lab = sel_lab * (w_lab < 0)
-        t1_neg = sel_neg * (w_neg < 0)
-        t2_neg = sel_neg * (w_neg >= 0)
+        zero = jnp.zeros_like(sel_lab)
+        t1_lab = jnp.where(reg, sel_reg * (err > 0)[:, None],
+                           sel_lab * (w_lab >= 0))
+        t2_lab = jnp.where(reg, sel_reg * (err < 0)[:, None],
+                           sel_lab * (w_lab < 0))
+        t1_neg = jnp.where(reg, zero, sel_neg * (w_neg < 0))
+        t2_neg = jnp.where(reg, zero, sel_neg * (w_neg >= 0))
+        sel_lab = jnp.where(reg, sel_reg, sel_lab)
+        sel_neg = jnp.where(reg, zero, sel_neg)
 
         # TA update over both rounds flattened into the batch axis; randoms
         # are generated where they are consumed (counter stream keyed on
@@ -262,9 +403,18 @@ class DTMEngine:
             p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
             n_states=prog.n_states, backend=self._kb)
 
-        # Alg 4 weight nudges: one-hot scatter-add as two int32 matmuls
+        new_w, stats = self._weights_and_stats(
+            prog, cl, sel_lab, sel_neg, cls_lab, neg, correct, abs_err)
+        new_prog = dataclasses.replace(prog, ta=new_ta, weights=new_w)
+        return new_prog, prng, stats
+
+    def _weights_and_stats(self, prog: DTMProgram, cl, sel_lab, sel_neg,
+                           lab, neg, correct, abs_err):
+        """Shared training post-stage: Alg-4 weight nudges (one-hot
+        scatter-add as two int32 matmuls) + Alg-6 group-skip accounting on
+        the engine's y-tile granularity."""
         hr = jnp.arange(self.H, dtype=jnp.int32)
-        lab_oh = (labels[:, None] == hr[None, :]).astype(jnp.int32)    # [B,H]
+        lab_oh = (lab[:, None] == hr[None, :]).astype(jnp.int32)       # [B,H]
         neg_oh = (neg[:, None] == hr[None, :]).astype(jnp.int32)
         contract_b = (((0,), (0,)), ((), ()))
         d_w = (jax.lax.dot_general(lab_oh, sel_lab * cl, contract_b,
@@ -274,20 +424,129 @@ class DTMEngine:
         new_w = jnp.where(prog.w_frozen, prog.weights,
                           jnp.clip(prog.weights + d_w, -prog.w_clip,
                                    prog.w_clip))
-        new_prog = dataclasses.replace(prog, ta=new_ta, weights=new_w)
 
-        # Alg 6 group-skip accounting on the engine's y-tile granularity
         d_sel = (sel_lab + sel_neg).sum(axis=0)                        # [R]
         g = (d_sel > 0).astype(jnp.int32).reshape(-1, self.tile.y).max(-1)
         gmask = prog.cl_mask.reshape(-1, self.tile.y).max(-1)
         stats = {"selected": d_sel.sum(), "active_groups": (g * gmask).sum(),
-                 "total_groups": gmask.sum(), "correct": correct}
-        return new_prog, prng, stats
+                 "total_groups": gmask.sum(), "correct": correct,
+                 "abs_err": abs_err}
+        return new_w, stats
 
     def train_step(self, prog: DTMProgram, prng: PRNG, lits: jax.Array,
                    labels: jax.Array):
         return self._train(prog, prng, lits, labels)
 
+    # ------------------------------------------------------------------ #
+    # conv training (Granmo et al. conv feedback around the shared stages)#
+    # ------------------------------------------------------------------ #
+    def _train_conv_impl(self, prog: DTMProgram, prng: PRNG,
+                         plits: jax.Array, labels: jax.Array):
+        """One batched Conv-TM train step.
+
+        Pre-stage: per-patch clause eval on the shared clause datapath
+        ([B·P, L] view).  Post-stages: OR over real patches, the ordinary
+        weight-matrix + Alg-3 selection machinery, then Type I/II feedback
+        against ONE random *matching* patch per (datapoint, clause) — the
+        per-clause literal gather makes this the jnp stage of the engine
+        (the shared-literal TA kernel cannot express it)."""
+        B, P, L = plits.shape
+        R = self.R
+        n_cls = prog.h_mask.sum()
+
+        prng, c_rand = prng.bits((B,))
+        prng, patch_rand = prng.bits((B, P, R))
+        prng, sel_rand = prng.bits((2, B, R))
+        prng, ta_rand = prng.bits((2, B, R, L))
+
+        rn = (c_rand % (jnp.maximum(n_cls - 1, 1).astype(jnp.uint32))
+              ).astype(jnp.int32)
+        neg = jnp.where(rn < labels, rn, rn + 1)                       # [B]
+
+        cl_p = self._clause_outputs(prog, plits.reshape(B * P, L),
+                                    eval_mode=False)
+        cl_p = cl_p.reshape(B, P, R) * prog.p_mask[None, :, None]
+        cl = cl_p.max(axis=1)                                          # [B,R]
+        sums = self._class_sums(prog, cl)
+        correct = (jnp.argmax(sums, -1) == labels).sum()
+
+        # Alg-3 selection (same fixed-point compare as the fused kernel)
+        wf = prog.w_frozen.astype(jnp.int32)
+        sel_lab = kops.round_select_op(
+            sums, labels, 1, sel_rand[0], prog.weights, prog.cl_mask,
+            prog.T, wf, rand_bits=self.rand_bits)
+        sel_neg = kops.round_select_op(
+            sums, neg, 0, sel_rand[1], prog.weights, prog.cl_mask,
+            prog.T, wf, rand_bits=self.rand_bits)
+
+        # ONE random matching patch per (datapoint, clause): perturbed
+        # argmax over the patch axis (p_mask already zeroed padded slots)
+        noise = (patch_rand % jnp.uint32(997)).astype(jnp.int32)   # [B,P,R]
+        patch_idx = jnp.argmax(cl_p * 1000 + noise, axis=1)        # [B,R]
+        onehot = (patch_idx[:, :, None]
+                  == jnp.arange(P)[None, None, :]).astype(jnp.int8)
+        sel_lits = jnp.einsum("brp,bpl->brl", onehot,
+                              plits.astype(jnp.int8),
+                              preferred_element_type=jnp.int32)    # [B,R,L]
+
+        w_lab = jnp.take(prog.weights, labels, axis=0)             # [B,R]
+        w_neg = jnp.take(prog.weights, neg, axis=0)
+        rounds = ((sel_lab * (w_lab >= 0), sel_lab * (w_lab < 0),
+                   ta_rand[0]),
+                  (sel_neg * (w_neg < 0), sel_neg * (w_neg >= 0),
+                   ta_rand[1]))
+
+        # Type I/II deltas against the selected patch's literals (Alg 5,
+        # gated by the OR-level clause output exactly like conv_tm.py)
+        clb = (cl > 0)[:, :, None]                                 # [B,R,1]
+        litb = sel_lits > 0                                        # [B,R,L]
+        incb = (prog.ta >= (prog.n_states >> 1))[None]             # [1,R,L]
+        cl_and_lit = clb & litb
+        inc2 = (clb & ~litb & ~incb).astype(jnp.int8)
+        delta = jnp.zeros((R, L), jnp.int32)
+        for t1, t2, tr in rounds:
+            low = tr < prog.p_ta
+            inc1 = jnp.where(prog.boost, cl_and_lit, cl_and_lit & ~low)
+            d1 = inc1.astype(jnp.int8) - (~cl_and_lit & low).astype(jnp.int8)
+            delta = (delta
+                     + jnp.einsum("br,brl->rl", t1.astype(jnp.int32),
+                                  d1.astype(jnp.int32))
+                     + jnp.einsum("br,brl->rl", t2.astype(jnp.int32),
+                                  inc2.astype(jnp.int32)))
+        delta = delta * prog.l_mask[None, :] * prog.cl_mask[:, None]
+        new_ta = jnp.clip(prog.ta + delta, 0, prog.n_states - 1)
+
+        new_w, stats = self._weights_and_stats(
+            prog, cl, sel_lab, sel_neg, labels, neg, correct,
+            abs_err=jnp.asarray(0, jnp.int32))
+        new_prog = dataclasses.replace(prog, ta=new_ta, weights=new_w)
+        return new_prog, prng, stats
+
+    def train_conv(self, prog: DTMProgram, prng: PRNG, plits: jax.Array,
+                   labels: jax.Array):
+        """plits [B, P, L] (from encode) conv train step."""
+        return self._train_conv(prog, prng, plits, labels)
+
+    # spec-driven stage dispatch (one definition for estimator AND server)
+    def train_fn(self, spec):
+        return (self.train_conv if getattr(spec, "kind", None) == "conv"
+                else self.train_step)
+
+    def infer_fn(self, spec):
+        return (self.infer_conv if getattr(spec, "kind", None) == "conv"
+                else self.infer)
+
     # convenience: compile-cache introspection for the flexibility tests
     def cache_sizes(self) -> Tuple[int, int]:
         return (self._infer._cache_size(), self._train._cache_size())
+
+    def cache_report(self) -> dict:
+        """Jit cache entries per engine stage executable (the paper's
+        'no resynthesis' claim: every value stays <= 1 across arbitrary
+        program swaps)."""
+        return {
+            "infer": self._infer._cache_size(),
+            "train": self._train._cache_size(),
+            "infer_conv": self._infer_conv._cache_size(),
+            "train_conv": self._train_conv._cache_size(),
+        }

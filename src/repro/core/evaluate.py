@@ -1,0 +1,79 @@
+"""Shared host-side train/eval loops (one copy, every driver).
+
+The five bespoke TM drivers each reimplemented the same two loops: a
+batched prediction sweep (``score``) and an epoch loop aggregating
+per-batch feedback stats (``fit``).  The unified estimator shell
+(:mod:`repro.api`), the legacy :class:`repro.core.tm.TsetlinMachine`
+shim, the examples, and the serving benchmark all use these instead.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def batched_predict(predict_fn: Callable, x, batch: int = 256) -> np.ndarray:
+    """Run ``predict_fn`` over ``x`` in fixed-size batches, concatenated.
+
+    The final remainder batch is padded up to ``batch`` and the padding
+    stripped, so the underlying jit executable only ever sees ONE batch
+    shape (keeps engine caches at one entry)."""
+    x = np.asarray(x)
+    n = x.shape[0]
+    outs = []
+    for i in range(0, n, batch):
+        xb = x[i:i + batch]
+        pad = batch - xb.shape[0]
+        if pad:
+            xb = np.concatenate([xb, np.repeat(xb[-1:], pad, axis=0)])
+        out = np.asarray(predict_fn(jnp.asarray(xb)))
+        outs.append(out[:batch - pad] if pad else out)
+    return np.concatenate(outs)
+
+
+def accuracy(predict_fn: Callable, x, y, batch: int = 256) -> float:
+    pred = batched_predict(predict_fn, x, batch=batch)
+    return float((pred == np.asarray(y)).mean())
+
+
+def fit_loop(step_fn: Callable, x, y, epochs: int = 1, batch: int = 32,
+             rng: Optional[np.random.Generator] = None, log_every: int = 0,
+             score_fn: Optional[Callable] = None, x_test=None, y_test=None,
+             extra_metrics: Optional[Callable] = None) -> list:
+    """Generic epoch loop: shuffle, step per batch, aggregate stats.
+
+    ``step_fn(xb, yb)`` returns a mapping with (at least) ``selected``,
+    ``active_groups``, ``total_groups``, ``correct`` scalars — the engine
+    and feedback stats dialects both qualify.  Returns per-epoch records
+    with the canonical keys (``train_acc``, ``selected_clauses``,
+    ``group_skip_frac``, + ``test_acc``/``test_score`` when scoring).
+    ``extra_metrics(agg, n)`` may add kind-specific entries (e.g. MAE).
+    """
+    x, y = np.asarray(x), np.asarray(y)
+    rng = rng or np.random.default_rng(0)
+    n = x.shape[0] - x.shape[0] % batch
+    history = []
+    for ep in range(epochs):
+        perm = rng.permutation(x.shape[0])[:n]
+        agg: dict = {}
+        for i in range(0, n, batch):
+            idx = perm[i:i + batch]
+            stats = step_fn(x[idx], y[idx])
+            for k, v in dict(stats).items():
+                agg[k] = agg.get(k, 0) + int(v)
+        tot = agg.get("total_groups", 0)
+        rec = {"epoch": ep,
+               "train_acc": agg.get("correct", 0) / max(n, 1),
+               "selected_clauses": agg.get("selected", 0),
+               "group_skip_frac": ((tot - agg.get("active_groups", 0))
+                                   / max(tot, 1))}
+        if extra_metrics is not None:
+            rec.update(extra_metrics(agg, n))
+        if score_fn is not None and x_test is not None:
+            rec["test_acc"] = score_fn(x_test, y_test)
+        history.append(rec)
+        if log_every and ep % log_every == 0:
+            print(rec)
+    return history

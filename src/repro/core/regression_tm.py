@@ -8,6 +8,13 @@ mapped linearly onto the target range.  Feedback is error-driven:
 so the clause count converges toward the target — the same fixed-point
 integer comparison machinery as classification (Alg 3) reused with the
 error in place of the class-sum margin.
+
+.. deprecated:: ISSUE 2
+    Use ``repro.api.TM(TMSpec.regression(...))`` — error-driven feedback
+    is now a *program flag* (``DTMProgram.regression``) on the
+    compiled-once DTM engine, sharing its TA-update kernel.  This module
+    remains the standalone reference implementation the nightly quality
+    tests pin.
 """
 from __future__ import annotations
 

@@ -1,5 +1,13 @@
 """High-level Tsetlin Machine API — Vanilla TM and Coalesced TM.
 
+.. deprecated:: ISSUE 2
+    New code should use the unified front-end — ``repro.api.TM`` with a
+    ``TMSpec`` — which runs every TM variant on one compiled
+    :class:`repro.core.dtm.DTMEngine`.  This driver remains as the
+    reference implementation of the paper-faithful ``sequential`` mode
+    (one datapoint per step, Fig 9c), which the batched-delta engine does
+    not model.
+
 Wraps the functional core (clause.py / feedback.py / prng.py) into the
 train/eval driver used by examples, benchmarks, and the distributed launcher.
 Everything stays functional under the hood (state in, state out) so the same
@@ -7,6 +15,7 @@ step functions shard with pjit (see repro.launch.train for mesh wiring).
 """
 from __future__ import annotations
 
+import warnings
 from typing import Iterable, Optional, Tuple
 
 import jax
@@ -16,15 +25,24 @@ import numpy as np
 from . import feedback
 from .booleanize import to_literals
 from .clause import class_sums, predict
+from .evaluate import accuracy, fit_loop
 from .prng import PRNG
 from .types import TMConfig, TMState, init_state
 
 
 class TsetlinMachine:
-    """Convenience object API (functional core inside)."""
+    """Convenience object API (functional core inside).
+
+    Deprecated in favour of ``repro.api.TM`` (see module docstring)."""
 
     def __init__(self, cfg: TMConfig, seed: int = 0, mode: str = "batched",
                  chunk: int = 8):
+        if mode != "sequential":
+            warnings.warn(
+                "TsetlinMachine is deprecated for batched training; use "
+                "repro.api.TM(TMSpec.vanilla(...)/.coalesced(...)) to run "
+                "on the compiled-once DTM engine", DeprecationWarning,
+                stacklevel=2)
         self.cfg = cfg
         self.mode = mode
         self.chunk = chunk
@@ -43,34 +61,25 @@ class TsetlinMachine:
             self.mode, self.chunk)
         return stats
 
+    def _step_stats(self, xb: np.ndarray, yb: np.ndarray) -> dict:
+        stats = self.fit_batch(jnp.asarray(xb), jnp.asarray(yb))
+        return {"selected": stats.selected_clauses,
+                "active_groups": stats.active_groups,
+                "total_groups": stats.total_groups,
+                "correct": stats.correct}
+
     def fit(self, x: np.ndarray, y: np.ndarray, epochs: int = 1,
             batch: int = 32, log_every: int = 0,
             x_test: Optional[np.ndarray] = None,
             y_test: Optional[np.ndarray] = None,
             rng: Optional[np.random.Generator] = None) -> list[dict]:
-        """Simple host loop over epochs; returns per-epoch metric dicts."""
-        rng = rng or np.random.default_rng(0)
-        n = x.shape[0] - x.shape[0] % batch
-        history = []
-        for ep in range(epochs):
-            perm = rng.permutation(x.shape[0])[:n]
-            sel = skip = tot = corr = 0
-            for i in range(0, n, batch):
-                idx = perm[i:i + batch]
-                stats = self.fit_batch(jnp.asarray(x[idx]), jnp.asarray(y[idx]))
-                sel += int(stats.selected_clauses)
-                skip += int(stats.total_groups - stats.active_groups)
-                tot += int(stats.total_groups)
-                corr += int(stats.correct)
-            rec = {"epoch": ep, "train_acc": corr / n,
-                   "selected_clauses": sel,
-                   "group_skip_frac": skip / max(tot, 1)}
-            if x_test is not None:
-                rec["test_acc"] = self.score(x_test, y_test, batch)
-            history.append(rec)
-            if log_every and ep % log_every == 0:
-                print(rec)
-        return history
+        """Shared host loop over epochs; returns per-epoch metric dicts."""
+        return fit_loop(
+            self._step_stats, x, y, epochs=epochs, batch=batch, rng=rng,
+            log_every=log_every,
+            score_fn=(None if x_test is None
+                      else lambda xt, yt: self.score(xt, yt, batch)),
+            x_test=x_test, y_test=y_test)
 
     # -- inference -----------------------------------------------------------
     def predict(self, bool_x: jax.Array) -> jax.Array:
@@ -82,8 +91,4 @@ class TsetlinMachine:
         return sums
 
     def score(self, x: np.ndarray, y: np.ndarray, batch: int = 256) -> float:
-        correct = 0
-        for i in range(0, x.shape[0], batch):
-            p = self.predict(jnp.asarray(x[i:i + batch]))
-            correct += int((np.asarray(p) == y[i:i + batch]).sum())
-        return correct / x.shape[0]
+        return accuracy(self.predict, x, y, batch=batch)

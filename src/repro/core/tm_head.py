@@ -8,6 +8,11 @@ acting as the (frozen) feature extractor.
 
 The head is jit/pjit-compatible: booleanisation is pure jnp, the TM state is
 a pytree, and the train step reuses ``repro.core.feedback``.
+
+.. deprecated:: ISSUE 2
+    Use ``repro.api.TM(TMSpec.head(calib, classes, ...))`` — the
+    booleanizer folds into the spec and the CoTM program runs on the
+    compiled-once DTM engine next to every other TM variant.
 """
 from __future__ import annotations
 

@@ -101,6 +101,11 @@ class TileConfig:
     max_clauses: int = 2048
     max_classes: int = 16
     batch_tile: int = 8
+    # Conv-TM patch capacity: the engine's conv stage executables take a
+    # [B, max_patches, L] literal tensor and mask unused patch slots per
+    # program (the Fig-6 remainder-mask idea extended with a patch axis).
+    # 1 = flat-only engine (no conv stage is ever compiled unless used).
+    max_patches: int = 1
 
     @property
     def max_literals(self) -> int:

@@ -228,6 +228,16 @@ def fused_step_op(literals, include, weights, labels, neg_labels,
     return (clause[:B, :R], sums[:B, :H], sel_lab[:B, :R], sel_neg[:B, :R])
 
 
+def round_select_op(sums, cls, y_c, rand, weights, cl_mask, T, w_frozen,
+                    rand_bits=16):
+    """Alg-3 integer-exact clause selection for one feedback round
+    (public wrapper over the shared jnp formulation — identical on every
+    backend, used by the engine's conv training stage and the unfused
+    baseline)."""
+    return ref._round_select(sums, cls, y_c, rand, weights, cl_mask, T,
+                             w_frozen, rand_bits)
+
+
 @functools.partial(jax.jit, static_argnames=("rand_bits",))
 def unfused_step_op(literals, include, weights, labels, neg_labels,
                     rand_lab, rand_neg, cl_mask, h_mask, T, w_frozen,

@@ -8,3 +8,6 @@ from .mesh import (make_production_mesh, make_host_mesh, HardwareModel,
 
 __all__ = ["make_production_mesh", "make_host_mesh", "HardwareModel",
            "V5E", "mesh_chips", "data_axes"]
+
+# NOTE: the multi-tenant DTM server lives in repro.launch.serve_tm
+# (imported lazily there — it pulls in the full repro.api front-end).

@@ -1,0 +1,291 @@
+"""Multi-tenant DTM serving: one resident engine, hot program swaps.
+
+The FPGA story (paper §IV-A, Table II) as an API: the accelerator is
+synthesised ONCE; switching the hosted model is a RAM rewrite, not a
+resynthesis.  Here the engine's jitted stage executables are the
+synthesised datapath and a :class:`repro.core.dtm.DTMProgram` is the RAM
+image — so a server can host any number of TM models (any mix of the five
+spec kinds) and swap them *between requests* at memory-bandwidth cost.
+
+Requests are padded to a fixed batch-slot size so every tenant hits the
+same compiled executable (jit cache stays at one entry per stage — the
+``cache_report()`` assert at the bottom of the benchmark is the claim).
+
+Benchmark (``BENCH_reconfig.json``): measures
+
+* ``engine_compile_s``   — one-time cost of the first request per stage
+  (the "synthesis" analogue, paid once per server lifetime);
+* ``swap_overhead_us``   — extra latency of a request that *switches*
+  tenants vs one that repeats the resident tenant (the paper's
+  reconfiguration cost, Fig 5/6: iteration counts + masks);
+* ``resynthesis_baseline_s`` — what the swap *would* cost if each model
+  needed its own compiled engine (fresh engine + first request), i.e. the
+  no-DTM world the paper compares against.
+
+CLI:  PYTHONPATH=src python -m repro.launch.serve_tm --smoke \
+          [--backend auto] [--out BENCH_reconfig.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.api import TM, TMSpec
+from repro.core.dtm import DTMEngine, DTMProgram
+from repro.core.prng import PRNG
+
+
+@dataclasses.dataclass
+class _Tenant:
+    spec: TMSpec
+    program: DTMProgram
+    prng: PRNG
+
+
+class TMServer:
+    """One compiled engine, N resident programs, swap-per-request serving.
+
+    ``batch_slot`` is the fixed request batch the executables are traced
+    for; incoming batches are padded up to it (and the padding stripped),
+    so heterogeneous request sizes never retrace the engine.
+    """
+
+    def __init__(self, engine: DTMEngine, batch_slot: int = 32):
+        self.engine = engine
+        self.batch_slot = batch_slot
+        self.tenants: Dict[str, _Tenant] = {}
+        self.active: Optional[str] = None
+        self.swaps = 0
+        self.requests = 0
+
+    # ---- tenant management ------------------------------------------------
+    def register(self, name: str, spec: TMSpec,
+                 program: Optional[DTMProgram] = None, seed: int = 0):
+        """Admit a model: lower its spec onto the resident engine (or adopt
+        an already-lowered/trained program)."""
+        if program is None:
+            program = self.engine.lower(spec, jax.random.PRNGKey(seed))
+        self.tenants[name] = _Tenant(spec, program,
+                                     PRNG.create(spec.tm_config(), seed + 1))
+
+    def adopt(self, name: str, tm: TM):
+        """Admit a trained ``repro.api.TM`` estimator (must share tile
+        geometry with the resident engine)."""
+        assert tm.engine.tile == self.engine.tile, "tile geometry mismatch"
+        self.tenants[name] = _Tenant(tm.spec, tm.program, tm.prng)
+
+    def _swap_to(self, name: str) -> _Tenant:
+        tenant = self.tenants[name]
+        if self.active != name:
+            self.swaps += 1
+            self.active = name
+        return tenant
+
+    def _pad(self, x: np.ndarray) -> Tuple[np.ndarray, int]:
+        n = x.shape[0]
+        assert n <= self.batch_slot, (n, self.batch_slot)
+        if n < self.batch_slot:
+            x = np.concatenate(
+                [x, np.repeat(x[-1:], self.batch_slot - n, axis=0)])
+        return x, n
+
+    # ---- request paths ----------------------------------------------------
+    def predict(self, name: str, x) -> np.ndarray:
+        """Hot-swap to tenant ``name`` and serve an inference request."""
+        tenant = self._swap_to(name)
+        self.requests += 1
+        xp, n = self._pad(np.asarray(x))
+        lits = self.engine.encode(tenant.spec, jnp.asarray(xp))
+        sums, cl = self.engine.infer_fn(tenant.spec)(tenant.program, lits)
+        return np.asarray(tenant.spec.decode_output(sums, cl))[:n]
+
+    def train(self, name: str, x, y) -> dict:
+        """Hot-swap and apply one on-line training step (on-chip training:
+        the same resident datapath updates the tenant's program in place).
+
+        Training requests must FILL the batch slot: padding an inference
+        request is free, but padding a training batch would replicate the
+        last example's feedback — callers accumulate until a slot is full.
+        """
+        tenant = self._swap_to(name)
+        self.requests += 1
+        xp, yp = np.asarray(x), np.asarray(y)
+        assert xp.shape[0] == self.batch_slot, (
+            f"training request has {xp.shape[0]} examples; batch_slot is "
+            f"{self.batch_slot} — accumulate to a full slot before train()")
+        lits = self.engine.encode(tenant.spec, jnp.asarray(xp))
+        lab = tenant.spec.encode_labels(yp)
+        step = self.engine.train_fn(tenant.spec)
+        tenant.program, tenant.prng, stats = step(tenant.program,
+                                                  tenant.prng, lits, lab)
+        return stats
+
+    def stats(self) -> dict:
+        return {"tenants": sorted(self.tenants), "requests": self.requests,
+                "swaps": self.swaps, "cache": self.engine.cache_report()}
+
+
+# ---------------------------------------------------------------------------
+# reconfiguration-latency benchmark
+# ---------------------------------------------------------------------------
+
+def _block(x):
+    jax.block_until_ready(x)
+    return x
+
+
+def demo_specs(small: bool = True) -> Dict[str, TMSpec]:
+    """One spec per TM kind — the five-variant multi-tenant roster."""
+    rng = np.random.default_rng(0)
+    f, c = (32, 24) if small else (256, 128)
+    calib = rng.standard_normal((64, 8)).astype(np.float32)
+    return {
+        "cotm": TMSpec.coalesced(features=f, classes=4, clauses=c, T=16,
+                                 s=4.0),
+        "vanilla": TMSpec.vanilla(features=f, classes=4, clauses=max(c // 4,
+                                                                     4),
+                                  T=16, s=4.0),
+        "conv": TMSpec.conv(img_h=8, img_w=8, patch=3, classes=3,
+                            clauses=c, T=12, s=3.0),
+        "regression": TMSpec.regression(features=f, clauses=c, T=64, s=3.0),
+        "head": TMSpec.head(calib, classes=3, therm_bits=4,
+                            clauses=c, T=16, s=4.0),
+    }
+
+
+def demo_batch(spec: TMSpec, batch: int, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if spec.kind == "conv":
+        return (rng.random((batch, spec.img_h, spec.img_w)) < 0.3
+                ).astype(np.int8)
+    if spec.kind == "head":
+        return rng.standard_normal(
+            (batch, spec.thresholds.shape[0])).astype(np.float32)
+    return (rng.random((batch, spec.features)) < 0.5).astype(np.int8)
+
+
+def reconfig_benchmark(backend: str = "auto", batch_slot: int = 32,
+                       rounds: int = 8, small: bool = True,
+                       out: str = "BENCH_reconfig.json") -> dict:
+    """Serve all five TM kinds round-robin off one engine and time it."""
+    specs = demo_specs(small)
+    tile = api.tile_for(*specs.values())
+    engine = api.compile(tile, backend=backend)
+    server = TMServer(engine, batch_slot=batch_slot)
+    for name, spec in specs.items():
+        server.register(name, spec)
+    batches = {n: demo_batch(s, batch_slot) for n, s in specs.items()}
+    names = sorted(specs)
+
+    # one-time "synthesis": first request per tenant compiles each stage
+    compile_s = {}
+    for name in names:
+        t0 = time.perf_counter()
+        _block(server.predict(name, batches[name]))
+        compile_s[name] = time.perf_counter() - t0
+
+    # steady state, no swap: repeat the resident tenant
+    steady_us = {}
+    for name in names:
+        _block(server.predict(name, batches[name]))            # make resident
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            _block(server.predict(name, batches[name]))
+        steady_us[name] = (time.perf_counter() - t0) / rounds * 1e6
+
+    # swap every request: round-robin through all five kinds
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for name in names:
+            _block(server.predict(name, batches[name]))
+    swap_us = (time.perf_counter() - t0) / (rounds * len(names)) * 1e6
+
+    # training requests also hot-swap (on-chip training between tenants);
+    # first warm each train stage executable UNTIMED — its one-time jit
+    # compile belongs with engine_compile_s, not the swap latency
+    labels = {n: (np.zeros(batch_slot, np.float32)
+                  if specs[n].kind == "regression"
+                  else np.zeros(batch_slot, np.int32)) for n in names}
+    train_compile_s = {}
+    for name in names:
+        t0 = time.perf_counter()
+        jax.tree.map(_block, server.train(name, batches[name], labels[name]))
+        train_compile_s[name] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        for name in names:
+            jax.tree.map(_block,
+                         server.train(name, batches[name], labels[name]))
+    train_swap_us = (time.perf_counter() - t0) / (rounds * len(names)) * 1e6
+
+    # the no-DTM baseline: a fresh engine ("resynthesis") per model switch
+    spec0 = specs["cotm"]
+    t0 = time.perf_counter()
+    fresh = api.compile(tile, backend=backend)
+    prog = fresh.lower(spec0, jax.random.PRNGKey(0))
+    _block(fresh.infer(prog, fresh.encode(spec0, jnp.asarray(
+        batches["cotm"]))))
+    resynthesis_s = time.perf_counter() - t0
+
+    cache = engine.cache_report()
+    assert all(v <= 1 for v in cache.values()), cache
+    mean_steady = float(np.mean(list(steady_us.values())))
+    report = {
+        "backend": engine.backend,
+        "tile": dataclasses.asdict(tile),
+        "batch_slot": batch_slot,
+        "n_models": len(names),
+        "rounds": rounds,
+        "engine_compile_s": compile_s,
+        "train_compile_s": train_compile_s,
+        "steady_us": steady_us,
+        "swap_us": swap_us,
+        "swap_overhead_us": swap_us - mean_steady,
+        "train_swap_us": train_swap_us,
+        "resynthesis_baseline_s": resynthesis_s,
+        "speedup_vs_resynthesis": resynthesis_s * 1e6 / max(swap_us, 1e-9),
+        "server": server.stats(),
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny models + few rounds (CI artifact run)")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "kernel", "ref"))
+    ap.add_argument("--batch-slot", type=int, default=32)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_reconfig.json")
+    args = ap.parse_args(argv)
+    rounds = args.rounds if args.rounds is not None else (
+        4 if args.smoke else 16)
+    rep = reconfig_benchmark(backend=args.backend,
+                             batch_slot=args.batch_slot, rounds=rounds,
+                             small=args.smoke, out=args.out)
+    print(f"engine backend={rep['backend']}  tenants={rep['n_models']}  "
+          f"requests={rep['server']['requests']}  "
+          f"swaps={rep['server']['swaps']}")
+    print(f"steady latency      : {np.mean(list(rep['steady_us'].values())):10.1f} us/req")
+    print(f"swap-every-request  : {rep['swap_us']:10.1f} us/req "
+          f"(overhead {rep['swap_overhead_us']:+.1f} us)")
+    print(f"resynthesis baseline: {rep['resynthesis_baseline_s'] * 1e6:10.1f} us "
+          f"({rep['speedup_vs_resynthesis']:.0f}x slower than a hot swap)")
+    print(f"cache entries       : {rep['server']['cache']} "
+          f"(all <= 1: no recompilation across swaps)")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()
