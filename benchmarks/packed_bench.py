@@ -1,0 +1,147 @@
+"""Packed vs unpacked datapath: bytes moved + wall-clock, B ∈ {1, 8, 256}.
+
+The bit-packed canonical layout (ISSUE 3) exists for the edge regime the
+FPGA targets: at B=1 the clause-evaluation stage is memory-bound, and
+packing 32 literals per uint32 word moves exactly 8× fewer literal bytes
+(int8 dense -> one bit each) and 8× fewer include bytes (32× vs the int32
+include plane the engine used to re-threshold from TA every call).  At
+throughput batches the dispatcher keeps the MXU recast, so the packed
+layout must cost nothing there — both claims are what this benchmark
+records.
+
+Three comparisons per batch size:
+
+* ``ops``      — ``packed_clause_eval_op`` vs ``clause_eval_op`` on the
+  jnp ref backend (the meaningful CPU wall-clock; the Pallas columns are
+  interpret-mode off-TPU) with the analytic bytes model from
+  ``launch.tm_perf.clause_eval_bytes``;
+* ``engine``   — end-to-end ``DTMEngine.infer`` on the canonical packed
+  representation (dispatch picks packed at B<=4, MXU above — us_per_call
+  at B=256 is the no-regression guard);
+* ``program``  — the hot-swap payload: packed program bytes (uint8 TA +
+  uint32 include bitplane) vs the int32 pair it replaced.
+
+Writes ``BENCH_packed.json`` (nightly CI artifact, next to BENCH_fused /
+BENCH_reconfig).  Standalone:
+``PYTHONPATH=src python -m benchmarks.packed_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.api import TMSpec
+from repro.core.booleanize import pack_literals
+from repro.kernels import clause_eval_op, packed_clause_eval_op, select_path
+from repro.launch.tm_perf import clause_eval_bytes
+
+from .common import FAST, row, time_call
+
+OUT_PATH = os.environ.get("BENCH_PACKED_PATH", "BENCH_packed.json")
+
+BATCHES = (1, 8, 256)
+
+
+def _op_entries(f: int, C: int, iters: int) -> list:
+    L = 2 * f
+    rng = np.random.default_rng(0)
+    inc = jnp.asarray((rng.random((C, L)) < 0.05).astype(np.int8))
+    pinc = pack_literals(inc)
+    entries = []
+    for B in BATCHES:
+        lit = jnp.asarray((rng.random((B, L)) < 0.5).astype(np.int8))
+        plit = pack_literals(lit)
+        paths = {
+            "unpacked": lambda: clause_eval_op(lit, inc, eval_mode=True,
+                                               backend="ref"),
+            "packed": lambda: packed_clause_eval_op(plit, pinc,
+                                                    eval_mode=True,
+                                                    n_bits=L, backend="ref"),
+        }
+        for name, fn in paths.items():
+            us = time_call(fn, warmup=1, iters=iters)
+            bts = clause_eval_bytes(B, L, C, packed=(name == "packed"))
+            row(f"packed/{name}/B{B}", us,
+                f"lit_bytes={bts['literal_bytes']};"
+                f"total_bytes={bts['total_bytes']}")
+            entries.append({"name": name, "B": B,
+                            "shape": {"features": f, "clauses": C},
+                            "us_per_call": us, **bts})
+    return entries
+
+
+def _engine_entries(f: int, C: int, iters: int) -> list:
+    spec = TMSpec.coalesced(features=f, classes=4, clauses=C, T=16, s=4.0)
+    eng = api.compile(api.tile_for(spec), backend="auto")
+    prog = eng.lower(spec, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    entries = []
+    for B in BATCHES:
+        x = (rng.random((B, f)) < 0.5).astype(np.int8)
+        lits = eng.encode(spec, jnp.asarray(x))
+        us = time_call(lambda: eng.infer(prog, lits), warmup=1, iters=iters)
+        path = eng.cache_report()["path_per_stage"]["infer"]
+        row(f"packed/engine_infer/B{B}", us,
+            f"path={path};lit_bytes={lits.nbytes}")
+        entries.append({"name": "engine_infer", "B": B, "path": path,
+                        "dispatch": select_path(None, batch=B),
+                        "us_per_call": us, "literal_bytes": int(lits.nbytes)})
+    return entries
+
+
+def _program_entry(f: int, C: int) -> dict:
+    spec = TMSpec.coalesced(features=f, classes=4, clauses=C, T=16, s=4.0)
+    eng = api.compile(api.tile_for(spec), backend="ref")
+    prog = eng.lower(spec, jax.random.PRNGKey(0))
+    packed = int(prog.ta.nbytes + prog.inc.nbytes)
+    unpacked = 2 * eng.R * eng.L * 4          # int32 TA + int32 include
+    row("packed/program_payload", 0.0,
+        f"packed_bytes={packed};unpacked_bytes={unpacked}")
+    return {"name": "program_payload", "ta_inc_bytes_packed": packed,
+            "ta_inc_bytes_unpacked": unpacked,
+            "ratio": unpacked / packed}
+
+
+def run(smoke: bool | None = None, out_path: str = OUT_PATH) -> dict:
+    smoke = FAST if smoke is None else smoke
+    f, C = (64, 128) if smoke else (512, 512)
+    iters = 1 if smoke else 3
+    op_entries = _op_entries(f, C, iters)
+    engine_entries = _engine_entries(f, C, iters)
+    program = _program_entry(f, C)
+
+    # headline derived numbers: the acceptance claims, machine-readable
+    by = {(e["name"], e["B"]): e for e in op_entries}
+    lit_ratio_b1 = (by[("unpacked", 1)]["literal_bytes"]
+                    / by[("packed", 1)]["literal_bytes"])
+    eng_by = {e["B"]: e for e in engine_entries}
+    payload = {
+        "benchmark": "packed_datapath",
+        "smoke": bool(smoke),
+        "batches": list(BATCHES),
+        "literal_bytes_ratio_b1": lit_ratio_b1,      # claim: >= 8
+        # claim: throughput batches keep the dense recast (mxu on TPU,
+        # the jnp oracle on CPU) — packing costs nothing at B=256
+        "engine_b256_path": eng_by[256]["path"],
+        "entries": op_entries + engine_entries + [program],
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"# wrote {out_path} (lit_bytes ratio@B1 = {lit_ratio_b1:.1f}x)")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, single timing iteration")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke or None, out_path=args.out)

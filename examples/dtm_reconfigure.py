@@ -88,5 +88,6 @@ for name, (spec, (xtr, ytr, xte, yte), epochs) in MODELS.items():
 report = engine.cache_report()
 print(f"compiled stage executables: {report}")
 print("(every stage == 1 entry: five TM variants, ZERO recompilations)")
-assert all(v <= 1 for v in report.values()), report
+assert all(v <= 1 for v in report.values() if isinstance(v, int)), report
 assert report["infer"] == 1 and report["train"] == 1
+print(f"kernel path per stage: {report['path_per_stage']}")

@@ -368,6 +368,9 @@ class TM:
         tm.program = dataclasses.replace(
             tm.program, ta=jnp.asarray(tree["ta"]),
             weights=jnp.asarray(tree["weights"]))
+        # TA states were replaced wholesale — rebuild the packed include
+        # bitplane the training stages otherwise maintain incrementally
+        tm.program = engine.refresh_include(tm.program)
         tm.prng = tree["prng"]
         tm.steps = int(extra.get("steps", 0))
         return tm

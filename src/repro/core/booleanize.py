@@ -62,8 +62,11 @@ def to_literals(bool_features: jax.Array) -> jax.Array:
 def pack_literals(literals: jax.Array) -> jax.Array:
     """Bit-pack {0,1} int8 [..., 2f] -> uint32 [..., ceil(2f/32)].
 
-    This is the storage layout of the packed/VPU clause-evaluation path
-    (DESIGN.md §2.2) — one literal per bit, little-endian within a word.
+    This is the CANONICAL on-device storage layout of the engine (paper
+    Fig 4-6: literals and TA include-actions live as packed words) — one
+    literal per bit, little-endian within a word.  Tail bits of the last
+    word (positions >= 2f) are always zero; :func:`unpack_literals` is the
+    exact inverse on the leading 2f bits.
     """
     *lead, n = literals.shape
     pad = (-n) % 32
@@ -71,3 +74,19 @@ def pack_literals(literals: jax.Array) -> jax.Array:
     lit = lit.reshape(*lead, -1, 32).astype(jnp.uint32)
     weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
     return (lit * weights).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_literals(packed: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of :func:`pack_literals`: uint32 [..., W] -> {0,1} int8
+    [..., n_bits] (n_bits <= 32*W; padded tail bits are dropped).
+
+    Used by the engine's dense datapath stages (MXU clause eval, fused
+    train step, TA update) to expand the canonical packed representation
+    on device — the packed form is what moves between host and device and
+    what a :class:`~repro.core.dtm.DTMProgram` stores.
+    """
+    *lead, W = packed.shape
+    assert n_bits <= 32 * W, (n_bits, W)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed.astype(jnp.uint32)[..., :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(*lead, 32 * W)[..., :n_bits].astype(jnp.int8)

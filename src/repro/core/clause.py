@@ -76,12 +76,15 @@ def clause_outputs_packed(
     cfg: TMConfig, include: jax.Array, literals: jax.Array, eval_mode: bool
 ) -> jax.Array:
     """Bit-packed VPU kernel path — 32 literals per word, no MXU work.
-    The right datapath for the edge single-datapoint regime (Fig 11)."""
+    The right datapath for the edge single-datapoint regime (Fig 11).
+    ``n_bits`` pins the ragged tail of the last word (2f not a multiple of
+    32) so stray bits can never veto a clause."""
     from repro.kernels import packed_clause_eval_op
     from .booleanize import pack_literals
     packed_lit = pack_literals(literals.astype(jnp.int8))
     packed_inc = pack_literals(include.astype(jnp.int8))
-    return packed_clause_eval_op(packed_lit, packed_inc, eval_mode=eval_mode)
+    return packed_clause_eval_op(packed_lit, packed_inc, eval_mode=eval_mode,
+                                 n_bits=int(literals.shape[-1]))
 
 
 def clause_fn_for_path(path: str):

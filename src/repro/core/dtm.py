@@ -35,6 +35,17 @@ family onto the same fixed stage executables —
 ``engine.lower(spec, key)`` (spec = :class:`repro.api.TMSpec`, duck-typed)
 returns a :class:`DTMProgram`; swapping programs never recompiles any
 stage (``cache_report()`` — every executable stays at one jit cache entry).
+
+Bit-packed canonical datapath (ISSUE 3, the paper's Fig 4-6 frugality
+story): literals and TA include-actions live as packed uint32 words —
+``encode()`` emits ``[B, W]`` packed literals (W = ceil(L/32)), a program
+carries a packed include bitplane ``inc [R, W]`` that the TA-update stage
+maintains *incrementally* (no per-step host re-threshold of the [R, L] TA
+matrix), and TA states are narrowed to uint8 (4 per 32-bit word).  Every
+stage resolves its kernel path per call via ``kernels.select_path`` — the
+packed VPU path for edge batches, the MXU/fused recasts for throughput
+batches — and records the decision in ``cache_report()['path_per_stage']``
+so dispatch == execution is observable.
 """
 from __future__ import annotations
 
@@ -48,6 +59,8 @@ import jax.numpy as jnp
 from repro.kernels import ops as kops
 # Fig 6d: remainder class sums pinned to min (shared with the kernels)
 from repro.kernels.ref import NEG_INF_SUM as _NEG_INF_SUM
+from repro.kernels.ref import pack_include as _pack_include
+from .booleanize import pack_literals, unpack_literals
 from .prng import PRNG
 from .types import COALESCED, TMConfig, TileConfig, VANILLA
 
@@ -57,7 +70,10 @@ from .types import COALESCED, TMConfig, TileConfig, VANILLA
 class DTMProgram:
     """Run-time model data for the DTM engine (a pytree — all dynamic).
 
-    ta        int32 [R, L]  padded TA states
+    ta        uint8 [R, L]  padded TA states, narrowed 4-per-32-bit-word
+                            (int32 fallback iff ta_bits > 8; mixing TA
+                            dtypes across a roster retraces — keep ta_bits
+                            uniform per engine for cache-size == 1)
     weights   int32 [H, R]  padded class weights (Vanilla: frozen block ±1)
     cl_mask   int32 [R]     1 = real clause row (Fig 6b)
     l_mask    int32 [L]     1 = real literal column (Fig 6a)
@@ -69,6 +85,10 @@ class DTMProgram:
     n_states  int32 []      2^ta_bits (TA clip bound; runtime-selectable)
     regression bool []      True = error-driven feedback (Regression TM)
     p_mask    int32 [P]     1 = real patch slot (conv programs; flat: [1,0..])
+    inc       uint32 [R, W] packed include bitplane (W = ceil(L/32), bit l
+                            of word w = include action of TA (w*32+l)) —
+                            maintained incrementally by the train stages;
+                            the paper's Fig 5a BRAM include words
     """
 
     ta: jax.Array
@@ -84,13 +104,15 @@ class DTMProgram:
     w_clip: jax.Array
     regression: jax.Array
     p_mask: jax.Array
+    inc: jax.Array
 
     def tree_flatten(self):
         # NOT dataclasses.astuple: that deep-copies every leaf on each
         # flatten, and flatten runs on every jit dispatch (hot path).
         return ((self.ta, self.weights, self.cl_mask, self.l_mask,
                  self.h_mask, self.w_frozen, self.T, self.p_ta, self.boost,
-                 self.n_states, self.w_clip, self.regression, self.p_mask),
+                 self.n_states, self.w_clip, self.regression, self.p_mask,
+                 self.inc),
                 None)
 
     @classmethod
@@ -104,18 +126,21 @@ class DTMEngine:
     ``backend`` selects the compute datapath, resolved ONCE at construction
     (so jit caches stay size-1 across model reprogramming):
 
-    * ``"auto"``   — dispatcher decision: the fused Pallas training-step
-      kernel + TA-update kernel when the kernels compile natively
-      (TPU / ``REPRO_INTERPRET=0``), the bit-equivalent pure-jnp reference
-      otherwise (interpret-mode Pallas is orders of magnitude slower than
-      jnp on CPU — see kernels/ops.py).  NOTE the engine's training path
-      only has fused-kernel and jnp-ref implementations, so
-      ``REPRO_KERNEL_PATH`` values other than ``ref`` keep the kernel
-      backend; ``mxu``/``packed_vpu`` affect the eval/inference dispatch
-      (clause_outputs_pallas), not the train step.
+    * ``"auto"``   — dispatcher decision: the Pallas kernels when they
+      compile natively (TPU / ``REPRO_INTERPRET=0``), the bit-equivalent
+      pure-jnp reference otherwise (interpret-mode Pallas is orders of
+      magnitude slower than jnp on CPU — see kernels/ops.py).
     * ``"kernel"`` — force the Pallas path (interpret-mode on CPU; used by
       the parity tests).
     * ``"ref"``    — force the jnp reference path.
+
+    Within the chosen backend, every stage additionally resolves its
+    kernel path PER CALL from the traced batch size (``select_path``:
+    packed VPU at edge batches, MXU/fused recasts above) and honours a
+    ``REPRO_KERNEL_PATH`` force end-to-end — the train step runs the
+    packed front half under ``packed_vpu`` and the unfused baseline under
+    ``mxu``.  All paths are bit-identical; the executed path per stage is
+    reported by ``cache_report()["path_per_stage"]``.
     """
 
     def __init__(self, tile: TileConfig, rand_bits: int = 16,
@@ -135,6 +160,10 @@ class DTMEngine:
         self.rand_bits = rand_bits
         self.L, self.R, self.H = tile.padded_dims()
         self.P = tile.max_patches
+        self.W = tile.packed_words()     # packed words per literal row
+        # kernel path per stage, recorded at trace time (dispatch ==
+        # execution observability; cache_report()["path_per_stage"])
+        self._stage_paths: dict = {}
         self._infer = jax.jit(self._infer_impl)
         self._train = jax.jit(self._train_impl)
         # conv stage executables (only ever compiled if a conv program runs)
@@ -184,15 +213,19 @@ class DTMEngine:
         cl_mask = (jnp.arange(R) < rows).astype(jnp.int32)
         h_mask = (jnp.arange(H) < h).astype(jnp.int32)
         p_ta = jnp.uint32(int(round((1 << self.rand_bits) / cfg.s)))
+        # canonical packed layout: TA narrowed to 4 states per 32-bit word,
+        # include actions pre-packed 32 per word (training maintains them)
+        ta_dtype = jnp.uint8 if cfg.n_states <= 256 else jnp.int32
         return DTMProgram(
-            ta=ta_pad, weights=w_pad, cl_mask=cl_mask, l_mask=l_mask,
-            h_mask=h_mask, w_frozen=jnp.asarray(frozen),
+            ta=ta_pad.astype(ta_dtype), weights=w_pad, cl_mask=cl_mask,
+            l_mask=l_mask, h_mask=h_mask, w_frozen=jnp.asarray(frozen),
             T=jnp.asarray(cfg.T, jnp.int32), p_ta=p_ta,
             boost=jnp.asarray(cfg.boost_true_positive),
             n_states=jnp.asarray(cfg.n_states, jnp.int32),
             w_clip=jnp.asarray(cfg.weight_clip, jnp.int32),
             regression=jnp.asarray(False),
-            p_mask=(jnp.arange(self.P) < 1).astype(jnp.int32))
+            p_mask=(jnp.arange(self.P) < 1).astype(jnp.int32),
+            inc=_pack_include(ta_pad, cfg.n_states))
 
     def lower(self, spec, key: jax.Array,
               ta: Optional[jax.Array] = None,
@@ -239,36 +272,72 @@ class DTMEngine:
 
     def pad_features(self, bool_x: jax.Array,
                      cfg: Optional[TMConfig] = None) -> jax.Array:
-        """Host-side literal layout: [x pad | ~x pad] -> [B, L]."""
-        return self._layout(bool_x)
+        """Host-side literal prep: [B, f] {0,1} -> PACKED [B, W] uint32
+        ([x pad | ~x pad] layout, 32 literals per word)."""
+        return pack_literals(self._layout(bool_x))
 
     def encode(self, spec, x: jax.Array) -> jax.Array:
-        """Host-side data prep: raw model input -> engine literal layout.
+        """Host-side data prep: raw model input -> packed engine literals.
 
-        Flat kinds (vanilla/coalesced/regression/head) -> ``[B, L]``;
-        conv -> ``[B, max_patches, L]`` (patch slots zero-padded; the
-        per-program ``p_mask`` hides them from the datapath)."""
+        The canonical on-device representation is bit-packed (Fig 4-6):
+        flat kinds (vanilla/coalesced/regression/head) -> ``[B, W]``
+        uint32; conv -> ``[B, max_patches, W]`` (patch slots zero-padded;
+        the per-program ``p_mask`` hides them from the datapath).
+        W = ceil(L/32) — 8× fewer literal bytes than the int8 dense form
+        the engine stages unpack on device only when an MXU path needs it."""
         feats = spec.to_bool(x)
         lits = self._layout(feats)
         if lits.ndim == 3:
             lits = jnp.pad(lits, ((0, 0), (0, self.P - lits.shape[1]),
                                   (0, 0)))
-        return lits
+        return pack_literals(lits)
+
+    def refresh_include(self, prog: DTMProgram) -> DTMProgram:
+        """Rebuild the packed include bitplane from TA states.
+
+        Only needed when TA states are replaced wholesale from outside the
+        engine (checkpoint restore, manual surgery) — the train stages
+        maintain ``inc`` incrementally themselves."""
+        return dataclasses.replace(
+            prog, inc=_pack_include(prog.ta, prog.n_states))
 
     # ------------------------------------------------------------------ #
     # shared datapath stages                                              #
     # ------------------------------------------------------------------ #
-    def _clause_outputs(self, prog: DTMProgram, lits: jax.Array,
-                        eval_mode: bool) -> jax.Array:
-        """Clause-matrix stage: [N, L] literals -> [N, R] int32 outputs."""
-        include = (prog.ta >= (prog.n_states >> 1)).astype(jnp.int32)  # [R,L]
-        if self.backend == "kernel":
+    def _eval_path(self, batch: int, stage: str) -> str:
+        """Resolve the clause-eval kernel path for this trace and record it
+        (dispatch == execution: the recorded name is the branch taken)."""
+        path = kops.select_path(None, batch=batch, training=False)
+        if path == kops.PATH_FUSED:
+            # the fused kernel only exists for train steps; eval falls back
+            # to its dense front half (documented in README)
+            path = kops.PATH_REF if self.backend == "ref" else kops.PATH_MXU
+        if self.backend == "ref" and path == kops.PATH_MXU:
+            path = kops.PATH_REF    # jnp matmul recast IS the mxu oracle
+        self._stage_paths[stage] = path
+        return path
+
+    def _clause_outputs(self, prog: DTMProgram, plits: jax.Array,
+                        eval_mode: bool, stage: str) -> jax.Array:
+        """Clause-matrix stage: PACKED [N, W] literals -> [N, R] int32.
+
+        Routes per the dispatcher decision for this batch size: the packed
+        bitwise path reads ``prog.inc`` directly (no threshold, no unpack);
+        the MXU/ref recasts unpack literals + include on device."""
+        path = self._eval_path(plits.shape[0], stage)
+        if path == kops.PATH_PACKED:
+            cl = kops.packed_clause_eval_op(plits, prog.inc,
+                                            eval_mode=eval_mode,
+                                            n_bits=self.L, backend=self._kb)
+        elif path == kops.PATH_MXU:
+            lits = unpack_literals(plits, self.L)
+            include = unpack_literals(prog.inc, self.L)
             # unfused MXU pair — the dispatcher's "mxu" eval path.  Padded
             # TA columns are zero, so include already honours l_mask.
-            cl = kops.clause_eval_op(lits.astype(jnp.int8),
-                                     include.astype(jnp.int8),
-                                     eval_mode=eval_mode)
-        else:
+            cl = kops.clause_eval_op(lits, include, eval_mode=eval_mode)
+        else:   # ref: the jnp violation-matmul recast
+            lits = unpack_literals(plits, self.L)
+            include = unpack_literals(prog.inc, self.L).astype(jnp.int32)
             viol = jax.lax.dot_general(
                 (1 - lits.astype(jnp.int32)) * prog.l_mask[None, :], include,
                 dimension_numbers=(((1,), (1,)), ((), ())),
@@ -295,26 +364,28 @@ class DTMEngine:
     # inference (Eq 1 + Eq 2/3 on the padded grid)                        #
     # ------------------------------------------------------------------ #
     def _infer_impl(self, prog: DTMProgram, lits: jax.Array):
-        cl = self._clause_outputs(prog, lits, eval_mode=True)
+        cl = self._clause_outputs(prog, lits, eval_mode=True, stage="infer")
         return self._class_sums(prog, cl), cl
 
     def _infer_conv_impl(self, prog: DTMProgram, plits: jax.Array):
         """Conv pre/post stages around the shared clause datapath:
-        per-patch clause eval on the [B·P, L] view, OR over real patches,
+        per-patch clause eval on the [B·P, W] view, OR over real patches,
         then the ordinary weight-matrix stage."""
-        B, P, L = plits.shape
-        cl_p = self._clause_outputs(prog, plits.reshape(B * P, L),
-                                    eval_mode=True)
+        B, P, W = plits.shape
+        cl_p = self._clause_outputs(prog, plits.reshape(B * P, W),
+                                    eval_mode=True, stage="infer_conv")
         cl_p = cl_p.reshape(B, P, self.R) * prog.p_mask[None, :, None]
         cl = cl_p.max(axis=1)                                          # [B,R]
         return self._class_sums(prog, cl), cl
 
     def infer(self, prog: DTMProgram, lits: jax.Array):
-        """lits [B, L] (from pad_features) -> (class_sums [B,H], clause [B,R])."""
+        """lits [B, W] packed (from pad_features/encode) ->
+        (class_sums [B,H], clause [B,R])."""
         return self._infer(prog, lits)
 
     def infer_conv(self, prog: DTMProgram, plits: jax.Array):
-        """plits [B, P, L] (from encode) -> (class_sums [B,H], clause [B,R])."""
+        """plits [B, P, W] packed (from encode) ->
+        (class_sums [B,H], clause [B,R])."""
         return self._infer_conv(prog, plits)
 
     def predict(self, prog: DTMProgram, lits: jax.Array) -> jax.Array:
@@ -324,18 +395,59 @@ class DTMEngine:
     # ------------------------------------------------------------------ #
     # training (Alg 3-6 on the padded grid, batched-delta mode)           #
     # ------------------------------------------------------------------ #
-    def _train_impl(self, prog: DTMProgram, prng: PRNG, lits: jax.Array,
+    def _train_front(self, prog: DTMProgram, plits: jax.Array,
+                     lits: jax.Array, cls_lab, neg, sel_rand):
+        """Training-step front half (clause eval → class sums → Alg-3
+        selection, both rounds) through the dispatcher-selected path:
+
+        * ``packed_vpu`` (edge batches or forced) — packed clause eval
+          straight off ``prog.inc``, shared class-sum/select stages;
+        * ``fused`` — ONE kernel launch, the ``[B, R]`` clause matrix
+          never round-trips through HBM between stages;
+        * ``mxu`` (forced) — the unfused two-launch baseline;
+        * ``ref`` — the bit-equivalent jnp oracle.
+
+        All four are bit-identical; the executed path is recorded under
+        ``path_per_stage`` at trace time."""
+        wf = prog.w_frozen.astype(jnp.int32)
+        path = kops.select_path(None, batch=plits.shape[0], training=True)
+        if self.backend == "ref" and path != kops.PATH_PACKED:
+            path = kops.PATH_REF
+        self._stage_paths["train"] = path
+        if path == kops.PATH_PACKED:
+            return kops.packed_step_op(
+                plits, prog.inc, prog.weights, cls_lab, neg, sel_rand[0],
+                sel_rand[1], prog.cl_mask, prog.h_mask, prog.T, wf,
+                rand_bits=self.rand_bits, backend=self._kb, n_bits=self.L)
+        include = unpack_literals(prog.inc, self.L)                # [R,L]
+        if path == kops.PATH_MXU:
+            return kops.unfused_step_op(
+                lits, include, prog.weights, cls_lab, neg, sel_rand[0],
+                sel_rand[1], prog.cl_mask, prog.h_mask, prog.T, wf,
+                rand_bits=self.rand_bits)
+        return kops.fused_step_op(
+            lits, include, prog.weights, cls_lab, neg, sel_rand[0],
+            sel_rand[1], prog.cl_mask, prog.h_mask, prog.T, wf,
+            rand_bits=self.rand_bits,
+            backend="ref" if path == kops.PATH_REF else self._kb)
+
+    def _train_impl(self, prog: DTMProgram, prng: PRNG, plits: jax.Array,
                     labels: jax.Array):
         """One batched train step through the fused dispatcher path.
 
-        Front half (clause eval → class sums → Alg-3 feedback selection for
-        the target and negated rounds) is ONE fused kernel launch — the
-        ``[B, R]`` clause matrix never round-trips through HBM between
-        stages.  Back half is the in-kernel-PRNG TA-update kernel over both
-        feedback rounds, plus jnp weight/stat reductions.  ``backend="ref"``
-        runs the bit-equivalent jnp oracles through the same structure.
+        Front half (clause eval → class sums → Alg-3 feedback selection
+        for the target and negated rounds) routes per batch size — see
+        :meth:`_train_front`.  Back half is the in-kernel-PRNG TA-update
+        kernel over both feedback rounds (which also emits the UPDATED
+        packed include bitplane — ``prog.inc`` is maintained incrementally,
+        never re-thresholded from TA by a consumer), plus jnp weight/stat
+        reductions.  ``backend="ref"`` runs the bit-equivalent jnp oracles
+        through the same structure.
         """
-        B = lits.shape[0]
+        B = plits.shape[0]
+        # dense literals for the TA-update stage (unpacked ON DEVICE from
+        # the canonical packed form; the packed array is what moved)
+        lits = unpack_literals(plits, self.L)                          # [B,L]
         n_cls = prog.h_mask.sum()
         reg = prog.regression                                          # bool []
 
@@ -357,12 +469,8 @@ class DTMEngine:
               ).astype(jnp.int32)
         neg = jnp.where(rn < cls_lab, rn, rn + 1)                      # [B]
 
-        include = (prog.ta >= (prog.n_states >> 1)).astype(jnp.int8)   # [R,L]
-        cl, sums_m, sel_lab, sel_neg = kops.fused_step_op(
-            lits.astype(jnp.int8), include, prog.weights, cls_lab, neg,
-            sel_rand[0], sel_rand[1], prog.cl_mask, prog.h_mask,
-            prog.T, prog.w_frozen.astype(jnp.int32),
-            rand_bits=self.rand_bits, backend=self._kb)
+        cl, sums_m, sel_lab, sel_neg = self._train_front(
+            prog, plits, lits, cls_lab, neg, sel_rand)
         # batch accuracy is meaningless against a regression vote target
         correct = jnp.where(reg, 0, (jnp.argmax(sums_m, -1) == labels).sum())
 
@@ -398,14 +506,16 @@ class DTMEngine:
         cl2 = jnp.concatenate([cl, cl], axis=0)
         t1 = jnp.concatenate([t1_lab, t1_neg], axis=0)
         t2 = jnp.concatenate([t2_lab, t2_neg], axis=0)
-        new_ta = kops.ta_update_op(
+        new_ta, new_inc = kops.ta_update_op(
             prog.ta, lit2, cl2, t1, t2, prog.l_mask, seed=ta_seed,
             p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
-            n_states=prog.n_states, backend=self._kb)
+            n_states=prog.n_states, backend=self._kb, emit_include=True)
 
         new_w, stats = self._weights_and_stats(
             prog, cl, sel_lab, sel_neg, cls_lab, neg, correct, abs_err)
-        new_prog = dataclasses.replace(prog, ta=new_ta, weights=new_w)
+        new_prog = dataclasses.replace(
+            prog, ta=new_ta.astype(prog.ta.dtype), weights=new_w,
+            inc=new_inc)
         return new_prog, prng, stats
 
     def _weights_and_stats(self, prog: DTMProgram, cl, sel_lab, sel_neg,
@@ -435,6 +545,7 @@ class DTMEngine:
 
     def train_step(self, prog: DTMProgram, prng: PRNG, lits: jax.Array,
                    labels: jax.Array):
+        """lits [B, W] packed (from pad_features/encode) train step."""
         return self._train(prog, prng, lits, labels)
 
     # ------------------------------------------------------------------ #
@@ -445,13 +556,15 @@ class DTMEngine:
         """One batched Conv-TM train step.
 
         Pre-stage: per-patch clause eval on the shared clause datapath
-        ([B·P, L] view).  Post-stages: OR over real patches, the ordinary
-        weight-matrix + Alg-3 selection machinery, then Type I/II feedback
-        against ONE random *matching* patch per (datapoint, clause) — the
-        per-clause literal gather makes this the jnp stage of the engine
-        (the shared-literal TA kernel cannot express it)."""
-        B, P, L = plits.shape
-        R = self.R
+        ([B·P, W] packed view).  Post-stages: OR over real patches, the
+        ordinary weight-matrix + Alg-3 selection machinery, then Type I/II
+        feedback against ONE random *matching* patch per (datapoint,
+        clause) — the per-clause literal gather makes this the jnp stage of
+        the engine (the shared-literal TA kernel cannot express it).  The
+        updated include bitplane is packed in the same jitted stage."""
+        B, P, W = plits.shape
+        L, R = self.L, self.R
+        pl_dense = unpack_literals(plits, L)                       # [B,P,L]
         n_cls = prog.h_mask.sum()
 
         prng, c_rand = prng.bits((B,))
@@ -463,8 +576,8 @@ class DTMEngine:
               ).astype(jnp.int32)
         neg = jnp.where(rn < labels, rn, rn + 1)                       # [B]
 
-        cl_p = self._clause_outputs(prog, plits.reshape(B * P, L),
-                                    eval_mode=False)
+        cl_p = self._clause_outputs(prog, plits.reshape(B * P, W),
+                                    eval_mode=False, stage="train_conv")
         cl_p = cl_p.reshape(B, P, R) * prog.p_mask[None, :, None]
         cl = cl_p.max(axis=1)                                          # [B,R]
         sums = self._class_sums(prog, cl)
@@ -485,8 +598,7 @@ class DTMEngine:
         patch_idx = jnp.argmax(cl_p * 1000 + noise, axis=1)        # [B,R]
         onehot = (patch_idx[:, :, None]
                   == jnp.arange(P)[None, None, :]).astype(jnp.int8)
-        sel_lits = jnp.einsum("brp,bpl->brl", onehot,
-                              plits.astype(jnp.int8),
+        sel_lits = jnp.einsum("brp,bpl->brl", onehot, pl_dense,
                               preferred_element_type=jnp.int32)    # [B,R,L]
 
         w_lab = jnp.take(prog.weights, labels, axis=0)             # [B,R]
@@ -500,7 +612,8 @@ class DTMEngine:
         # gated by the OR-level clause output exactly like conv_tm.py)
         clb = (cl > 0)[:, :, None]                                 # [B,R,1]
         litb = sel_lits > 0                                        # [B,R,L]
-        incb = (prog.ta >= (prog.n_states >> 1))[None]             # [1,R,L]
+        # include from the maintained bitplane — no TA re-threshold
+        incb = (unpack_literals(prog.inc, L) > 0)[None]            # [1,R,L]
         cl_and_lit = clb & litb
         inc2 = (clb & ~litb & ~incb).astype(jnp.int8)
         delta = jnp.zeros((R, L), jnp.int32)
@@ -514,17 +627,20 @@ class DTMEngine:
                      + jnp.einsum("br,brl->rl", t2.astype(jnp.int32),
                                   inc2.astype(jnp.int32)))
         delta = delta * prog.l_mask[None, :] * prog.cl_mask[:, None]
-        new_ta = jnp.clip(prog.ta + delta, 0, prog.n_states - 1)
+        new_ta = jnp.clip(prog.ta.astype(jnp.int32) + delta, 0,
+                          prog.n_states - 1)
 
         new_w, stats = self._weights_and_stats(
             prog, cl, sel_lab, sel_neg, labels, neg, correct,
             abs_err=jnp.asarray(0, jnp.int32))
-        new_prog = dataclasses.replace(prog, ta=new_ta, weights=new_w)
+        new_prog = dataclasses.replace(
+            prog, ta=new_ta.astype(prog.ta.dtype), weights=new_w,
+            inc=_pack_include(new_ta, prog.n_states))
         return new_prog, prng, stats
 
     def train_conv(self, prog: DTMProgram, prng: PRNG, plits: jax.Array,
                    labels: jax.Array):
-        """plits [B, P, L] (from encode) conv train step."""
+        """plits [B, P, W] packed (from encode) conv train step."""
         return self._train_conv(prog, prng, plits, labels)
 
     # spec-driven stage dispatch (one definition for estimator AND server)
@@ -542,11 +658,18 @@ class DTMEngine:
 
     def cache_report(self) -> dict:
         """Jit cache entries per engine stage executable (the paper's
-        'no resynthesis' claim: every value stays <= 1 across arbitrary
-        program swaps)."""
+        'no resynthesis' claim: every int value stays <= 1 across
+        arbitrary program swaps).
+
+        ``path_per_stage`` maps each traced stage to the kernel path that
+        stage actually EXECUTES (recorded inside the taken branch at trace
+        time, for the most recent trace) — dispatch == execution is
+        asserted in tests, closing the old silent packed_vpu→mxu fallback.
+        """
         return {
             "infer": self._infer._cache_size(),
             "train": self._train._cache_size(),
             "infer_conv": self._infer_conv._cache_size(),
             "train_conv": self._train_conv._cache_size(),
+            "path_per_stage": dict(self._stage_paths),
         }

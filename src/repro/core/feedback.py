@@ -35,9 +35,12 @@ from .types import COALESCED, TMConfig, TMState, VANILLA, ta_actions
 
 # The inference front half of both training modes dispatches by workload
 # shape: class_sums resolves ``compute_backend="pallas"`` through
-# kernels.ops.select_path (packed-VPU kernel for edge batches, MXU matmul
+# kernels.ops.select_path (bit-packed VPU kernel for edge batches — the
+# DEFAULT edge path, for training rounds too since ISSUE 3 — MXU matmul
 # kernel otherwise; see clause.clause_outputs_pallas) and runs the jnp
-# matmul recast for the default backend.
+# matmul recast for the default backend.  The DTM engine goes further and
+# keeps literals/include packed end-to-end (core/dtm.py); this legacy
+# module packs on the fly per call.
 
 # Width of a clause "group" for skip statistics — the paper's y (DTM-L: 27,
 # here tile-aligned).

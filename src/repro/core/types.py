@@ -111,6 +111,11 @@ class TileConfig:
     def max_literals(self) -> int:
         return 2 * self.max_features
 
+    def packed_words(self) -> int:
+        """uint32 words per packed row on the PADDED literal grid — the
+        engine's canonical [B, W] literal / [R, W] include-bitplane width."""
+        return (self.padded_dims()[0] + 31) // 32
+
     def padded_dims(self) -> tuple[int, int, int]:
         """(literals, clauses, classes) rounded up to whole tiles."""
         rup = lambda v, t: ((v + t - 1) // t) * t

@@ -5,11 +5,13 @@ padded wrappers + batch-size-aware dispatch), ref.py (pure-jnp oracles,
 bit-exact)."""
 from .ops import (PATH_FUSED, PATH_MXU, PATH_PACKED, PATH_REF,
                   clause_eval_op, class_sum_op, fused_step_op,
-                  packed_clause_eval_op, resolve_interpret, round_select_op,
-                  select_path, ta_update_op, tm_infer_op, unfused_step_op)
+                  packed_clause_eval_op, packed_step_op, resolve_interpret,
+                  round_select_op, select_path, ta_update_op, tm_infer_op,
+                  unfused_step_op)
 from . import ref
 
 __all__ = ["clause_eval_op", "class_sum_op", "fused_step_op", "tm_infer_op",
-           "packed_clause_eval_op", "ta_update_op", "unfused_step_op",
-           "round_select_op", "select_path", "resolve_interpret",
-           "PATH_MXU", "PATH_PACKED", "PATH_FUSED", "PATH_REF", "ref"]
+           "packed_clause_eval_op", "packed_step_op", "ta_update_op",
+           "unfused_step_op", "round_select_op", "select_path",
+           "resolve_interpret", "PATH_MXU", "PATH_PACKED", "PATH_FUSED",
+           "PATH_REF", "ref"]

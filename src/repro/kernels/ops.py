@@ -71,10 +71,13 @@ def select_path(cfg=None, batch=None, training: bool = False) -> str:
     if env:   # typo'd forces must not silently fall back to the heuristic
         raise ValueError(
             f"REPRO_KERNEL_PATH={env!r} not recognised; use one of {_PATHS}")
+    if batch is not None and batch <= PACKED_MAX_BATCH:
+        # edge regime: the packed bitwise path wins for BOTH directions —
+        # training's front half runs packed clause eval + the shared Alg-3
+        # selection instead of the batch-parallel fused kernel (Fig 11).
+        return PATH_PACKED
     if training:
         return PATH_FUSED
-    if batch is not None and batch <= PACKED_MAX_BATCH:
-        return PATH_PACKED
     return PATH_MXU
 
 
@@ -137,12 +140,19 @@ def tm_infer_op(literals, include, weights, eval_mode=True, backend="pallas",
 
 
 @functools.partial(jax.jit, static_argnames=("eval_mode", "backend",
-                                             "bt", "yt", "wt"))
+                                             "n_bits", "bt", "yt", "wt"))
 def packed_clause_eval_op(packed_literals, packed_include, eval_mode=False,
-                          backend="pallas", bt=8, yt=128, wt=128):
+                          backend="pallas", n_bits=None, bt=8, yt=128,
+                          wt=128):
+    """Packed [B,W]×[C,W] -> [B,C].  ``n_bits`` (real literal count 2f)
+    masks garbage tail bits past 2f in the last include word — zero include
+    words never veto, so masking the include side neutralises ragged-W
+    tails in both the firing and the eval-mode nonempty checks."""
     if backend == "ref":
         return ref.packed_clause_eval_ref(packed_literals, packed_include,
-                                          eval_mode)
+                                          eval_mode, n_bits=n_bits)
+    if n_bits is not None:
+        packed_include = ref.tail_mask_words(packed_include, n_bits)
     B, W = packed_literals.shape
     C = packed_include.shape[0]
     lit = _pad2(packed_literals, bt, wt)
@@ -153,32 +163,45 @@ def packed_clause_eval_op(packed_literals, packed_include, eval_mode=False,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "rand_bits", "backend", "yt", "xt"))
+    "rand_bits", "backend", "emit_include", "yt", "xt"))
 def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
                  rand_bits=16, boost=True, n_states=256, backend="pallas",
-                 yt=128, xt=256):
+                 emit_include=False, yt=128, xt=256):
     """Batched TA update [C,L] -> [C,L] (pads C/L, strips on return).
 
     ``seed``/``p_ta``/``boost``/``n_states`` may be traced scalars — a new
-    per-step seed or a DTMProgram swap never retraces."""
+    per-step seed or a DTMProgram swap never retraces.  ``ta`` may be any
+    integer dtype (the engine stores int8-narrowed states, 4 per word);
+    the returned states are int32 — callers narrow back.
+
+    ``emit_include=True`` returns ``(new_ta, new_inc)`` where ``new_inc``
+    is the packed include bitplane uint32 [C, ceil(L/32)] of the UPDATED
+    states — the update stage maintains the engine's canonical bitplane
+    incrementally, fused into this same jitted call, so no consumer ever
+    re-thresholds the full [C, L] TA matrix afterwards."""
     if backend == "ref":
-        return ref.ta_update_ref(ta, literals, clause_out, type1, type2,
-                                 l_mask, seed, p_ta, rand_bits, boost,
-                                 n_states)
-    C, L = ta.shape
-    # The PRNG stream is keyed on the padded row stride (ceil(L/xt)*xt);
-    # ref.ta_update_ref keys identically, so kernel and ref match
-    # bit-for-bit on any shape.
-    ta_p = _pad2(ta, yt, xt)
-    lit_p = _pad2(literals, 1, xt)
-    cl_p = _pad2(clause_out, 1, yt)
-    t1_p = _pad2(type1, 1, yt)
-    t2_p = _pad2(type2, 1, yt)
-    lm = jnp.pad(l_mask, (0, (-L) % xt))
-    out = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed, p_ta=p_ta,
-                    rand_bits=rand_bits, boost=boost, n_states=n_states,
-                    yt=yt, xt=xt, interpret=resolve_interpret())
-    return out[:C, :L]
+        new_ta = ref.ta_update_ref(ta, literals, clause_out, type1, type2,
+                                   l_mask, seed, p_ta, rand_bits, boost,
+                                   n_states)
+    else:
+        C, L = ta.shape
+        # The PRNG stream is keyed on the padded row stride (ceil(L/xt)*xt);
+        # ref.ta_update_ref keys identically, so kernel and ref match
+        # bit-for-bit on any shape.
+        ta_p = _pad2(ta, yt, xt)
+        lit_p = _pad2(literals, 1, xt)
+        cl_p = _pad2(clause_out, 1, yt)
+        t1_p = _pad2(type1, 1, yt)
+        t2_p = _pad2(type2, 1, yt)
+        lm = jnp.pad(l_mask, (0, (-L) % xt))
+        out = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed,
+                        p_ta=p_ta, rand_bits=rand_bits, boost=boost,
+                        n_states=n_states, yt=yt, xt=xt,
+                        interpret=resolve_interpret())
+        new_ta = out[:C, :L]
+    if emit_include:
+        return new_ta, ref.pack_include(new_ta, n_states)
+    return new_ta
 
 
 @functools.partial(jax.jit, static_argnames=("rand_bits", "backend",
@@ -226,6 +249,39 @@ def fused_step_op(literals, include, weights, labels, neg_labels,
         T, w_frozen, rand_bits=rand_bits, bt=bt, yt=yt, xt=xt,
         interpret=resolve_interpret())
     return (clause[:B, :R], sums[:B, :H], sel_lab[:B, :R], sel_neg[:B, :R])
+
+
+@functools.partial(jax.jit, static_argnames=("rand_bits", "backend",
+                                             "n_bits", "bt", "yt", "wt"))
+def packed_step_op(packed_literals, packed_include, weights, labels,
+                   neg_labels, rand_lab, rand_neg, cl_mask, h_mask, T,
+                   w_frozen, rand_bits=16, backend="pallas", n_bits=None,
+                   bt=8, yt=128, wt=128):
+    """Training-step front half on the bit-packed layout (edge batches).
+
+    Same signature/outputs as :func:`fused_step_op`, but literals/include
+    arrive as packed uint32 bitplanes ([B,W] / [R,W], W = ceil(2f/32)) —
+    the engine's canonical on-device layout.  Clause eval runs the packed
+    VPU kernel (32 literals per word, no MXU); class sums and the Alg-3
+    selection reuse the shared stages.  Bit-exact vs. ``fused_step_op`` on
+    the corresponding dense inputs and vs. :func:`ref.packed_step_ref`.
+    """
+    if backend == "ref":
+        return ref.packed_step_ref(packed_literals, packed_include, weights,
+                                   labels, neg_labels, rand_lab, rand_neg,
+                                   cl_mask, h_mask, T, w_frozen, rand_bits,
+                                   n_bits=n_bits)
+    cl = packed_clause_eval_op(packed_literals, packed_include,
+                               eval_mode=False, n_bits=n_bits, bt=bt,
+                               yt=yt, wt=wt)
+    cl = cl * cl_mask[None, :].astype(jnp.int32)
+    sums = class_sum_op(cl, weights)
+    sums = jnp.where(h_mask[None, :] > 0, sums, ref.NEG_INF_SUM)
+    sel_lab = ref._round_select(sums, labels, 1, rand_lab, weights, cl_mask,
+                                T, w_frozen, rand_bits)
+    sel_neg = ref._round_select(sums, neg_labels, 0, rand_neg, weights,
+                                cl_mask, T, w_frozen, rand_bits)
+    return cl, sums, sel_lab, sel_neg
 
 
 def round_select_op(sums, cls, y_c, rand, weights, cl_mask, T, w_frozen,

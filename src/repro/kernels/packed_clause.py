@@ -57,7 +57,13 @@ def packed_clause_eval(packed_literals: jax.Array, packed_include: jax.Array,
                        wt: int = 128, interpret: bool = True) -> jax.Array:
     """packed_literals [B, W] uint32, packed_include [C, W] uint32
     -> clause [B, C] int32.  W = ceil(L/32), padded to wt multiples with
-    zero words (zero include words never violate)."""
+    zero words (zero include words never violate).
+
+    Tail-bit contract: bits at positions >= L in the last real word of
+    ``packed_include`` MUST be zero — they would otherwise veto clauses
+    (and fake nonempty ones in eval mode).  ``ops.packed_clause_eval_op``
+    enforces this via its ``n_bits`` argument (ref.tail_mask_words);
+    callers going straight to this kernel own the masking themselves."""
     B, W = packed_literals.shape
     C, W2 = packed_include.shape
     assert W == W2 and B % bt == 0 and C % yt == 0 and W % wt == 0, (

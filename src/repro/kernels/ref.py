@@ -25,10 +25,56 @@ def clause_eval_ref(literals: jax.Array, include: jax.Array,
     return fired.astype(jnp.int32)
 
 
+def pack_bitplane(bits: jax.Array) -> jax.Array:
+    """{0,1} [..., n] -> uint32 [..., ceil(n/32)], little-endian per word.
+
+    Same layout as ``repro.core.booleanize.pack_literals`` (kept as a local
+    definition so the kernels package stays import-independent of core;
+    tests/test_packed_layout.py pins the two bit-for-bit)."""
+    *lead, n = bits.shape
+    pad = (-n) % 32
+    b = jnp.pad(bits.astype(jnp.uint32), [(0, 0)] * len(lead) + [(0, pad)])
+    b = b.reshape(*lead, -1, 32)
+    w = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return (b * w).sum(axis=-1).astype(jnp.uint32)
+
+
+def pack_include(ta: jax.Array, n_states) -> jax.Array:
+    """TA states [C, L] -> packed include bitplane uint32 [C, ceil(L/32)].
+
+    The include action is ``ta >= n_states/2`` (paper §II-A-b); this is the
+    bitplane the TA-update stage maintains incrementally so no consumer
+    ever re-thresholds the full [C, L] TA matrix."""
+    j = jnp.asarray(n_states, jnp.int32) >> 1
+    return pack_bitplane(ta.astype(jnp.int32) >= j)
+
+
+def tail_mask_words(packed: jax.Array, n_bits: int) -> jax.Array:
+    """Zero all bits at positions >= n_bits in a packed [..., W] bitplane.
+
+    Zero include words never veto a clause, so masking the *include* side
+    is sufficient to make garbage tail bits (a ragged 2f not filling the
+    last word) harmless in both firing and nonempty checks."""
+    W = packed.shape[-1]
+    assert 0 < n_bits <= 32 * W, (n_bits, W)
+    pos = jnp.arange(W, dtype=jnp.uint32) * 32
+    nb = jnp.uint32(n_bits)
+    keep = jnp.clip(nb - jnp.minimum(pos, nb), 0, 32)       # bits kept/word
+    full = jnp.uint32(0xFFFFFFFF)
+    mask = jnp.where(keep >= 32, full,
+                     (jnp.uint32(1) << keep) - jnp.uint32(1))
+    return packed & mask
+
+
 def packed_clause_eval_ref(packed_literals: jax.Array,
                            packed_include: jax.Array,
-                           eval_mode: bool = False) -> jax.Array:
-    """Same contract in the packed domain."""
+                           eval_mode: bool = False,
+                           n_bits: int | None = None) -> jax.Array:
+    """Same contract in the packed domain.  ``n_bits`` (the real literal
+    count 2f) masks garbage tail bits in the last include word so they
+    never veto a clause or fake a nonempty one."""
+    if n_bits is not None:
+        packed_include = tail_mask_words(packed_include, n_bits)
     lit = packed_literals[:, None, :]
     inc = packed_include[None, :, :]
     viol = jnp.bitwise_and(inc, jnp.bitwise_not(lit))
@@ -93,6 +139,27 @@ def fused_step_ref(literals, include, weights, labels, neg_labels,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.int32)
     clause = (viol == 0).astype(jnp.int32) * cl_mask[None, :].astype(jnp.int32)
+    sums = class_sum_ref(clause, weights)
+    sums = jnp.where(h_mask[None, :] > 0, sums, NEG_INF_SUM)
+    sel_lab = _round_select(sums, labels, 1, rand_lab, weights, cl_mask,
+                            T, w_frozen, rand_bits)
+    sel_neg = _round_select(sums, neg_labels, 0, rand_neg, weights, cl_mask,
+                            T, w_frozen, rand_bits)
+    return clause, sums, sel_lab, sel_neg
+
+
+def packed_step_ref(packed_literals, packed_include, weights, labels,
+                    neg_labels, rand_lab, rand_neg, cl_mask, h_mask, T,
+                    w_frozen, rand_bits: int = 16,
+                    n_bits: int | None = None):
+    """Training-step front half on the bit-packed layout (edge batches).
+
+    Bit-identical to :func:`fused_step_ref` on the corresponding dense
+    inputs: packed clause eval (training mode — empty clauses fire, so no
+    nonempty gate) → class sums → Fig-6 masking → Alg-3 selection."""
+    clause = packed_clause_eval_ref(packed_literals, packed_include,
+                                    eval_mode=False, n_bits=n_bits)
+    clause = clause * cl_mask[None, :].astype(jnp.int32)
     sums = class_sum_ref(clause, weights)
     sums = jnp.where(h_mask[None, :] > 0, sums, NEG_INF_SUM)
     sel_lab = _round_select(sums, labels, 1, rand_lab, weights, cl_mask,

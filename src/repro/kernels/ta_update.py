@@ -104,9 +104,12 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
               interpret: bool = True) -> jax.Array:
     """Batched TA update.
 
-    ta [C, L] int32, literals [B, L] {0,1}, clause_out/type1/type2 [B, C]
-    {0,1}, l_mask [L] {0,1} -> new ta [C, L] int32.  ``seed``/``p_ta``/
-    ``boost``/``n_states`` may be traced scalars (they ride in SMEM)."""
+    ta [C, L] any int dtype (the engine stores uint8-narrowed states, 4 per
+    32-bit word; widened to int32 on entry), literals [B, L] {0,1},
+    clause_out/type1/type2 [B, C] {0,1}, l_mask [L] {0,1} -> new ta [C, L]
+    int32.  ``seed``/``p_ta``/``boost``/``n_states`` may be traced scalars
+    (they ride in SMEM).  ``ops.ta_update_op(emit_include=True)`` fuses the
+    packed include-bitplane emission onto this kernel's output."""
     C, L = ta.shape
     B = literals.shape[0]
     assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))

@@ -55,3 +55,21 @@ def train_front_costs(B: int, L: int, C: int, H: int) -> dict:
         "unfused_roofline_s": roofline_s(flops, unfused_bytes),
         "fused_roofline_s": roofline_s(flops, fused_bytes),
     }
+
+
+def clause_eval_bytes(B: int, L: int, C: int, packed: bool) -> dict:
+    """Bytes moved by one clause-evaluation call (the edge-regime hot
+    loop's memory bill — paper Fig 4-6's frugal-BRAM argument).
+
+    Unpacked: int8 literals [B, L] + int8 include [C, L].
+    Packed:   uint32 words, 32 literals each — [B, W] + [C, W],
+    W = ceil(L/32): exactly 8× fewer literal bytes and 8× fewer include
+    bytes than the int8 dense pair (32× vs the int32 include the engine
+    used to re-threshold per call).  Output [B, C] int32 is identical.
+    """
+    W = (L + 31) // 32
+    lit = B * W * 4 if packed else B * L
+    inc = C * W * 4 if packed else C * L
+    out = B * C * 4
+    return {"literal_bytes": lit, "include_bytes": inc, "out_bytes": out,
+            "total_bytes": lit + inc + out}

@@ -121,8 +121,12 @@ def test_select_path_shape_heuristics(monkeypatch):
     assert select_path(None, batch=4) == PATH_PACKED
     assert select_path(None, batch=32) == PATH_MXU
     assert select_path(None, batch=None) == PATH_MXU
-    assert select_path(None, batch=1, training=True) == PATH_FUSED
-    assert select_path(None, batch=1024, training=True) == PATH_FUSED
+    # edge training batches take the packed bitwise front half too; the
+    # batch-parallel fused kernel is the throughput training path
+    assert select_path(None, batch=1, training=True) == PATH_PACKED
+    assert select_path(None, batch=4, training=True) == PATH_PACKED
+    assert select_path(None, batch=32, training=True) == PATH_FUSED
+    assert select_path(None, batch=None, training=True) == PATH_FUSED
 
 
 def test_select_path_env_override(monkeypatch):

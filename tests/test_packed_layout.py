@@ -1,0 +1,310 @@
+"""Bit-packed canonical datapath (ISSUE 3 acceptance).
+
+Covers the packed layout end-to-end:
+
+* ``pack_literals`` / ``unpack_literals`` round-trip (hypothesis property
+  when available + a deterministic sweep), padded tail words zero, and the
+  kernels-side ``ref.pack_bitplane`` pinned bit-for-bit to the core packer;
+* ragged-W tail-bit regression: garbage bits past 2f in the last include
+  word must never veto a clause (``n_bits`` masking, kernel and ref);
+* ops-level parity: ``packed_step_op`` == ``fused_step_op`` on packed
+  views of the same problem, remainder shapes included;
+* engine-level parity: all FIVE TM variants forced onto the packed path
+  (``REPRO_KERNEL_PATH=packed_vpu``) reproduce the auto-dispatch results
+  bit-for-bit on BOTH backends, with every stage executable still at one
+  jit cache entry and ``path_per_stage`` proving dispatch == execution;
+* the packed program payload: uint8 TA + uint32 include bitplane, include
+  maintained incrementally by the train stages (never re-thresholded).
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import TMSpec
+from repro.core import PRNG
+from repro.core.booleanize import pack_literals, unpack_literals
+from repro.kernels import (fused_step_op, packed_clause_eval_op,
+                           packed_step_op, ref, select_path)
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                     # bare tier-1 env
+    hypothesis = None
+
+_rng = np.random.default_rng(42)
+_CALIB = _rng.standard_normal((64, 8)).astype(np.float32)
+BATCH = 8
+
+SPECS = {
+    "cotm": TMSpec.coalesced(features=20, classes=3, clauses=24, T=8, s=3.0),
+    "vanilla": TMSpec.vanilla(features=16, classes=4, clauses=8, T=8, s=3.0),
+    "conv": TMSpec.conv(img_h=6, img_w=6, patch=3, classes=2, clauses=16,
+                        T=8, s=3.0),
+    "regression": TMSpec.regression(features=12, clauses=16, T=16, s=3.0),
+    "head": TMSpec.head(_CALIB, classes=3, therm_bits=2, clauses=16, T=8,
+                        s=3.0),
+}
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round-trip
+# ---------------------------------------------------------------------------
+
+def _roundtrip(bits: np.ndarray):
+    packed = pack_literals(jnp.asarray(bits))
+    n = bits.shape[-1]
+    W = (n + 31) // 32
+    assert packed.dtype == jnp.uint32 and packed.shape[-1] == W
+    back = unpack_literals(packed, n)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+    # padded tail bits of the last word are zero
+    full = unpack_literals(packed, 32 * W)
+    assert (np.asarray(full)[..., n:] == 0).all()
+
+
+if hypothesis is not None:
+    @given(st.integers(1, 131), st.integers(0, 5), st.integers(0, 2**31 - 1))
+    @settings(max_examples=50, deadline=None)
+    def test_pack_unpack_roundtrip_property(n, b, seed):
+        rng = np.random.default_rng(seed)
+        shape = (b, n) if b else (n,)
+        _roundtrip((rng.random(shape) < 0.5).astype(np.int8))
+
+
+def test_pack_unpack_roundtrip_sweep():
+    """Deterministic fallback sweep (always runs, hypothesis or not)."""
+    rng = np.random.default_rng(0)
+    for n in (1, 31, 32, 33, 64, 100, 127, 128):
+        _roundtrip((rng.random((3, n)) < 0.5).astype(np.int8))
+
+
+def test_ref_pack_bitplane_matches_core_packer():
+    """kernels.ref keeps a local copy of the packer (import isolation);
+    the two layouts must stay bit-for-bit identical."""
+    rng = np.random.default_rng(1)
+    bits = (rng.random((5, 77)) < 0.5).astype(np.int8)
+    np.testing.assert_array_equal(
+        np.asarray(pack_literals(jnp.asarray(bits))),
+        np.asarray(ref.pack_bitplane(jnp.asarray(bits))))
+
+
+def test_pack_include_thresholds_and_packs():
+    rng = np.random.default_rng(2)
+    ta = jnp.asarray(rng.integers(0, 256, (6, 70)).astype(np.int32))
+    inc = ref.pack_include(ta, 256)
+    want = pack_literals((np.asarray(ta) >= 128).astype(np.int8))
+    np.testing.assert_array_equal(np.asarray(inc), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# ragged-W tail bits (satellite: garbage past 2f must not veto)
+# ---------------------------------------------------------------------------
+
+def test_tail_mask_words():
+    w = jnp.full((2, 3), 0xFFFFFFFF, jnp.uint32)
+    got = np.asarray(ref.tail_mask_words(w, 70))        # 70 = 2*32 + 6
+    assert (got[:, :2] == 0xFFFFFFFF).all()
+    assert (got[:, 2] == 0x3F).all()
+    np.testing.assert_array_equal(
+        np.asarray(ref.tail_mask_words(w, 96)), np.asarray(w))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("eval_mode", [False, True])
+def test_ragged_tail_bits_never_veto(backend, eval_mode):
+    """Regression: poison every bit past 2f in the last include word; with
+    ``n_bits`` the clause outputs must equal the dense oracle anyway."""
+    rng = np.random.default_rng(3)
+    B, C, L = 4, 8, 100                                  # W=4, 28 tail bits
+    lit = (rng.random((B, L)) < 0.5).astype(np.int8)
+    inc = (rng.random((C, L)) < 0.1).astype(np.int8)
+    inc[1] = 0                                           # an empty clause
+    pl, pi = pack_literals(jnp.asarray(lit)), pack_literals(jnp.asarray(inc))
+    tail = jnp.uint32(0xFFFFFFFF ^ ((1 << (L % 32)) - 1))
+    pi_poison = pi.at[:, -1].set(pi[:, -1] | tail)
+    want = ref.clause_eval_ref(jnp.asarray(lit), jnp.asarray(inc),
+                               eval_mode=eval_mode)
+    got = packed_clause_eval_op(pl, pi_poison, eval_mode=eval_mode,
+                                n_bits=L, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # sanity: without masking the poison DOES veto (the bug this guards)
+    bad = packed_clause_eval_op(pl, pi_poison, eval_mode=eval_mode,
+                                backend=backend)
+    assert (np.asarray(bad) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# ops-level parity: packed train front half == fused kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,R,L,H,n_cl,n_h", [
+    (8, 128, 256, 8, 128, 8),      # tile-exact
+    (5, 100, 200, 6, 90, 5),       # remainders everywhere, ragged W
+    (1, 64, 100, 4, 60, 3),        # edge single datapoint
+])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_packed_step_op_matches_fused(B, R, L, H, n_cl, n_h, backend):
+    rng = np.random.default_rng(B * 7 + L)
+    lit = jnp.asarray((rng.random((B, L)) < 0.5).astype(np.int8))
+    inc = jnp.asarray((rng.random((R, L)) < 0.05).astype(np.int8))
+    w = jnp.asarray(rng.integers(-15, 16, (H, R)).astype(np.int32))
+    lab = jnp.asarray(rng.integers(0, n_h, B).astype(np.int32))
+    neg = jnp.asarray((lab + 1) % n_h)
+    r1 = jnp.asarray(rng.integers(0, 1 << 16, (B, R), dtype=np.uint32))
+    r2 = jnp.asarray(rng.integers(0, 1 << 16, (B, R), dtype=np.uint32))
+    clm = (jnp.arange(R) < n_cl).astype(jnp.int32)
+    hm = (jnp.arange(H) < n_h).astype(jnp.int32)
+    T, wf = jnp.asarray(16, jnp.int32), jnp.asarray(0, jnp.int32)
+    args = (w, lab, neg, r1, r2, clm, hm, T, wf)
+    want = fused_step_op(lit, inc, *args)
+    got = packed_step_op(pack_literals(lit), pack_literals(inc), *args,
+                         backend=backend, n_bits=L)
+    for name, g, wt in zip(("clause", "sums", "sel_lab", "sel_neg"),
+                           got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wt),
+                                      err_msg=f"{name} [{backend}]")
+
+
+# ---------------------------------------------------------------------------
+# engine-level: five variants on the packed path, bit-identical
+# ---------------------------------------------------------------------------
+
+def _batch(spec: TMSpec, seed: int = 5, batch: int = BATCH):
+    rng = np.random.default_rng(seed)
+    cfg = spec.tm_config()
+    if spec.kind == "conv":
+        x = (rng.random((batch, 6, 6)) < 0.3).astype(np.int8)
+        y = rng.integers(0, 2, batch).astype(np.int32)
+    elif spec.kind == "head":
+        x = rng.standard_normal((batch, 8)).astype(np.float32)
+        y = rng.integers(0, 3, batch).astype(np.int32)
+    elif spec.kind == "regression":
+        x = (rng.random((batch, 12)) < 0.5).astype(np.int8)
+        y = np.round(rng.random(batch) * cfg.T).astype(np.int32)
+    else:
+        x = (rng.random((batch, cfg.features)) < 0.5).astype(np.int8)
+        y = rng.integers(0, cfg.classes, batch).astype(np.int32)
+    return x, y
+
+
+def _roster(backend: str):
+    tile = api.tile_for(*SPECS.values(), x=32, y=16, m=16, n=4)
+    eng = api.compile(tile, backend=backend)
+    out = {}
+    for name, spec in SPECS.items():
+        x, y = _batch(spec)
+        prog = eng.lower(spec, jax.random.PRNGKey(0))
+        lits = eng.encode(spec, jnp.asarray(x))
+        step = eng.train_conv if spec.kind == "conv" else eng.train_step
+        infer = eng.infer_conv if spec.kind == "conv" else eng.infer
+        new_prog, _, stats = step(prog, PRNG.create(spec.tm_config(), 7),
+                                  lits, jnp.asarray(y))
+        sums, cl = infer(prog, lits)
+        out[name] = {"ta": np.asarray(new_prog.ta),
+                     "inc": np.asarray(new_prog.inc),
+                     "weights": np.asarray(new_prog.weights),
+                     "sums": np.asarray(sums), "cl": np.asarray(cl),
+                     "stats": {k: int(v) for k, v in stats.items()}}
+    return out, eng
+
+
+@pytest.mark.parametrize("backend", ["ref", "kernel"])
+def test_five_variants_packed_path_bit_identical(backend, monkeypatch):
+    """Acceptance: packed and unpacked paths agree bit-for-bit on all five
+    TM variants, infer AND train, on this backend; cache stays at one
+    entry per stage and every stage reports packed execution."""
+    monkeypatch.delenv("REPRO_KERNEL_PATH", raising=False)
+    base, _ = _roster(backend)
+    monkeypatch.setenv("REPRO_KERNEL_PATH", "packed_vpu")
+    packed, eng = _roster(backend)
+    report = eng.cache_report()
+    for stage in ("infer", "train", "infer_conv", "train_conv"):
+        assert report[stage] == 1, report
+        assert report["path_per_stage"][stage] == "packed_vpu", report
+    for name in SPECS:
+        for k in ("ta", "inc", "weights", "sums", "cl"):
+            np.testing.assert_array_equal(base[name][k], packed[name][k],
+                                          err_msg=f"{name}/{k}")
+        assert base[name]["stats"] == packed[name]["stats"], name
+
+
+@pytest.mark.parametrize("backend", ["ref", "kernel"])
+def test_edge_batch_defaults_to_packed_dispatch(backend, monkeypatch):
+    """B=1 (the FPGA edge regime) resolves to the packed path without any
+    env force, and the engine records dispatch == execution."""
+    monkeypatch.delenv("REPRO_KERNEL_PATH", raising=False)
+    spec = SPECS["cotm"]
+    eng = api.compile(api.tile_for(spec, x=32, y=16, m=16, n=4),
+                      backend=backend)
+    prog = eng.lower(spec, jax.random.PRNGKey(0))
+    x, y = _batch(spec, batch=1)
+    lits = eng.encode(spec, jnp.asarray(x))
+    assert lits.dtype == jnp.uint32 and lits.shape == (1, eng.W)
+    eng.infer(prog, lits)
+    eng.train_step(prog, PRNG.create(spec.tm_config(), 7), lits,
+                   jnp.asarray(y))
+    paths = eng.cache_report()["path_per_stage"]
+    assert paths["infer"] == select_path(None, batch=1) == "packed_vpu"
+    assert paths["train"] == select_path(None, batch=1,
+                                         training=True) == "packed_vpu"
+
+
+# ---------------------------------------------------------------------------
+# packed program payload + incremental include maintenance
+# ---------------------------------------------------------------------------
+
+def test_program_payload_is_packed():
+    """uint8 TA (4 states/word) + uint32 include bitplane: the hot-swap
+    payload for TA+include shrinks >= 6x vs the int32 pair it replaces."""
+    spec = SPECS["cotm"]
+    eng = api.compile(api.tile_for(spec, x=32, y=16, m=16, n=4),
+                      backend="ref")
+    prog = eng.lower(spec, jax.random.PRNGKey(0))
+    assert prog.ta.dtype == jnp.uint8
+    assert prog.inc.dtype == jnp.uint32
+    assert prog.inc.shape == (eng.R, eng.W) and eng.W == (eng.L + 31) // 32
+    packed_bytes = prog.ta.nbytes + prog.inc.nbytes
+    unpacked_bytes = 2 * (eng.R * eng.L * 4)       # int32 ta + int32 include
+    assert unpacked_bytes >= 6 * packed_bytes, (unpacked_bytes, packed_bytes)
+
+
+@pytest.mark.parametrize("kind", ["cotm", "conv"])
+def test_include_bitplane_maintained_incrementally(kind):
+    """After any train step the program's inc equals the bitplane of its
+    updated TA — the update stage emitted it; nothing re-thresholds."""
+    spec = SPECS[kind]
+    tile = api.tile_for(*SPECS.values(), x=32, y=16, m=16, n=4)
+    eng = api.compile(tile, backend="ref")
+    prog = eng.lower(spec, jax.random.PRNGKey(0))
+    prng = PRNG.create(spec.tm_config(), 7)
+    step = eng.train_conv if kind == "conv" else eng.train_step
+    for i in range(3):
+        x, y = _batch(spec, seed=i)
+        lits = eng.encode(spec, jnp.asarray(x))
+        prog, prng, _ = step(prog, prng, lits, jnp.asarray(y))
+        want = ref.pack_include(prog.ta.astype(jnp.int32), prog.n_states)
+        np.testing.assert_array_equal(np.asarray(prog.inc),
+                                      np.asarray(want))
+
+
+def test_save_load_rebuilds_include(tmp_path):
+    """TM.load replaces TA wholesale from the checkpoint; the engine must
+    rebuild the bitplane so packed inference matches exactly."""
+    from repro.api import TM
+    spec = SPECS["cotm"]
+    tm = TM(spec, tile=api.tile_for(spec, x=32, y=16, m=16, n=4),
+            backend="ref", seed=0)
+    x, y = _batch(spec)
+    tm.partial_fit(x, y)
+    tm.save(str(tmp_path))
+    tm2 = TM.load(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(tm.program.inc),
+                                  np.asarray(tm2.program.inc))
+    np.testing.assert_array_equal(np.asarray(tm.predict(x[:1])),
+                                  np.asarray(tm2.predict(x[:1])))

@@ -85,8 +85,30 @@ def _roster_results(backend: str):
 def test_program_swap_keeps_cache_at_one(backend):
     """Five variants + a swap back, zero recompilations of any stage."""
     out, rerun, report = _roster_results(backend)
+    report = dict(report)            # don't mutate the lru_cached dict
+    paths = report.pop("path_per_stage")
     assert report == {"infer": 1, "train": 1, "infer_conv": 1,
                       "train_conv": 1}, report
+    # dispatch == execution: every traced stage recorded the path the
+    # dispatcher selects for its batch size (BATCH=8 -> throughput paths
+    # by default; an env force like REPRO_KERNEL_PATH=packed_vpu must be
+    # honoured by every stage — the old silent mxu fallback is the bug)
+    from repro.kernels import select_path
+
+    def expect(batch, training=False):
+        path = select_path(None, batch=batch, training=training)
+        if not training and path == "fused":     # eval has no fused impl
+            path = "mxu"
+        if backend == "ref" and path != "packed_vpu":
+            path = "ref"                         # jnp oracles ARE the path
+        return path
+
+    # conv stages run clause eval on the flattened [B·P] patch batch
+    conv_batch = BATCH * max(s.n_patches for s in SPECS.values())
+    assert paths == {"infer": expect(BATCH),
+                     "train": expect(BATCH, training=True),
+                     "infer_conv": expect(conv_batch),
+                     "train_conv": expect(conv_batch)}, paths
     # programs are pure data: swapping through the whole roster and back
     # reproduces the first variant's outputs bit-for-bit
     first = out["cotm"]
