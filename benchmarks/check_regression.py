@@ -1,0 +1,119 @@
+"""Perf-regression guard: fresh smoke benchmarks vs committed baselines.
+
+The nightly CI stashes the COMMITTED ``BENCH_fused.json`` /
+``BENCH_packed.json`` / ``BENCH_session.json``, re-runs the smoke
+benchmarks, and fails if any guarded metric regressed by more than the
+tolerance (default 2x — generous because CI runners are noisy; a real
+regression from an accidental retrace/fallback is typically 10x+).
+
+Known limitation: the committed baselines carry the authoring machine's
+absolute wall clock, so a systematically slower runner class eats into
+the tolerance budget.  The guard is therefore calibrated to catch
+order-of-magnitude failure modes (silent kernel-path fallback, per-batch
+retrace, eager-op regressions), not few-percent drift; refresh the
+committed baselines when the runner class changes, or point
+``--baseline`` at the previous nightly's uploaded artifacts for a
+same-machine comparison.
+
+Guarded metrics:
+
+* fused entries    — ``us_per_call``   (lower is better)
+* packed entries   — ``us_per_call``   (lower is better)
+* session fit      — ``scan_steps_per_s``   (higher is better)
+* session serve    — ``stacked_req_per_s``  (higher is better)
+
+Metrics present only on one side are reported but never fail the guard
+(new benchmarks land before their baseline is committed).
+
+CLI: python -m benchmarks.check_regression --baseline .bench_baseline \
+         --fresh . [--tolerance 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+# metric registry: (value, higher_is_better) per guarded key
+Metrics = Dict[str, Tuple[float, bool]]
+
+FILES = ("BENCH_fused.json", "BENCH_packed.json", "BENCH_session.json")
+
+
+def _extract(fname: str, report: dict) -> Metrics:
+    out: Metrics = {}
+    if fname == "BENCH_fused.json":
+        for e in report.get("entries", []):
+            if "us_per_call" in e:
+                out[f"fused/{e['name']}/{e['path']}"] = (e["us_per_call"],
+                                                         False)
+    elif fname == "BENCH_packed.json":
+        # byte-accounting entries (program payload sizes) carry no
+        # wall-clock — only timed entries are guarded
+        for e in report.get("entries", []):
+            if "us_per_call" in e and "B" in e:
+                out[f"packed/{e['name']}/b{e['B']}"] = (e["us_per_call"],
+                                                        False)
+    elif fname == "BENCH_session.json":
+        for e in report.get("fit", []):
+            out[f"session/fit_b{e['batch']}"] = (e["scan_steps_per_s"],
+                                                 True)
+        for e in report.get("serve", []):
+            out[f"session/serve_k{e['k']}"] = (e["stacked_req_per_s"],
+                                               True)
+    return out
+
+
+def _load(path: str, fname: str) -> Metrics:
+    f = os.path.join(path, fname)
+    if not os.path.exists(f):
+        return {}
+    with open(f) as fh:
+        return _extract(fname, json.load(fh))
+
+
+def check(baseline_dir: str, fresh_dir: str,
+          tolerance: float = 2.0) -> int:
+    failures = []
+    for fname in FILES:
+        base = _load(baseline_dir, fname)
+        fresh = _load(fresh_dir, fname)
+        for key in sorted(set(base) | set(fresh)):
+            if key not in base:
+                print(f"NEW      {key} (no baseline — not guarded)")
+                continue
+            if key not in fresh:
+                print(f"MISSING  {key} (baseline only — not guarded)")
+                continue
+            (b, hib), (f, _) = base[key], fresh[key]
+            if b <= 0 or f <= 0:
+                print(f"SKIP     {key} (non-positive value)")
+                continue
+            ratio = (b / f) if hib else (f / b)   # >1 == got worse
+            status = "FAIL" if ratio > tolerance else "ok"
+            print(f"{status:8} {key}: baseline={b:.1f} fresh={f:.1f} "
+                  f"worse_by={ratio:.2f}x (tol {tolerance:.1f}x)")
+            if ratio > tolerance:
+                failures.append(key)
+    if failures:
+        print(f"\nperf regression >{tolerance}x in: {', '.join(failures)}")
+        return 1
+    print("\nno perf regressions beyond tolerance")
+    return 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="dir with the committed BENCH_*.json")
+    ap.add_argument("--fresh", default=".",
+                    help="dir with freshly generated BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=2.0)
+    args = ap.parse_args(argv)
+    sys.exit(check(args.baseline, args.fresh, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import COALESCED, TMConfig, TsetlinMachine
+from repro.api import TM, TMSpec
 from repro.core.conv_tm import (ConvTMConfig, init as conv_init,
                                 predict as conv_predict,
                                 train_step as conv_step)
@@ -50,9 +50,9 @@ def run() -> None:
                                 jnp.asarray(ytr[:32])))
     row("convtm/translated_motifs", us / 32, f"acc={acc_conv:.3f}")
 
-    fcfg = TMConfig(tm_type=COALESCED, features=64, clauses=48, classes=3,
-                    T=12, s=3.0, prng_backend="threefry")
-    ftm = TsetlinMachine(fcfg, seed=0, mode="batched", chunk=8)
+    fspec = TMSpec.coalesced(features=64, classes=3, clauses=48, T=12,
+                             s=3.0, prng_backend="threefry")
+    ftm = TM(fspec, seed=0)
     ftm.fit(xtr.reshape(ntr, 64), ytr, epochs=4 if FAST else 6, batch=32)
     acc_flat = ftm.score(xte.reshape(-1, 64), yte)
     row("convtm/flat_cotm_baseline", 0.0,

@@ -2,7 +2,7 @@
 suffice on MNIST and accuracy saturates above that."""
 from __future__ import annotations
 
-from repro.core import COALESCED, TMConfig, TsetlinMachine
+from repro.api import TM, TMSpec
 from repro.data import MNIST_LIKE, make_bool_dataset
 
 from .common import FAST, row
@@ -13,13 +13,14 @@ def run() -> None:
     x, y = make_bool_dataset(MNIST_LIKE, n_train + n_test)
     xtr, ytr, xte, yte = x[:n_train], y[:n_train], x[n_train:], y[n_train:]
     for bits in (2, 4, 8, 12, 16):
-        cfg = TMConfig(tm_type=COALESCED, features=MNIST_LIKE.features,
-                       clauses=128, classes=MNIST_LIKE.classes, T=24, s=5.0,
-                       weight_bits=bits, prng_backend="threefry")
-        tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+        spec = TMSpec.coalesced(features=MNIST_LIKE.features,
+                                classes=MNIST_LIKE.classes, clauses=128,
+                                T=24, s=5.0, weight_bits=bits,
+                                prng_backend="threefry")
+        tm = TM(spec, seed=0)
         tm.fit(xtr, ytr, epochs=3 if FAST else 5, batch=32)
         row(f"fig14/weight_bits{bits}", 0.0,
-            f"acc={tm.score(xte, yte):.3f};clip={cfg.weight_clip}")
+            f"acc={tm.score(xte, yte):.3f};clip={tm.cfg.weight_clip}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,7 @@ feedback-probability comparisons and correlate lanes; the paper's master-
 slave re-seeding recovers most of the loss at small L."""
 from __future__ import annotations
 
-from repro.core import COALESCED, TMConfig, TsetlinMachine
+from repro.api import TM, TMSpec
 from repro.data import MNIST_LIKE, make_bool_dataset
 
 from .common import FAST, row
@@ -15,11 +15,11 @@ def run() -> None:
     xtr, ytr, xte, yte = x[:n_train], y[:n_train], x[n_train:], y[n_train:]
     for bits in (4, 8, 12, 16, 24):
         for refresh in (True, False):
-            cfg = TMConfig(tm_type=COALESCED, features=MNIST_LIKE.features,
-                           clauses=128, classes=MNIST_LIKE.classes, T=24,
-                           s=5.0, prng_backend="lfsr", lfsr_bits=bits,
-                           seed_refresh=refresh)
-            tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+            spec = TMSpec.coalesced(features=MNIST_LIKE.features,
+                                    classes=MNIST_LIKE.classes, clauses=128,
+                                    T=24, s=5.0, prng_backend="lfsr",
+                                    lfsr_bits=bits, seed_refresh=refresh)
+            tm = TM(spec, seed=0)
             tm.fit(xtr, ytr, epochs=3 if FAST else 5, batch=32)
             row(f"fig15/lfsr{bits}/refresh{int(refresh)}", 0.0,
                 f"acc={tm.score(xte, yte):.3f}")

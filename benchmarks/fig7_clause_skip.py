@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import COALESCED, TMConfig, TsetlinMachine
+from repro.core import COALESCED, TMConfig, feedback_fit
 from repro.data import MNIST_LIKE, make_bool_dataset
 
 from .common import FAST, row
@@ -22,8 +22,8 @@ def run() -> None:
     cfg = TMConfig(tm_type=COALESCED, features=MNIST_LIKE.features,
                    clauses=128, classes=MNIST_LIKE.classes, T=24, s=5.0,
                    prng_backend="threefry")
-    tm = TsetlinMachine(cfg, seed=0, mode="sequential")
-    hist = tm.fit(x, y, epochs=4 if FAST else 8, batch=64)
+    _, _, hist = feedback_fit(cfg, x, y, epochs=4 if FAST else 8, batch=64,
+                              seed=0, mode="sequential")
     first_sel = max(hist[0]["selected_clauses"], 1)
     for h in hist:
         saving = h["group_skip_frac"]

@@ -1,0 +1,220 @@
+"""Session-centric execution: scan training + stacked serving (ISSUE 4).
+
+Two claims, two sections in ``BENCH_session.json``:
+
+* ``fit`` — device-resident scan training (``engine.bind`` →
+  ``TMSession.fit_epochs``: one launch per EPOCH) vs the host ``fit_loop``
+  it replaced (one launch per BATCH), in training steps/s at B ∈ {1, 32}.
+  Both paths are bit-identical (tests/test_sessions.py); this records
+  what collapsing the per-batch host↔device round trips is worth.
+
+* ``serve`` — program-major stacked serving: K tenants coalesced into
+  ONE vmapped bank launch (``TMServer.enqueue``+``flush``) vs K
+  sequential swap-per-request launches, in requests/s at K ∈ {1, 4, 8}.
+  Requests ship pre-encoded packed literals on both sides (the
+  front-end booleanises client-side), so the comparison isolates the
+  launch path the bank amortises.  ``stacked_speedup_k8`` is the
+  headline: the K=8 bank must stay ≥ 3× sequential in smoke mode.
+
+Writes ``BENCH_session.json`` (nightly CI artifact, perf-guarded against
+the committed baseline by ``benchmarks.check_regression``).  Standalone:
+``PYTHONPATH=src python -m benchmarks.session_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.api import TM, TMSpec
+from repro.core.evaluate import fit_loop
+from repro.launch.serve_tm import TMServer
+
+from .common import FAST, row
+
+OUT_PATH = os.environ.get("BENCH_SESSION_PATH", "BENCH_session.json")
+
+FIT_BATCHES = (1, 32)
+SERVE_KS = (1, 4, 8)
+
+
+def _spec(features: int, clauses: int, classes: int = 4) -> TMSpec:
+    return TMSpec.coalesced(features=features, classes=classes,
+                            clauses=clauses, T=16, s=4.0)
+
+
+def _fit_entry(spec: TMSpec, batch: int, n: int, epochs: int,
+               repeats: int) -> dict:
+    rng = np.random.default_rng(0)
+    x = (rng.random((n, spec.features)) < 0.5).astype(np.int8)
+    y = rng.integers(0, spec.classes, n).astype(np.int32)
+    steps = (n // batch) * epochs
+
+    # host loop: one dispatch per batch (warm the executable untimed);
+    # best-of-repeats — contention noise only ever adds time, so the
+    # minimum is the clean per-epoch cost on a noisy runner
+    tm_h = TM(spec, seed=0)
+    fit_loop(tm_h.partial_fit, x, y, epochs=1, batch=batch,
+             rng=np.random.default_rng(1))
+    host_t = []
+    for r in range(repeats):
+        t0 = time.perf_counter()
+        fit_loop(tm_h.partial_fit, x, y, epochs=epochs, batch=batch,
+                 rng=np.random.default_rng(2 + r))
+        host_t.append(time.perf_counter() - t0)
+    host_s = float(np.min(host_t))
+
+    # scan session: one dispatch per epoch (same warm-up discipline)
+    tm_s = TM(spec, seed=0)
+    sess = tm_s.engine.bind(tm_s.program, x, y, spec=spec, prng=tm_s.prng)
+    sess.fit_epochs(1, batch=batch, rng=np.random.default_rng(1))
+    scan_t = []
+    for r in range(repeats):
+        t0 = time.perf_counter()
+        sess.fit_epochs(epochs, batch=batch,
+                        rng=np.random.default_rng(2 + r))
+        scan_t.append(time.perf_counter() - t0)
+    scan_s = float(np.min(scan_t))
+    dispatches = sess.dispatches
+
+    entry = {
+        "batch": batch, "n": n, "epochs": epochs,
+        "steps_per_epoch": n // batch,
+        "host_steps_per_s": steps / max(host_s, 1e-9),
+        "scan_steps_per_s": steps / max(scan_s, 1e-9),
+        "scan_speedup": host_s / max(scan_s, 1e-9),
+        "scan_dispatches": dispatches,
+    }
+    row(f"session_fit_b{batch}", scan_s / max(steps, 1) * 1e6,
+        f"scan_speedup={entry['scan_speedup']:.2f}x")
+    return entry
+
+
+def _serve_entry(tile, features: int, clauses: int, batch_slot: int,
+                 k: int, rounds: int):
+    """Requests/s for K tenants: sequential single-program launches vs
+    one stacked flush, identical pre-encoded payloads.  Each K gets its
+    own server/engine so the resident bank is exactly K slots wide."""
+    engine = api.compile(tile)
+    server = TMServer(engine, batch_slot=batch_slot)
+    rng = np.random.default_rng(0)
+    names, lits = [], {}
+    for i in range(k):
+        name = f"tenant{i}"
+        server.register(name, _spec(features, clauses, classes=2 + i % 3),
+                        seed=i)
+        names.append(name)
+    for name in names:
+        x = (rng.random((batch_slot, features)) < 0.5).astype(np.int8)
+        lits[name] = jnp.asarray(
+            engine.encode(server.tenants[name].spec, jnp.asarray(x)))
+
+    # warm both paths untimed (first stacked flush builds the bank;
+    # second exercises the steady-state resident-bank path)
+    for _ in range(2):
+        for n in names:
+            server.predict(n, lits[n], encoded=True)
+        for n in names:
+            server.enqueue(n, lits[n], encoded=True)
+        server.flush()
+
+    # median of per-round wall times — the typical request cost.  GC is
+    # paused around the timed loops so collection pauses land on neither
+    # path by lottery (both loops allocate; the pauses are not workload).
+    seq_t, stacked_t = [], []
+    gc.disable()
+    try:
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            for n in names:
+                server.predict(n, lits[n], encoded=True)
+            seq_t.append(time.perf_counter() - t0)
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            for n in names:
+                server.enqueue(n, lits[n], encoded=True)
+            server.flush()
+            stacked_t.append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    seq_s = float(np.median(seq_t))
+    stacked_s = float(np.median(stacked_t))
+
+    cache = engine.cache_report()
+    assert all(v <= 1 for v in cache.values() if isinstance(v, int)), cache
+    entry = {
+        "k": k,
+        "sequential_req_per_s": k / max(seq_s, 1e-9),
+        "stacked_req_per_s": k / max(stacked_s, 1e-9),
+        "stacked_speedup": seq_s / max(stacked_s, 1e-9),
+    }
+    row(f"session_serve_k{k}", stacked_s / k * 1e6,
+        f"stacked_speedup={entry['stacked_speedup']:.2f}x")
+    return server, entry
+
+
+def run(out: str = OUT_PATH) -> dict:
+    smoke = FAST
+    features, clauses = (32, 24) if smoke else (128, 96)
+    n, epochs, repeats = (64, 2, 2) if smoke else (512, 3, 3)
+    # serve rounds are sub-millisecond at edge slots; a large count
+    # gives the median-of-rounds estimator a stable typical-request cost
+    # even on a noisy CI runner
+    rounds = 256 if smoke else 48
+    # edge single-datapoint request slots (the paper's serving regime):
+    # per-request launch overhead IS the serving cost there, and it is
+    # exactly what the stacked launch amortises — both paths ride the
+    # packed VPU datapath (B=1 <= PACKED_MAX_BATCH, per-program dispatch)
+    batch_slot = 1 if smoke else 32
+
+    spec = _spec(features, clauses)
+    fit_entries = [_fit_entry(spec, b, n, epochs, repeats)
+                   for b in FIT_BATCHES]
+
+    # serving roster: K flat tenants (mixed classes), one engine per K so
+    # each resident bank is exactly K slots wide
+    tile = api.tile_for(spec)
+    serve_entries = []
+    server = None
+    for k in SERVE_KS:
+        server, entry = _serve_entry(tile, features, clauses, batch_slot,
+                                     k, rounds)
+        serve_entries.append(entry)
+
+    report = {
+        "smoke": smoke,
+        "backend": server.engine.backend,
+        "features": features, "clauses": clauses,
+        "fit": fit_entries,
+        "serve": serve_entries,
+        "stacked_speedup_k8": serve_entries[-1]["stacked_speedup"],
+        "scan_speedup_b32": fit_entries[-1]["scan_speedup"],
+        "server": server.stats(),
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["FAST"] = "1"
+        global FAST
+        FAST = True
+    run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,10 +7,10 @@ Paper reference points (DTM-L): 97.74 % MNIST / 86.38 % FMNIST /
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import COALESCED, TMConfig, TsetlinMachine, VANILLA
+from repro.api import TM, TMSpec
+from repro.core import COALESCED, VANILLA
 from repro.data import (FMNIST_LIKE, KMNIST_LIKE, MNIST_LIKE,
                         make_bool_dataset)
 
@@ -26,17 +26,17 @@ def run() -> None:
         xtr, ytr, xte, yte = (x[:n_train], y[:n_train], x[n_train:],
                               y[n_train:])
         for tm_type, c in ((COALESCED, clauses), (VANILLA, clauses // 4)):
-            cfg = TMConfig(tm_type=tm_type, features=spec.features,
-                           clauses=c, classes=spec.classes, T=24, s=5.0,
-                           prng_backend="threefry")
-            tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+            ctor = (TMSpec.coalesced if tm_type == COALESCED
+                    else TMSpec.vanilla)
+            mspec = ctor(features=spec.features, classes=spec.classes,
+                         clauses=c, T=24, s=5.0, prng_backend="threefry")
+            tm = TM(mspec, seed=0)
             tm.fit(xtr, ytr, epochs=epochs, batch=32)
             acc = tm.score(xte, yte)
-            bx = jnp.asarray(xtr[:32])
-            by = jnp.asarray(ytr[:32])
-            us_train = time_call(lambda: tm.fit_batch(bx, by)) / 32
+            bx, by = xtr[:32], ytr[:32]
+            us_train = time_call(lambda: tm.partial_fit(bx, by)) / 32
             us_inf = time_call(lambda: tm.predict(bx)) / 32
-            ops = cfg.ops_per_inference()
+            ops = tm.cfg.ops_per_inference()
             row(f"table1/{spec.name}/{tm_type}", us_train,
                 f"acc={acc:.3f};inf_us={us_inf:.1f};"
                 f"logic_ops={ops['logic_ops']};int_ops={ops['integer_ops']}")

@@ -32,6 +32,13 @@ Five spec kinds lower onto the same engine executables:
 
 Swapping programs (any kind → any kind) never recompiles an engine stage;
 ``engine.cache_report()`` proves it and ``launch/serve_tm.py`` serves it.
+
+Session-centric execution (ISSUE 4): ``TM.fit`` stages its data once and
+runs each epoch as a single device-resident scan
+(``engine.bind(program, x, y)`` → :class:`repro.core.dtm.TMSession`),
+bit-identical to the per-batch host loop it replaced; and :func:`stack`
+builds a :class:`ProgramBank` — K same-tile programs vmapped through one
+launch — for ensembles and program-major multi-tenant serving.
 """
 from __future__ import annotations
 
@@ -39,7 +46,7 @@ import dataclasses
 import functools
 import json
 import os
-from typing import Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +54,8 @@ import numpy as np
 
 from repro import checkpoint
 from repro.core.booleanize import Booleanizer, fit_thermometer
-from repro.core.dtm import DTMEngine, DTMProgram
-from repro.core.evaluate import accuracy, batched_predict, fit_loop
+from repro.core.dtm import DTMEngine, DTMProgram, TMSession
+from repro.core.evaluate import accuracy, batched_predict
 from repro.core.prng import PRNG
 from repro.core.types import COALESCED, TMConfig, TileConfig, VANILLA
 
@@ -58,13 +65,19 @@ KINDS = ("vanilla", "coalesced", "conv", "regression", "head")
 @functools.lru_cache(maxsize=None)
 def _position_code(img_h: int, img_w: int, patch: int) -> np.ndarray:
     """Thermometer patch-position bits [P, pos_bits] — a pure function of
-    the conv geometry, built once per spec shape (not per batch)."""
+    the conv geometry, built once per spec shape (not per batch).
+
+    The cached array is SHARED across every caller with the same
+    geometry, so it is returned read-only — an accidental in-place edit
+    must fail loudly instead of silently corrupting all future encodes."""
     oh, ow = img_h - patch + 1, img_w - patch + 1
     pi = np.arange(oh)[:, None].repeat(ow, 1).reshape(-1)            # [P]
     pj = np.arange(ow)[None, :].repeat(oh, 0).reshape(-1)
     rt = (pi[:, None] > np.arange(oh - 1)[None, :]).astype(np.int8)
     ct = (pj[:, None] > np.arange(ow - 1)[None, :]).astype(np.int8)
-    return np.concatenate([rt, ct], -1)
+    out = np.concatenate([rt, ct], -1)
+    out.flags.writeable = False
+    return out
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -85,6 +98,8 @@ class TMSpec:
     weight_bits: int = 12
     rand_bits: int = 16
     prng_backend: str = "counter"
+    lfsr_bits: int = 24               # PRNG lane width (lfsr backend)
+    seed_refresh: bool = True         # master re-seeding every 2^L cycles
     boost_true_positive: bool = True
     # conv geometry (kind == "conv")
     img_h: int = 0
@@ -158,6 +173,8 @@ class TMSpec:
                       s=self.s, ta_bits=self.ta_bits,
                       weight_bits=self.weight_bits, rand_bits=self.rand_bits,
                       prng_backend=self.prng_backend,
+                      lfsr_bits=self.lfsr_bits,
+                      seed_refresh=self.seed_refresh,
                       boost_true_positive=self.boost_true_positive)
         if self.kind == "vanilla":
             return TMConfig(tm_type=VANILLA, classes=self.classes, T=self.T,
@@ -287,34 +304,64 @@ class TM:
             spec, jax.random.PRNGKey(seed))
         self.prng = PRNG.create(self.cfg, seed + 1)
         self.steps = 0
+        self._stream = None      # lazy streaming TMSession (partial_fit)
 
     # ---- data plumbing -----------------------------------------------------
     def _encode(self, x) -> jax.Array:
         return self.engine.encode(self.spec, jnp.asarray(x))
 
-    # ---- training ----------------------------------------------------------
+    def _extra_metrics(self) -> Optional[Callable]:
+        if self.spec.kind != "regression":
+            return None
+        # accuracy is not defined against vote targets — report MAE
+        return lambda agg, n: {
+            "train_mae": agg.get("abs_err", 0) / max(n * self.cfg.T, 1),
+            "train_acc": None}
+
+    # ---- training (both paths run through engine.bind sessions) ------------
     def partial_fit(self, x, y) -> dict:
         """One engine train step on a batch; returns the stats dict."""
-        lits, lab = self._encode(x), self.spec.encode_labels(y)
-        step = self.engine.train_fn(self.spec)
-        self.program, self.prng, stats = step(self.program, self.prng,
-                                              lits, lab)
+        if self._stream is None:
+            self._stream = self.engine.bind(self.program, spec=self.spec,
+                                            prng=self.prng)
+        # the estimator owns (program, prng); sync the streaming session
+        # in case they were replaced from outside (load, surgery)
+        self._stream.program, self._stream.prng = self.program, self.prng
+        stats = self._stream.step(x, y)
+        self.program, self.prng = self._stream.state()
         self.steps += 1
         return stats
 
     def fit(self, x, y, epochs: int = 1, batch: int = 32,
             log_every: int = 0, x_test=None, y_test=None,
             rng: Optional[np.random.Generator] = None) -> list:
-        extra = None
-        if self.spec.kind == "regression":
-            # accuracy is not defined against vote targets — report MAE
-            extra = lambda agg, n: {
-                "train_mae": agg.get("abs_err", 0) / max(n * self.cfg.T, 1),
-                "train_acc": None}
-        return fit_loop(self.partial_fit, x, y, epochs=epochs, batch=batch,
-                        rng=rng, log_every=log_every,
-                        score_fn=(None if x_test is None else self.score),
-                        x_test=x_test, y_test=y_test, extra_metrics=extra)
+        """Device-resident training: stage (x, y) once, then ONE scan
+        launch per epoch (``engine.bind`` → ``TMSession.fit_epochs``) —
+        bit-identical to the per-batch host loop it replaced."""
+        session = self.engine.bind(self.program, x, y, spec=self.spec,
+                                   prng=self.prng)
+
+        def _score(xt, yt):
+            # sync the estimator to the session's live program so score()
+            # (and anything else reading self.program mid-fit) is current
+            self.program, self.prng = session.state()
+            return self.score(xt, yt)
+
+        steps_before = session.steps
+        try:
+            history = session.fit_epochs(
+                epochs, batch=batch, rng=rng, log_every=log_every,
+                score_fn=(None if x_test is None else _score),
+                x_test=x_test, y_test=y_test,
+                extra_metrics=self._extra_metrics())
+        finally:
+            # epoch launches DONATE the program/PRNG buffers, so the
+            # objects this estimator held going in are dead after the
+            # first epoch — always take the session's live state back,
+            # even when an epoch / score callback raises mid-fit
+            self.program, self.prng = session.unbind()
+            self.steps += session.steps - steps_before
+        return history
 
     # ---- inference ---------------------------------------------------------
     def _infer(self, x):
@@ -374,3 +421,112 @@ class TM:
         tm.prng = tree["prng"]
         tm.steps = int(extra.get("steps", 0))
         return tm
+
+
+# ---------------------------------------------------------------------------
+# ProgramBank — K stacked programs, one launch (program-major serving)
+# ---------------------------------------------------------------------------
+
+class ProgramBank:
+    """K same-tile :class:`DTMProgram` s stacked along a leading axis.
+
+    The engine's stage executables are vmapped over the program axis
+    (``infer_bank`` / ``train_bank``), so ensembles and multi-tenant
+    serving execute K programs in ONE launch instead of K sequential
+    program swaps.  The stacked pytree is plain data — per-slot hot-swap
+    (``swap_in``/``swap_out``) is a device-side row scatter/gather, and
+    ``unstack()`` recovers the K independent programs bit-exactly.
+
+    Build with :func:`stack`; all programs must share the engine's tile
+    geometry (they already do if lowered by it) and leaf dtypes (mixed
+    ``ta_bits`` regimes would silently promote under ``jnp.stack``).
+    Flat and conv programs cannot share a bank (literal ranks differ);
+    ``conv=True`` routes through the conv bank executable.
+    """
+
+    def __init__(self, engine: DTMEngine, progs: DTMProgram, k: int,
+                 conv: bool = False,
+                 prngs: Optional[PRNG] = None):
+        self.engine = engine
+        self.progs = progs          # stacked leaves: [K, ...]
+        self.k = k
+        self.conv = conv
+        self.prngs = prngs          # stacked PRNG (train-capable banks)
+
+    # ---- one-launch execution ---------------------------------------------
+    def infer(self, lits: jax.Array):
+        """lits [K, B, W] packed ([K, B, P, W] conv) ->
+        (sums [K, B, H], clause [K, B, R]) in one launch."""
+        fn = (self.engine.infer_bank if not self.conv
+              else self.engine.infer_conv_bank)
+        return fn(self.progs, lits)
+
+    def predict(self, lits):
+        """Flat banks only: one launch with IN-TRACE decode ->
+        (argmax preds [K, B] int32, clipped clause votes [K, B] int32) —
+        the two tiny planes serving needs (classification reads preds,
+        regression reads votes / T), instead of round-tripping the full
+        sums/clause tensors to the host."""
+        assert not self.conv, "conv banks decode host-side (use infer)"
+        return self.engine.predict_bank(self.progs, lits)
+
+    def train(self, lits: jax.Array, labels: jax.Array) -> dict:
+        """One stacked training step: program k consumes batch k
+        (lits [K, B, W], labels [K, B]).  Returns per-program stats
+        ([K]-shaped scalars); the bank's programs and PRNGs advance in
+        place.  Conv banks are inference-only (the conv train stage's
+        per-(datapoint, clause) patch gather is memory-hungry under vmap
+        — train conv tenants through their own sessions)."""
+        assert not self.conv, "conv banks are inference-only"
+        assert self.prngs is not None, (
+            "bank built without PRNGs; pass prngs= to api.stack")
+        self.progs, self.prngs, stats = self.engine.train_bank(
+            self.progs, self.prngs, lits, labels)
+        return stats
+
+    # ---- per-slot hot swap --------------------------------------------------
+    def swap_in(self, k: int, program: DTMProgram) -> None:
+        """Replace slot ``k`` (device-side row scatter per leaf) — the
+        per-tenant RAM rewrite, bank edition."""
+        self.progs = jax.tree.map(lambda b, p: b.at[k].set(p), self.progs,
+                                  program)
+
+    def swap_out(self, k: int) -> DTMProgram:
+        """Read slot ``k`` back as an independent program."""
+        return jax.tree.map(lambda b: b[k], self.progs)
+
+    def unstack(self) -> List[DTMProgram]:
+        return [self.swap_out(i) for i in range(self.k)]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.progs))
+
+
+def stack(programs: Sequence[DTMProgram], engine: DTMEngine,
+          conv: bool = False,
+          prngs: Optional[Sequence[PRNG]] = None) -> ProgramBank:
+    """Stack same-tile programs into a :class:`ProgramBank`.
+
+    ``prngs`` (optional, one per program) arms the bank for stacked
+    training; their static config (backend, rand_bits, …) must agree —
+    it becomes part of the single vmapped trace."""
+    programs = list(programs)
+    assert programs, "stack() needs at least one program"
+    ref_leaves = jax.tree.leaves(programs[0])
+    for p in programs[1:]:
+        leaves = jax.tree.leaves(p)
+        assert len(leaves) == len(ref_leaves)
+        for a, b in zip(ref_leaves, leaves):
+            assert a.shape == b.shape and a.dtype == b.dtype, (
+                "bank programs must share padded shapes and dtypes "
+                f"(got {a.shape}/{a.dtype} vs {b.shape}/{b.dtype}) — "
+                "lower them on one engine with uniform ta_bits")
+    progs = jax.tree.map(lambda *xs: jnp.stack(xs), *programs)
+    stacked_prng = None
+    if prngs is not None:
+        prngs = list(prngs)
+        assert len(prngs) == len(programs)
+        stacked_prng = jax.tree.map(lambda *xs: jnp.stack(xs), *prngs)
+    return ProgramBank(engine, progs, k=len(programs), conv=conv,
+                       prngs=stacked_prng)

@@ -1,8 +1,10 @@
-"""Config package: one module per assigned architecture + TM paper configs."""
-from .registry import get_arch, get_smoke, all_archs, ARCH_IDS, ALIASES
+"""Config package: the paper's TM model/tile configurations.
+
+(The seed-era LLM architecture registry lived here until ISSUE 4; the
+repo is a TM accelerator reproduction — only the paper configs remain.)
+"""
 from .tm_paper import (TM_MNIST_COTM, TM_MNIST_VANILLA, TM_KWS6_COTM,
                        TM_KWS6_VANILLA, DTM_L_TILE, DTM_S_TILE)
 
-__all__ = ["get_arch", "get_smoke", "all_archs", "ARCH_IDS", "ALIASES",
-           "TM_MNIST_COTM", "TM_MNIST_VANILLA", "TM_KWS6_COTM",
+__all__ = ["TM_MNIST_COTM", "TM_MNIST_VANILLA", "TM_KWS6_COTM",
            "TM_KWS6_VANILLA", "DTM_L_TILE", "DTM_S_TILE"]

@@ -7,9 +7,9 @@ from .clause import (clause_outputs_logical, clause_outputs_matmul,
                      class_sums, predict, vanilla_polarity)
 from .prng import PRNG, LFSRState, make_cluster, lfsr_step, cluster_next
 from .feedback import train_step, FeedbackStats
-from .evaluate import accuracy, batched_predict, fit_loop
-from .tm import TsetlinMachine
-from .dtm import DTMEngine, DTMProgram
+from .evaluate import (accuracy, batched_predict, epoch_record,
+                       feedback_fit, fit_loop)
+from .dtm import DTMEngine, DTMProgram, TMSession
 from .tm_head import TMHead, pool_backbone_features
 from . import conv_tm, regression_tm
 
@@ -19,7 +19,8 @@ __all__ = [
     "to_literals", "pack_literals", "clause_outputs_logical",
     "clause_outputs_matmul", "class_sums", "predict", "vanilla_polarity",
     "PRNG", "LFSRState", "make_cluster", "lfsr_step", "cluster_next",
-    "train_step", "FeedbackStats", "TsetlinMachine", "DTMEngine",
-    "conv_tm", "regression_tm", "accuracy", "batched_predict", "fit_loop",
+    "train_step", "FeedbackStats", "DTMEngine", "TMSession",
+    "conv_tm", "regression_tm", "accuracy", "batched_predict",
+    "epoch_record", "feedback_fit", "fit_loop",
     "DTMProgram", "TMHead", "pool_backbone_features",
 ]

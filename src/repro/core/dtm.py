@@ -51,18 +51,26 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 # Fig 6d: remainder class sums pinned to min (shared with the kernels)
 from repro.kernels.ref import NEG_INF_SUM as _NEG_INF_SUM
 from repro.kernels.ref import pack_include as _pack_include
 from .booleanize import pack_literals, unpack_literals
+from .evaluate import epoch_record
 from .prng import PRNG
 from .types import COALESCED, TMConfig, TileConfig, VANILLA
+
+# The engine train steps return exactly these int32 scalar stats; the
+# epoch scan emits them per step and TMSession sums them host-side into
+# the same plain ints the host fit_loop aggregates.
+STAT_KEYS = ("selected", "active_groups", "total_groups", "correct",
+             "abs_err")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -169,6 +177,26 @@ class DTMEngine:
         # conv stage executables (only ever compiled if a conv program runs)
         self._infer_conv = jax.jit(self._infer_conv_impl)
         self._train_conv = jax.jit(self._train_conv_impl)
+        # session epoch executables: a whole training epoch as ONE launch
+        # (lax.scan over pre-staged batches; program + PRNG donated so the
+        # device state is updated in place epoch over epoch)
+        self._fit_epoch = jax.jit(self._fit_epoch_impl,
+                                  donate_argnums=(0, 1))
+        self._fit_epoch_conv = jax.jit(self._fit_epoch_conv_impl,
+                                       donate_argnums=(0, 1))
+        # program-bank executables: K stacked programs through one launch
+        # (vmap over the leading program axis of every DTMProgram leaf)
+        self._infer_bank = jax.jit(self._infer_bank_impl)
+        self._infer_conv_bank = jax.jit(self._infer_conv_bank_impl)
+        self._train_bank = jax.jit(self._train_bank_impl,
+                                   donate_argnums=(0, 1))
+        # list-taking variants: per-tenant literal arrays are stacked
+        # INSIDE the trace (free at run time) — the serving flush path,
+        # which would otherwise pay K eager expand_dims+concatenate ops
+        self._infer_bank_list = jax.jit(self._infer_bank_list_impl)
+        self._infer_conv_bank_list = jax.jit(
+            self._infer_conv_bank_list_impl)
+        self._predict_bank_list = jax.jit(self._predict_bank_list_impl)
 
     # ------------------------------------------------------------------ #
     # programming (paper §IV-D-a)                                         #
@@ -304,10 +332,15 @@ class DTMEngine:
     # ------------------------------------------------------------------ #
     # shared datapath stages                                              #
     # ------------------------------------------------------------------ #
-    def _eval_path(self, batch: int, stage: str) -> str:
+    def _eval_path(self, batch: int, stage: str, lanes: int = 1) -> str:
         """Resolve the clause-eval kernel path for this trace and record it
-        (dispatch == execution: the recorded name is the branch taken)."""
-        path = kops.select_path(None, batch=batch, training=False)
+        (dispatch == execution: the recorded name is the branch taken).
+
+        ``lanes`` is the program-bank width when the stage runs under a
+        vmapped bank executable (per-program batch still governs the
+        edge-regime choice — see ``select_path``)."""
+        path = kops.select_path(None, batch=batch, training=False,
+                                lanes=lanes)
         if path == kops.PATH_FUSED:
             # the fused kernel only exists for train steps; eval falls back
             # to its dense front half (documented in README)
@@ -318,13 +351,14 @@ class DTMEngine:
         return path
 
     def _clause_outputs(self, prog: DTMProgram, plits: jax.Array,
-                        eval_mode: bool, stage: str) -> jax.Array:
+                        eval_mode: bool, stage: str,
+                        lanes: int = 1) -> jax.Array:
         """Clause-matrix stage: PACKED [N, W] literals -> [N, R] int32.
 
         Routes per the dispatcher decision for this batch size: the packed
         bitwise path reads ``prog.inc`` directly (no threshold, no unpack);
         the MXU/ref recasts unpack literals + include on device."""
-        path = self._eval_path(plits.shape[0], stage)
+        path = self._eval_path(plits.shape[0], stage, lanes=lanes)
         if path == kops.PATH_PACKED:
             cl = kops.packed_clause_eval_op(plits, prog.inc,
                                             eval_mode=eval_mode,
@@ -363,17 +397,21 @@ class DTMEngine:
     # ------------------------------------------------------------------ #
     # inference (Eq 1 + Eq 2/3 on the padded grid)                        #
     # ------------------------------------------------------------------ #
-    def _infer_impl(self, prog: DTMProgram, lits: jax.Array):
-        cl = self._clause_outputs(prog, lits, eval_mode=True, stage="infer")
+    def _infer_impl(self, prog: DTMProgram, lits: jax.Array,
+                    lanes: int = 1, stage: str = "infer"):
+        cl = self._clause_outputs(prog, lits, eval_mode=True, stage=stage,
+                                  lanes=lanes)
         return self._class_sums(prog, cl), cl
 
-    def _infer_conv_impl(self, prog: DTMProgram, plits: jax.Array):
+    def _infer_conv_impl(self, prog: DTMProgram, plits: jax.Array,
+                         lanes: int = 1, stage: str = "infer_conv"):
         """Conv pre/post stages around the shared clause datapath:
         per-patch clause eval on the [B·P, W] view, OR over real patches,
         then the ordinary weight-matrix stage."""
         B, P, W = plits.shape
         cl_p = self._clause_outputs(prog, plits.reshape(B * P, W),
-                                    eval_mode=True, stage="infer_conv")
+                                    eval_mode=True, stage=stage,
+                                    lanes=lanes)
         cl_p = cl_p.reshape(B, P, self.R) * prog.p_mask[None, :, None]
         cl = cl_p.max(axis=1)                                          # [B,R]
         return self._class_sums(prog, cl), cl
@@ -396,7 +434,8 @@ class DTMEngine:
     # training (Alg 3-6 on the padded grid, batched-delta mode)           #
     # ------------------------------------------------------------------ #
     def _train_front(self, prog: DTMProgram, plits: jax.Array,
-                     lits: jax.Array, cls_lab, neg, sel_rand):
+                     lits: jax.Array, cls_lab, neg, sel_rand,
+                     lanes: int = 1, stage: str = "train"):
         """Training-step front half (clause eval → class sums → Alg-3
         selection, both rounds) through the dispatcher-selected path:
 
@@ -410,10 +449,11 @@ class DTMEngine:
         All four are bit-identical; the executed path is recorded under
         ``path_per_stage`` at trace time."""
         wf = prog.w_frozen.astype(jnp.int32)
-        path = kops.select_path(None, batch=plits.shape[0], training=True)
+        path = kops.select_path(None, batch=plits.shape[0], training=True,
+                                lanes=lanes)
         if self.backend == "ref" and path != kops.PATH_PACKED:
             path = kops.PATH_REF
-        self._stage_paths["train"] = path
+        self._stage_paths[stage] = path
         if path == kops.PATH_PACKED:
             return kops.packed_step_op(
                 plits, prog.inc, prog.weights, cls_lab, neg, sel_rand[0],
@@ -432,7 +472,8 @@ class DTMEngine:
             backend="ref" if path == kops.PATH_REF else self._kb)
 
     def _train_impl(self, prog: DTMProgram, prng: PRNG, plits: jax.Array,
-                    labels: jax.Array):
+                    labels: jax.Array, lanes: int = 1,
+                    stage: str = "train"):
         """One batched train step through the fused dispatcher path.
 
         Front half (clause eval → class sums → Alg-3 feedback selection
@@ -470,7 +511,8 @@ class DTMEngine:
         neg = jnp.where(rn < cls_lab, rn, rn + 1)                      # [B]
 
         cl, sums_m, sel_lab, sel_neg = self._train_front(
-            prog, plits, lits, cls_lab, neg, sel_rand)
+            prog, plits, lits, cls_lab, neg, sel_rand, lanes=lanes,
+            stage=stage)
         # batch accuracy is meaningless against a regression vote target
         correct = jnp.where(reg, 0, (jnp.argmax(sums_m, -1) == labels).sum())
 
@@ -643,6 +685,135 @@ class DTMEngine:
         """plits [B, P, W] packed (from encode) conv train step."""
         return self._train_conv(prog, prng, plits, labels)
 
+    # ------------------------------------------------------------------ #
+    # session epoch executables (device-resident scan training)           #
+    # ------------------------------------------------------------------ #
+    def _scan_epoch(self, step_impl: Callable, prog: DTMProgram, prng: PRNG,
+                    lits: jax.Array, labels: jax.Array, idx: jax.Array):
+        """One training epoch as a single ``lax.scan`` over pre-staged
+        batches.
+
+        ``lits``/``labels`` are the FULL staged dataset (packed literals,
+        encoded labels) resident on device; ``idx`` [steps, B] int32 is
+        the epoch's shuffled batch index plan.  The scan carries
+        (program, PRNG) and emits PER-STEP stats ([steps] int32 per key
+        — per-step values fit int32 comfortably; the epoch totals are
+        summed host-side in exact integer arithmetic, just like the host
+        loop sums per-batch ints, so histories stay bit-identical at any
+        scale).  The per-batch step is the SAME ``_train_impl``/
+        ``_train_conv_impl`` trace the host loop jits, so the resulting
+        program and stats are bit-identical to ``steps`` individual
+        dispatches; only the host↔device round trips differ (one per
+        epoch instead of one per batch)."""
+
+        def body(carry, ib):
+            prog, prng = carry
+            prog, prng, stats = step_impl(prog, prng,
+                                          jnp.take(lits, ib, axis=0),
+                                          jnp.take(labels, ib, axis=0))
+            return (prog, prng), {k: stats[k].astype(jnp.int32)
+                                  for k in STAT_KEYS}
+
+        (prog, prng), step_stats = jax.lax.scan(body, (prog, prng), idx)
+        return prog, prng, step_stats
+
+    def _fit_epoch_impl(self, prog, prng, lits, labels, idx):
+        return self._scan_epoch(self._train_impl, prog, prng, lits, labels,
+                                idx)
+
+    def _fit_epoch_conv_impl(self, prog, prng, plits, labels, idx):
+        return self._scan_epoch(self._train_conv_impl, prog, prng, plits,
+                                labels, idx)
+
+    def bind(self, program: DTMProgram, x=None, y=None, *, spec=None,
+             prng: Optional[PRNG] = None, seed: int = 0) -> "TMSession":
+        """Open a device-resident training session on this engine.
+
+        ``x``/``y`` (optional) are raw model inputs/targets staged ONCE —
+        encoded to the packed canonical layout and kept on device;
+        ``session.fit_epochs(n)`` then runs each epoch as a single scan
+        launch (program + PRNG donated through the carry).  Without
+        staged data the session still owns the (program, PRNG) pair and
+        serves streaming ``step()`` updates — the estimator's
+        ``partial_fit`` path."""
+        if prng is None:
+            if spec is not None:
+                prng = PRNG.create(spec.tm_config(), seed + 1)
+            else:
+                prng = PRNG("counter", 24, self.rand_bits, False,
+                            jnp.uint32(seed + 1 if seed + 1 else 0xC0FFEE))
+        session = TMSession(self, program, prng, spec=spec)
+        if x is not None:
+            session.stage(x, y)
+        return session
+
+    # ------------------------------------------------------------------ #
+    # program-bank executables (K stacked programs, one launch)           #
+    # ------------------------------------------------------------------ #
+    def _infer_bank_impl(self, progs: DTMProgram, lits: jax.Array):
+        """Stacked inference: program leaves [K, ...], lits [K, B, W] ->
+        (sums [K, B, H], clause [K, B, R]) in ONE launch."""
+        lanes = lits.shape[0]
+        return jax.vmap(functools.partial(
+            self._infer_impl, lanes=lanes, stage="infer_bank"))(progs, lits)
+
+    def _infer_conv_bank_impl(self, progs: DTMProgram, plits: jax.Array):
+        """Stacked conv inference: plits [K, B, P, W]."""
+        lanes = plits.shape[0]
+        return jax.vmap(functools.partial(
+            self._infer_conv_impl, lanes=lanes,
+            stage="infer_conv_bank"))(progs, plits)
+
+    def _train_bank_impl(self, progs: DTMProgram, prngs: PRNG,
+                         lits: jax.Array, labels: jax.Array):
+        """Stacked training step: K programs each take one batch
+        ([K, B, W] literals, [K, B] labels) in ONE launch — ensembles and
+        multi-tenant on-line training without per-program dispatches."""
+        lanes = lits.shape[0]
+        return jax.vmap(functools.partial(
+            self._train_impl, lanes=lanes, stage="train_bank"))(
+                progs, prngs, lits, labels)
+
+    def _infer_bank_list_impl(self, progs: DTMProgram, lits_list):
+        return self._infer_bank_impl(progs, jnp.stack(lits_list))
+
+    def _infer_conv_bank_list_impl(self, progs: DTMProgram, plits_list):
+        return self._infer_conv_bank_impl(progs, jnp.stack(plits_list))
+
+    def _predict_bank_list_impl(self, progs: DTMProgram, lits_list):
+        """Stacked inference DECODED in-trace: (argmax preds [K, B],
+        clipped clause votes [K, B]) — the serving flush fetches two tiny
+        int32 planes instead of the [K, B, H] sums + [K, B, R] clause
+        matrix (classification reads ``preds``, regression reads
+        ``votes`` / T; same values as host-side decode)."""
+        sums, cl = self._infer_bank_impl(progs, jnp.stack(lits_list))
+        preds = jnp.argmax(sums, axis=-1).astype(jnp.int32)
+        votes = jnp.clip(cl.sum(axis=-1), 0, progs.T[:, None])
+        return preds, votes.astype(jnp.int32)
+
+    def infer_bank(self, progs: DTMProgram, lits):
+        """lits: stacked [K, B, W] array, or a K-tuple of [B, W] arrays
+        (stacked in-trace — the cheap path for per-tenant requests)."""
+        if isinstance(lits, (list, tuple)):
+            return self._infer_bank_list(progs, tuple(lits))
+        return self._infer_bank(progs, lits)
+
+    def infer_conv_bank(self, progs: DTMProgram, plits):
+        if isinstance(plits, (list, tuple)):
+            return self._infer_conv_bank_list(progs, tuple(plits))
+        return self._infer_conv_bank(progs, plits)
+
+    def predict_bank(self, progs: DTMProgram, lits):
+        """Flat-bank inference with in-trace decode: K-tuple (or stacked
+        [K, B, W]) packed literals -> (preds [K, B], votes [K, B])."""
+        if not isinstance(lits, (list, tuple)):
+            lits = tuple(lits)
+        return self._predict_bank_list(progs, tuple(lits))
+
+    def train_bank(self, progs: DTMProgram, prngs: PRNG, lits: jax.Array,
+                   labels: jax.Array):
+        return self._train_bank(progs, prngs, lits, labels)
+
     # spec-driven stage dispatch (one definition for estimator AND server)
     def train_fn(self, spec):
         return (self.train_conv if getattr(spec, "kind", None) == "conv"
@@ -671,5 +842,135 @@ class DTMEngine:
             "train": self._train._cache_size(),
             "infer_conv": self._infer_conv._cache_size(),
             "train_conv": self._train_conv._cache_size(),
+            "fit_epoch": self._fit_epoch._cache_size(),
+            "fit_epoch_conv": self._fit_epoch_conv._cache_size(),
+            "infer_bank": self._infer_bank._cache_size(),
+            "infer_conv_bank": self._infer_conv_bank._cache_size(),
+            "infer_bank_list": self._infer_bank_list._cache_size(),
+            "infer_conv_bank_list":
+                self._infer_conv_bank_list._cache_size(),
+            "predict_bank_list": self._predict_bank_list._cache_size(),
+            "train_bank": self._train_bank._cache_size(),
             "path_per_stage": dict(self._stage_paths),
         }
+
+
+class TMSession:
+    """A (program, PRNG) pair bound to an engine, with optionally staged
+    device-resident training data (paper §IV-D: the datapath plus the RAM
+    image it is currently programmed with, mid-training).
+
+    Two execution modes share the session state:
+
+    * ``step(x, y)``      — streaming: encode one batch, one dispatch
+      (the estimator's ``partial_fit`` path).
+    * ``fit_epochs(n)``   — device-resident: the staged dataset is
+      gathered on device per the epoch's shuffled index plan and the
+      whole epoch runs as ONE ``lax.scan`` launch (program + PRNG donated
+      through the carry, per-step stats summed exactly on the host).
+      Bit-identical to the
+      host ``fit_loop`` driving ``step`` batch by batch — same PRNG
+      stream, same shuffle draws, same integer datapath — with host↔
+      device transitions collapsed from one per batch to one per epoch.
+
+    ``dispatches`` counts engine-executable launches — the probe the
+    ≤ 1-transition-per-epoch tests assert on.
+    """
+
+    def __init__(self, engine: DTMEngine, program: DTMProgram, prng: PRNG,
+                 spec=None):
+        self.engine = engine
+        self.spec = spec
+        self.program = program
+        self.prng = prng
+        self.steps = 0          # train batches consumed
+        self.dispatches = 0     # engine-executable launches (the probe)
+        self._lits = None       # staged packed literals [N, W] / [N, P, W]
+        self._labels = None     # staged encoded labels [N]
+        self.n = 0
+
+    # ---- data staging ------------------------------------------------------
+    def _encode(self, x) -> jax.Array:
+        if self.spec is not None:
+            return self.engine.encode(self.spec, jnp.asarray(x))
+        return self.engine.pad_features(jnp.asarray(x))
+
+    def _encode_labels(self, y) -> jax.Array:
+        if self.spec is not None:
+            return self.spec.encode_labels(y)
+        return jnp.asarray(y, jnp.int32)
+
+    def stage(self, x, y) -> "TMSession":
+        """Encode the full dataset ONCE and pin it on device.
+
+        Row-wise encoding commutes with gathering, so device-side
+        ``take`` of staged rows is bit-identical to encoding the gathered
+        host batch (the fit_loop order of operations)."""
+        self._lits = self._encode(x)
+        self._labels = self._encode_labels(y)
+        self.n = int(self._lits.shape[0])
+        return self
+
+    @property
+    def conv(self) -> bool:
+        return getattr(self.spec, "kind", None) == "conv"
+
+    # ---- streaming mode ----------------------------------------------------
+    def step(self, x, y) -> dict:
+        """One engine train step on a fresh (unstaged) batch."""
+        lits, lab = self._encode(x), self._encode_labels(y)
+        fn = self.engine.train_fn(self.spec)
+        self.program, self.prng, stats = fn(self.program, self.prng, lits,
+                                            lab)
+        self.steps += 1
+        self.dispatches += 1
+        return stats
+
+    # ---- device-resident mode ----------------------------------------------
+    def fit_epochs(self, epochs: int, batch: int = 32,
+                   rng: Optional[np.random.Generator] = None,
+                   log_every: int = 0, score_fn: Optional[Callable] = None,
+                   x_test=None, y_test=None,
+                   extra_metrics: Optional[Callable] = None) -> list:
+        """Run ``epochs`` training epochs, ONE scan launch per epoch.
+
+        Returns the same per-epoch records as
+        :func:`repro.core.evaluate.fit_loop` (``epoch_record`` is shared),
+        with identical shuffle-RNG consumption — one
+        ``rng.permutation(n)`` per epoch."""
+        assert self._lits is not None, "bind data first: engine.bind(p, x, y)"
+        rng = rng or np.random.default_rng(0)
+        n = self.n - self.n % batch
+        steps = n // batch
+        fit = (self.engine._fit_epoch_conv if self.conv
+               else self.engine._fit_epoch)
+        history = []
+        for ep in range(epochs):
+            idx = rng.permutation(self.n)[:n].astype(np.int32)
+            self.program, self.prng, step_stats = fit(
+                self.program, self.prng, self._lits, self._labels,
+                idx.reshape(steps, batch))
+            self.dispatches += 1
+            self.steps += steps
+            # exact integer epoch totals from the per-step stats — the
+            # same arithmetic fit_loop does with per-batch Python ints
+            # (an in-carry int32 sum could wrap at paper scale)
+            agg = {k: int(np.asarray(v).sum(dtype=np.int64))
+                   for k, v in step_stats.items()}
+            rec = epoch_record(ep, agg, n, extra_metrics)
+            if score_fn is not None and x_test is not None:
+                rec["test_acc"] = score_fn(x_test, y_test)
+            history.append(rec)
+            if log_every and ep % log_every == 0:
+                print(rec)
+        return history
+
+    # ---- state hand-back ---------------------------------------------------
+    def state(self) -> Tuple[DTMProgram, PRNG]:
+        """Current (program, PRNG) — live view, safe to read any time."""
+        return self.program, self.prng
+
+    def unbind(self) -> Tuple[DTMProgram, PRNG]:
+        """Close the session: release staged data, return final state."""
+        self._lits = self._labels = None
+        return self.program, self.prng

@@ -3,8 +3,14 @@
 The five bespoke TM drivers each reimplemented the same two loops: a
 batched prediction sweep (``score``) and an epoch loop aggregating
 per-batch feedback stats (``fit``).  The unified estimator shell
-(:mod:`repro.api`), the legacy :class:`repro.core.tm.TsetlinMachine`
-shim, the examples, and the serving benchmark all use these instead.
+(:mod:`repro.api`), the examples, and the serving benchmark all use
+these instead.
+
+``fit_loop`` is the host-side reference: one engine dispatch per batch.
+The device-resident scan path (:meth:`repro.core.dtm.DTMEngine.bind` →
+``TMSession.fit_epochs``) replaces it on the hot path — ONE dispatch per
+epoch — and is bit-identical; both build their per-epoch records through
+:func:`epoch_record` so histories compare exactly.
 """
 from __future__ import annotations
 
@@ -38,6 +44,26 @@ def accuracy(predict_fn: Callable, x, y, batch: int = 256) -> float:
     return float((pred == np.asarray(y)).mean())
 
 
+def epoch_record(ep: int, agg: dict, n: int,
+                 extra_metrics: Optional[Callable] = None) -> dict:
+    """Canonical per-epoch record from summed step stats.
+
+    ``agg`` holds plain-int sums of the engine step stats (``selected``,
+    ``active_groups``, ``total_groups``, ``correct``, …) over ``n``
+    datapoints.  Shared by the host ``fit_loop`` and the device-resident
+    ``TMSession.fit_epochs`` scan so both produce identical histories.
+    """
+    tot = agg.get("total_groups", 0)
+    rec = {"epoch": ep,
+           "train_acc": agg.get("correct", 0) / max(n, 1),
+           "selected_clauses": agg.get("selected", 0),
+           "group_skip_frac": ((tot - agg.get("active_groups", 0))
+                               / max(tot, 1))}
+    if extra_metrics is not None:
+        rec.update(extra_metrics(agg, n))
+    return rec
+
+
 def fit_loop(step_fn: Callable, x, y, epochs: int = 1, batch: int = 32,
              rng: Optional[np.random.Generator] = None, log_every: int = 0,
              score_fn: Optional[Callable] = None, x_test=None, y_test=None,
@@ -63,17 +89,48 @@ def fit_loop(step_fn: Callable, x, y, epochs: int = 1, batch: int = 32,
             stats = step_fn(x[idx], y[idx])
             for k, v in dict(stats).items():
                 agg[k] = agg.get(k, 0) + int(v)
-        tot = agg.get("total_groups", 0)
-        rec = {"epoch": ep,
-               "train_acc": agg.get("correct", 0) / max(n, 1),
-               "selected_clauses": agg.get("selected", 0),
-               "group_skip_frac": ((tot - agg.get("active_groups", 0))
-                                   / max(tot, 1))}
-        if extra_metrics is not None:
-            rec.update(extra_metrics(agg, n))
+        rec = epoch_record(ep, agg, n, extra_metrics)
         if score_fn is not None and x_test is not None:
             rec["test_acc"] = score_fn(x_test, y_test)
         history.append(rec)
         if log_every and ep % log_every == 0:
             print(rec)
     return history
+
+
+def feedback_fit(cfg, x, y, epochs: int = 1, batch: int = 32,
+                 seed: int = 0, mode: str = "sequential", chunk: int = 8,
+                 rng: Optional[np.random.Generator] = None,
+                 log_every: int = 0):
+    """Train on the functional core (``feedback.train_step``) — the
+    paper-faithful reference driver, kept for the ``sequential`` mode
+    (one datapoint per step, Fig 9c) that the batched-delta DTM engine
+    deliberately does not model.  Production training goes through
+    ``repro.api.TM`` / ``TMSession``.
+
+    Returns ``(state, prng, history)``; score with
+    ``accuracy(lambda xb: clause.predict(cfg, state, to_literals(xb)), ...)``.
+    """
+    import jax
+
+    from .booleanize import to_literals
+    from .feedback import train_step
+    from .prng import PRNG
+    from .types import init_state
+
+    state = init_state(cfg, jax.random.PRNGKey(seed))
+    prng = PRNG.create(cfg, seed + 1, n_lanes=max(1024, cfg.clauses * 2))
+    box = {"state": state, "prng": prng}
+
+    def step(xb, yb):
+        lits = to_literals(jnp.asarray(xb))
+        box["state"], box["prng"], st = train_step(
+            cfg, box["state"], box["prng"], (lits, jnp.asarray(yb)),
+            mode, chunk)
+        return {"selected": st.selected_clauses,
+                "active_groups": st.active_groups,
+                "total_groups": st.total_groups, "correct": st.correct}
+
+    history = fit_loop(step, x, y, epochs=epochs, batch=batch, rng=rng,
+                       log_every=log_every)
+    return box["state"], box["prng"], history

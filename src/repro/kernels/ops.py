@@ -58,12 +58,24 @@ def resolve_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def select_path(cfg=None, batch=None, training: bool = False) -> str:
+def select_path(cfg=None, batch=None, training: bool = False,
+                lanes: int = 1) -> str:
     """Pick the kernel path for a workload shape.
 
     cfg      optional TMConfig (reserved for model-shape heuristics)
-    batch    datapoints per call (None = unknown -> throughput default)
+    batch    datapoints per call PER PROGRAM (None = unknown ->
+             throughput default)
     training True for the train-step datapath -> the fused kernel
+    lanes    stacked-program width of the launch (ProgramBank vmap).
+             The edge-regime test deliberately stays on the PER-PROGRAM
+             batch: a vmapped bank lowers to a K-batched contraction —
+             K independent [B, L] x [L, R] matmuls — so stacking does
+             not improve per-instance MXU occupancy, and a bank of edge
+             batches keeps the packed VPU path (32 literals per word,
+             no per-program include unpack).  ``lanes`` is accepted so
+             bank call sites hand the dispatcher the full launch
+             geometry (recorded per stage; future tile-aware heuristics
+             hook in here).
     """
     env = os.environ.get("REPRO_KERNEL_PATH", "").strip().lower()
     if env in _PATHS:

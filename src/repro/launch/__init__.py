@@ -1,8 +1,4 @@
-"""Launch layer: mesh construction, dry-run, training and serving drivers.
-
-NOTE: do NOT import repro.launch.dryrun from library code — it sets
-XLA_FLAGS (512 placeholder devices) at import, by design (dry-run only).
-"""
+"""Launch layer: mesh construction, perf models, and the DTM server."""
 from .mesh import (make_production_mesh, make_host_mesh, HardwareModel,
                    V5E, mesh_chips, data_axes)
 

@@ -11,6 +11,16 @@ Requests are padded to a fixed batch-slot size so every tenant hits the
 same compiled executable (jit cache stays at one entry per stage — the
 ``cache_report()`` assert at the bottom of the benchmark is the claim).
 
+Program-major stacked serving (ISSUE 4): beyond swap-per-request, the
+server can coalesce pending requests across tenants into ONE stacked
+launch — tenant programs live in a resident :class:`repro.api.ProgramBank`
+(one per stage family: flat / conv) and ``enqueue(...)`` + ``flush()``
+run all K tenants through the engine's vmapped bank executable in a
+single dispatch.  Hot-swap semantics survive: training a tenant updates
+its own program and marks the bank slot dirty; the next flush scatters
+the fresh program back into the bank (``swap_in`` — a device-side row
+write, the per-tenant RAM rewrite of the paper at bank granularity).
+
 Programs are stored and swapped in the engine's bit-packed canonical
 layout (uint8 TA states 4-per-word + the uint32 include bitplane the
 train stages maintain incrementally), so the per-tenant RAM image —
@@ -38,14 +48,14 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import api
-from repro.api import TM, TMSpec
+from repro.api import ProgramBank, TM, TMSpec
 from repro.core.dtm import DTMEngine, DTMProgram
 from repro.core.prng import PRNG
 
@@ -55,6 +65,16 @@ class _Tenant:
     spec: TMSpec
     program: DTMProgram
     prng: PRNG
+
+
+def _decode_np(spec: TMSpec, sums: np.ndarray, cl: np.ndarray,
+               t: int) -> np.ndarray:
+    """Host-side mirror of ``TMSpec.decode_output`` (numpy, zero extra
+    dispatches) — used on the already-fetched stacked launch outputs."""
+    if spec.kind == "regression":
+        votes = np.clip(cl.sum(-1), 0, t)
+        return votes.astype(np.float32) / t
+    return np.argmax(sums, axis=-1)
 
 
 class TMServer:
@@ -72,6 +92,14 @@ class TMServer:
         self.active: Optional[str] = None
         self.swaps = 0
         self.requests = 0
+        # stacked (program-major) serving state
+        self._pending: List[Tuple[str, jax.Array, int]] = []
+        self._banks: Dict[bool, Tuple[List[str], ProgramBank]] = {}
+        self._groups: Dict[bool, List[str]] = {}
+        self._decode_info: Dict[str, Tuple[bool, int]] = {}
+        self._dirty: set = set()
+        self.stacked_launches = 0
+        self.coalesced_requests = 0
 
     # ---- tenant management ------------------------------------------------
     def register(self, name: str, spec: TMSpec,
@@ -82,12 +110,22 @@ class TMServer:
             program = self.engine.lower(spec, jax.random.PRNGKey(seed))
         self.tenants[name] = _Tenant(spec, program,
                                      PRNG.create(spec.tm_config(), seed + 1))
+        self._admitted(name, spec)
 
     def adopt(self, name: str, tm: TM):
         """Admit a trained ``repro.api.TM`` estimator (must share tile
         geometry with the resident engine)."""
         assert tm.engine.tile == self.engine.tile, "tile geometry mismatch"
         self.tenants[name] = _Tenant(tm.spec, tm.program, tm.prng)
+        self._admitted(name, tm.spec)
+
+    def _admitted(self, name: str, spec: TMSpec) -> None:
+        # group membership changed — the resident bank must be rebuilt;
+        # decode constants are cached off the request hot path
+        self._banks.pop(spec.kind == "conv", None)
+        self._groups.pop(spec.kind == "conv", None)
+        self._decode_info[name] = (spec.kind == "regression",
+                                   int(spec.tm_config().T))
 
     def _swap_to(self, name: str) -> _Tenant:
         tenant = self.tenants[name]
@@ -104,15 +142,41 @@ class TMServer:
                 [x, np.repeat(x[-1:], self.batch_slot - n, axis=0)])
         return x, n
 
+    def _encode_request(self, tenant: _Tenant, x,
+                        encoded: bool) -> Tuple[jax.Array, int]:
+        """Pad a request to the batch slot and encode it (unless the
+        front-end already shipped packed engine literals)."""
+        if encoded:
+            # hot path: a full-slot device array passes straight through
+            # (no eager jnp ops — they dominate small-request latency)
+            if isinstance(x, jax.Array) and x.shape[0] == self.batch_slot:
+                return x, self.batch_slot
+            lits = jnp.asarray(x)
+            n = lits.shape[0]
+            assert n <= self.batch_slot, (n, self.batch_slot)
+            if n < self.batch_slot:
+                pad = jnp.repeat(lits[-1:], self.batch_slot - n, axis=0)
+                lits = jnp.concatenate([lits, pad], axis=0)
+            return lits, n
+        xp, n = self._pad(np.asarray(x))
+        return self.engine.encode(tenant.spec, jnp.asarray(xp)), n
+
     # ---- request paths ----------------------------------------------------
-    def predict(self, name: str, x) -> np.ndarray:
-        """Hot-swap to tenant ``name`` and serve an inference request."""
+    def predict(self, name: str, x, encoded: bool = False) -> np.ndarray:
+        """Hot-swap to tenant ``name`` and serve an inference request.
+
+        ``encoded=True`` accepts packed engine literals (``[n, W]``
+        uint32 from ``engine.encode``) straight from a front-end that
+        booleanises client-side — the pure launch path the stacked-mode
+        benchmark compares against."""
         tenant = self._swap_to(name)
         self.requests += 1
-        xp, n = self._pad(np.asarray(x))
-        lits = self.engine.encode(tenant.spec, jnp.asarray(xp))
+        lits, n = self._encode_request(tenant, x, encoded)
         sums, cl = self.engine.infer_fn(tenant.spec)(tenant.program, lits)
-        return np.asarray(tenant.spec.decode_output(sums, cl))[:n]
+        if tenant.spec.kind == "regression":
+            t = int(tenant.spec.tm_config().T)
+            return _decode_np(tenant.spec, None, np.asarray(cl), t)[:n]
+        return _decode_np(tenant.spec, np.asarray(sums), None, 0)[:n]
 
     def train(self, name: str, x, y) -> dict:
         """Hot-swap and apply one on-line training step (on-chip training:
@@ -133,7 +197,108 @@ class TMServer:
         step = self.engine.train_fn(tenant.spec)
         tenant.program, tenant.prng, stats = step(tenant.program,
                                                   tenant.prng, lits, lab)
+        # the tenant's bank slot is stale until the next flush swaps the
+        # fresh program back in (hot-swap at bank granularity)
+        self._dirty.add(name)
         return stats
+
+    # ---- stacked (program-major) serving ----------------------------------
+    def _group_names(self, conv: bool) -> List[str]:
+        return sorted(n for n, t in self.tenants.items()
+                      if (t.spec.kind == "conv") == conv)
+
+    def _bank_for(self, conv: bool) -> Tuple[List[str], ProgramBank]:
+        """Resident ProgramBank over ALL tenants of a stage family (flat
+        vs conv), built once per roster; per-tenant updates are scattered
+        in via ``swap_in`` rather than restacking."""
+        if conv not in self._banks:
+            names = self._group_names(conv)
+            bank = api.stack([self.tenants[n].program for n in names],
+                             self.engine, conv=conv)
+            self._banks[conv] = (names, bank)
+            self._dirty -= set(names)
+        names, bank = self._banks[conv]
+        if self._dirty:
+            for n in list(self._dirty):
+                if n in names:
+                    bank.swap_in(names.index(n), self.tenants[n].program)
+                    self._dirty.discard(n)
+        return names, bank
+
+    def enqueue(self, name: str, x, encoded: bool = False) -> None:
+        """Queue an inference request for the next stacked flush."""
+        tenant = self.tenants[name]
+        lits, n = self._encode_request(tenant, x, encoded)
+        self._pending.append((name, lits, n))
+
+    def flush(self) -> Dict[str, np.ndarray]:
+        """Serve every pending request in ONE stacked launch per stage
+        family: the full tenant bank executes (vmapped over the program
+        axis); tenants without a pending request run their last/zero
+        slot and their outputs are dropped.  Returns {tenant: prediction}
+        (last request wins if a tenant queued twice)."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return {}
+        out: Dict[str, np.ndarray] = {}
+        by_name: Dict[str, Tuple[jax.Array, int]] = {}
+        for name, lits, n in pending:
+            by_name[name] = (lits, n)
+            self.requests += 1
+        for conv in (False, True):
+            group = self._groups.get(conv)
+            if group is None:
+                group = self._groups[conv] = self._group_names(conv)
+            req_names = [n for n in group if n in by_name]
+            if not req_names:
+                continue
+            names, bank = self._bank_for(conv)
+            # idle slots replay a pending tenant's literals — their
+            # outputs are dropped, so the filler's values are irrelevant
+            # and no eager zeros/stack ops run (stacking happens in-trace
+            # via the tuple-taking bank executables)
+            filler = by_name[req_names[0]][0]
+            lits = tuple(by_name[n][0] if n in by_name else filler
+                         for n in names)
+            self.stacked_launches += 1
+            self.coalesced_requests += len(req_names)
+            if not conv:
+                # flat banks decode IN-TRACE: fetch two tiny [K, B]
+                # planes, no host argmax, no clause-matrix round trip
+                preds, votes = bank.predict(lits)
+                preds_np = np.asarray(preds)
+                votes_np = (np.asarray(votes) if any(
+                    self._decode_info[n][0] for n in req_names) else None)
+                for k, name in enumerate(names):
+                    if name not in by_name:
+                        continue
+                    is_reg, t = self._decode_info[name]
+                    n_real = by_name[name][1]
+                    if is_reg:
+                        out[name] = (votes_np[k][:n_real]
+                                     .astype(np.float32) / t)
+                    else:
+                        out[name] = preds_np[k][:n_real]
+                continue
+            sums, cl = bank.infer(lits)
+            sums_np = np.asarray(sums)
+            preds = np.argmax(sums_np, axis=-1)
+            for k, name in enumerate(names):
+                if name not in by_name:
+                    continue
+                n_real = by_name[name][1]
+                out[name] = preds[k][:n_real]
+        return out
+
+    def unstack(self, conv: bool = False) -> Dict[str, DTMProgram]:
+        """Swap every bank slot back out to its tenant (and return the
+        per-tenant programs) — proves the stacked round trip is lossless."""
+        names, bank = self._bank_for(conv)
+        progs = {}
+        for k, name in enumerate(names):
+            progs[name] = bank.swap_out(k)
+            self.tenants[name].program = progs[name]
+        return progs
 
     def program_nbytes(self, name: str) -> int:
         """Hot-swap payload of one tenant: total bytes of its DTMProgram
@@ -146,6 +311,8 @@ class TMServer:
     def stats(self) -> dict:
         return {"tenants": sorted(self.tenants), "requests": self.requests,
                 "swaps": self.swaps, "cache": self.engine.cache_report(),
+                "stacked_launches": self.stacked_launches,
+                "coalesced_requests": self.coalesced_requests,
                 "program_nbytes": {n: self.program_nbytes(n)
                                    for n in sorted(self.tenants)}}
 

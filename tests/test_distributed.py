@@ -56,31 +56,6 @@ def test_tm_dp_equals_local_batched():
 
 
 @pytest.mark.slow
-def test_lm_fsdp_tp_train_step_runs():
-    """4-device (2 data × 2 model) FSDP×TP train step on a smoke arch."""
-    run_py("""
-        import jax, jax.numpy as jnp, numpy as np
-        from repro.configs import get_smoke
-        from repro.models import Model
-        from repro import optim
-        from repro.launch.train import build_train_step, synth_lm_batch
-        cfg = get_smoke("qwen1.5-0.5b")
-        model = Model(cfg)
-        mesh = jax.make_mesh((2, 2), ("data", "model"))
-        opt = optim.AdamWConfig(lr=1e-3, total_steps=4, warmup_steps=1)
-        step, init, _, _ = build_train_step(model, opt, mesh)
-        params, opt_state = init(jax.random.PRNGKey(0))
-        losses = []
-        for s in range(4):
-            b = synth_lm_batch(model, 8, 64, seed=s)
-            params, opt_state, m = step(params, opt_state, b)
-            losses.append(float(m["loss"]))
-        assert all(np.isfinite(losses)), losses
-        print("LOSSES", losses)
-    """, devices=4)
-
-
-@pytest.mark.slow
 def test_compressed_psum_shardmap():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np

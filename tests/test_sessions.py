@@ -1,0 +1,257 @@
+"""Session-centric execution API (ISSUE 4 acceptance).
+
+* ``engine.bind`` → ``TMSession.fit_epochs``: the whole-epoch scan is
+  BIT-identical to the host ``fit_loop`` driving ``partial_fit`` batch by
+  batch — same programs, same PRNG stream, same per-epoch history — on
+  all five TMSpec kinds and both backends, while making ≤ 1
+  host↔device transition per epoch (the ``dispatches`` probe);
+* ``api.stack`` → ``ProgramBank``: stack → train → unstack round-trips
+  bit-exactly against K independent single-program runs, one launch for
+  K programs, per-slot hot swap;
+* serving: stacked ``enqueue``+``flush`` returns the same predictions as
+  sequential swap-per-request ``predict``;
+* checkpointing a mid-training session and resuming reproduces the
+  uninterrupted run;
+* ``api._position_code`` is cached and shared — it must be immutable.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import TM, TMSpec
+from repro.core import PRNG
+from repro.core.evaluate import fit_loop
+
+_rng = np.random.default_rng(42)
+_CALIB = _rng.standard_normal((64, 8)).astype(np.float32)
+
+SPECS = {
+    "cotm": TMSpec.coalesced(features=20, classes=3, clauses=24, T=8, s=3.0),
+    "vanilla": TMSpec.vanilla(features=16, classes=4, clauses=8, T=8, s=3.0),
+    "conv": TMSpec.conv(img_h=6, img_w=6, patch=3, classes=2, clauses=16,
+                        T=8, s=3.0),
+    "regression": TMSpec.regression(features=12, clauses=16, T=16, s=3.0),
+    "head": TMSpec.head(_CALIB, classes=3, therm_bits=2, clauses=16, T=8,
+                        s=3.0),
+}
+
+N, BATCH, EPOCHS = 48, 16, 2
+
+
+def _data(spec: TMSpec, n: int = N, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    if spec.kind == "conv":
+        x = (rng.random((n, spec.img_h, spec.img_w)) < 0.3).astype(np.int8)
+    elif spec.kind == "head":
+        x = rng.standard_normal((n, spec.thresholds.shape[0])
+                                ).astype(np.float32)
+    else:
+        x = (rng.random((n, spec.features)) < 0.5).astype(np.int8)
+    if spec.kind == "regression":
+        y = rng.random(n).astype(np.float32)
+    else:
+        y = rng.integers(0, spec.classes, n).astype(np.int32)
+    return x, y
+
+
+def _trees_equal(a, b) -> bool:
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# scan-fit vs host fit_loop bit-identity + the dispatch probe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "kernel"])
+@pytest.mark.parametrize("kind", sorted(SPECS))
+def test_scan_fit_bit_identical_to_host_loop(kind, backend):
+    spec = SPECS[kind]
+    x, y = _data(spec)
+
+    # host reference: one engine dispatch per batch through partial_fit
+    tm_host = TM(spec, seed=0, backend=backend)
+    hist_host = fit_loop(tm_host.partial_fit, x, y, epochs=EPOCHS,
+                         batch=BATCH, rng=np.random.default_rng(7),
+                         extra_metrics=tm_host._extra_metrics())
+
+    # session: whole-epoch scan on a SHARED engine (same executables)
+    tm_scan = TM(spec, seed=0, engine=tm_host.engine)
+    session = tm_scan.engine.bind(tm_scan.program, x, y, spec=spec,
+                                  prng=tm_scan.prng)
+    hist_scan = session.fit_epochs(EPOCHS, batch=BATCH,
+                                   rng=np.random.default_rng(7),
+                                   extra_metrics=tm_scan._extra_metrics())
+    prog_scan, prng_scan = session.unbind()
+
+    assert hist_host == hist_scan
+    assert _trees_equal(tm_host.program, prog_scan)
+    assert _trees_equal(tm_host.prng, prng_scan)
+    # <= 1 host<->device transition per epoch: the probe counts exactly
+    # one engine-executable launch per fit_epochs epoch
+    assert session.dispatches == EPOCHS
+    report = tm_host.engine.cache_report()
+    assert all(v <= 1 for v in report.values() if isinstance(v, int)), report
+
+
+def test_tm_fit_goes_through_session():
+    """The estimator's fit() IS the session path (same result, one
+    launch per epoch), and partial_fit still advances the same stream."""
+    spec = SPECS["cotm"]
+    x, y = _data(spec)
+    tm = TM(spec, seed=0)
+    tm.fit(x, y, epochs=EPOCHS, batch=BATCH, rng=np.random.default_rng(7))
+
+    tm2 = TM(spec, seed=0, engine=tm.engine)
+    session = tm2.engine.bind(tm2.program, x, y, spec=spec, prng=tm2.prng)
+    session.fit_epochs(EPOCHS, batch=BATCH, rng=np.random.default_rng(7))
+    assert _trees_equal(tm.program, session.program)
+    assert tm.steps == session.steps
+
+
+# ---------------------------------------------------------------------------
+# ProgramBank: stack -> train -> unstack == K independent runs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "kernel"])
+def test_bank_round_trip_matches_independent_runs(backend):
+    spec = SPECS["cotm"]
+    K, B = 3, 8
+    eng = api.compile(api.tile_for(spec), backend=backend)
+    progs = [eng.lower(spec, jax.random.PRNGKey(i)) for i in range(K)]
+    prngs = [PRNG.create(spec.tm_config(), i + 1) for i in range(K)]
+    rng = np.random.default_rng(0)
+    xs = (rng.random((K, B, spec.features)) < 0.5).astype(np.int8)
+    ys = rng.integers(0, spec.classes, (K, B)).astype(np.int32)
+    lits = [eng.encode(spec, jnp.asarray(xb)) for xb in xs]
+
+    bank = api.stack(progs, eng, prngs=prngs)
+    stats_bank = bank.train(jnp.stack(lits), jnp.asarray(ys))
+    outs = bank.unstack()
+
+    for k in range(K):
+        prog_k, prng_k, stats_k = eng.train_step(
+            progs[k], prngs[k], lits[k], jnp.asarray(ys[k]))
+        assert _trees_equal(prog_k, outs[k]), f"program {k} diverged"
+        assert _trees_equal(prng_k, jax.tree.map(lambda s: s[k],
+                                                 bank.prngs))
+        for key in stats_k:
+            assert int(stats_bank[key][k]) == int(stats_k[key])
+    # bank inference on the POST-train programs equals per-program infer
+    sums_bank2, _ = bank.infer(jnp.stack(lits))
+    for k in range(K):
+        sums_k, _ = eng.infer(outs[k], lits[k])
+        assert bool(jnp.array_equal(sums_k, sums_bank2[k]))
+
+    report = eng.cache_report()
+    assert report["train_bank"] == 1 and report["infer_bank"] == 1, report
+    assert all(v <= 1 for v in report.values() if isinstance(v, int)), report
+
+
+def test_bank_swap_in_out_hot_swap():
+    spec = SPECS["cotm"]
+    eng = api.compile(api.tile_for(spec))
+    progs = [eng.lower(spec, jax.random.PRNGKey(i)) for i in range(3)]
+    bank = api.stack(progs, eng)
+    fresh = eng.lower(spec, jax.random.PRNGKey(99))
+    bank.swap_in(1, fresh)
+    assert _trees_equal(bank.swap_out(1), fresh)
+    assert _trees_equal(bank.swap_out(0), progs[0])
+    assert _trees_equal(bank.swap_out(2), progs[2])
+
+
+def test_stack_rejects_mismatched_programs():
+    spec_a = SPECS["cotm"]
+    spec_b = dataclasses.replace(SPECS["cotm"], ta_bits=10)  # int32 TA
+    eng = api.compile(api.tile_for(spec_a, spec_b))
+    pa = eng.lower(spec_a, jax.random.PRNGKey(0))
+    pb = eng.lower(spec_b, jax.random.PRNGKey(1))
+    with pytest.raises(AssertionError):
+        api.stack([pa, pb], eng)
+
+
+# ---------------------------------------------------------------------------
+# stacked serving == sequential serving
+# ---------------------------------------------------------------------------
+
+def test_server_flush_matches_sequential_predict():
+    from repro.launch.serve_tm import TMServer, demo_batch, demo_specs
+    specs = demo_specs(small=True)
+    engine = api.compile(api.tile_for(*specs.values()))
+    server = TMServer(engine, batch_slot=8)
+    for name, spec in specs.items():
+        server.register(name, spec)
+    batches = {n: demo_batch(s, 8) for n, s in specs.items()}
+
+    seq = {n: server.predict(n, batches[n]) for n in specs}
+    for n in specs:
+        server.enqueue(n, batches[n])
+    stacked = server.flush()
+    assert sorted(stacked) == sorted(specs)
+    for n in specs:
+        np.testing.assert_array_equal(seq[n], stacked[n])
+
+    # training a tenant dirties its slot; the next flush serves the
+    # UPDATED program (hot-swap preserved at bank granularity)
+    name = "cotm"
+    y = np.zeros(8, np.int32)
+    server.train(name, batches[name], y)
+    seq2 = server.predict(name, batches[name])
+    server.enqueue(name, batches[name])
+    out2 = server.flush()
+    np.testing.assert_array_equal(seq2, out2[name])
+    # and the bank slot round-trips back out bit-exactly
+    progs = server.unstack(conv=False)
+    assert _trees_equal(progs[name], server.tenants[name].program)
+
+    report = engine.cache_report()
+    assert all(v <= 1 for v in report.values() if isinstance(v, int)), report
+
+
+# ---------------------------------------------------------------------------
+# checkpoint save/load of a mid-training session
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_mid_training_session_resumes_exactly(tmp_path):
+    spec = SPECS["cotm"]
+    x, y = _data(spec)
+
+    # uninterrupted: two epochs in two fit calls (distinct shuffle rngs)
+    tm_a = TM(spec, seed=0)
+    tm_a.fit(x, y, epochs=1, batch=BATCH, rng=np.random.default_rng(5))
+    tm_a.fit(x, y, epochs=1, batch=BATCH, rng=np.random.default_rng(6))
+
+    # interrupted: save mid-training, reload, resume
+    tm_b = TM(spec, seed=0)
+    tm_b.fit(x, y, epochs=1, batch=BATCH, rng=np.random.default_rng(5))
+    tm_b.save(str(tmp_path / "ck"))
+    tm_c = TM.load(str(tmp_path / "ck"))
+    assert tm_c.steps == tm_b.steps
+    tm_c.fit(x, y, epochs=1, batch=BATCH, rng=np.random.default_rng(6))
+
+    assert _trees_equal(tm_a.program, tm_c.program)
+    assert _trees_equal(tm_a.prng, tm_c.prng)
+    assert tm_a.steps == tm_c.steps
+
+
+# ---------------------------------------------------------------------------
+# _position_code cache safety
+# ---------------------------------------------------------------------------
+
+def test_position_code_cache_is_immutable():
+    pc = api._position_code(6, 6, 3)
+    assert pc.flags.writeable is False
+    with pytest.raises(ValueError):
+        pc[0, 0] = 1
+    # same geometry -> same cached object, still pristine
+    pc2 = api._position_code(6, 6, 3)
+    assert pc2 is pc
+    # and the conv encode path consumes it without copying trouble
+    spec = SPECS["conv"]
+    x, _ = _data(spec, n=4)
+    feats = np.asarray(spec.to_bool(jnp.asarray(x)))
+    assert feats.shape == (4, spec.n_patches, spec.bool_features)

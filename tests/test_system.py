@@ -10,7 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (COALESCED, TMConfig, TsetlinMachine, VANILLA)
+from repro.api import TM, TMSpec
+from repro.core import (COALESCED, TMConfig, VANILLA, accuracy,
+                        feedback_fit, to_literals)
+from repro.core.clause import predict as core_predict
 from repro.data import make_bool_dataset, BoolTaskSpec
 
 # Multi-epoch training on synthetic data — nightly tier (ci.yml); the fast
@@ -28,26 +31,39 @@ def _data(n=768):
 
 
 @pytest.mark.parametrize("tm_type", [COALESCED, VANILLA])
-@pytest.mark.parametrize("mode", ["batched", "sequential"])
-def test_tm_learns(tm_type, mode):
+def test_tm_learns_engine(tm_type):
+    """Batched (scale) mode: the unified estimator on the DTM engine."""
+    xtr, ytr, xte, yte = _data()
+    ctor = TMSpec.coalesced if tm_type == COALESCED else TMSpec.vanilla
+    spec = ctor(features=SPEC.features, classes=SPEC.classes, clauses=32,
+                T=16, s=4.0, prng_backend="threefry")
+    tm = TM(spec, seed=0)
+    tm.fit(xtr, ytr, epochs=3, batch=32)
+    acc = tm.score(xte, yte)
+    assert acc > 0.85, (tm_type, acc)
+
+
+@pytest.mark.parametrize("tm_type", [COALESCED, VANILLA])
+def test_tm_learns_sequential(tm_type):
+    """Paper-faithful sequential mode (Fig 9c) on the functional core —
+    the reference path the batched-delta engine does not model."""
     xtr, ytr, xte, yte = _data()
     cfg = TMConfig(tm_type=tm_type, features=SPEC.features, clauses=32,
                    classes=SPEC.classes, T=16, s=4.0,
                    prng_backend="threefry")
-    tm = TsetlinMachine(cfg, seed=0, mode=mode, chunk=8)
-    # 3 epochs: the batched-CoTM variant sits right at the 0.85 bar after 2
-    # (0.83 measured); one more epoch clears it with margin on every variant.
-    tm.fit(xtr, ytr, epochs=3, batch=32)
-    acc = tm.score(xte, yte)
-    assert acc > 0.85, (tm_type, mode, acc)
+    state, _, _ = feedback_fit(cfg, xtr, ytr, epochs=3, batch=32, seed=0,
+                               mode="sequential")
+    acc = accuracy(lambda xb: core_predict(cfg, state, to_literals(xb)),
+                   xte, yte)
+    assert acc > 0.85, (tm_type, acc)
 
 
 def test_lfsr_backend_learns():
     xtr, ytr, xte, yte = _data()
-    cfg = TMConfig(tm_type=COALESCED, features=SPEC.features, clauses=32,
-                   classes=SPEC.classes, T=16, s=4.0, prng_backend="lfsr",
-                   lfsr_bits=16, seed_refresh=True)
-    tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+    spec = TMSpec.coalesced(features=SPEC.features, classes=SPEC.classes,
+                            clauses=32, T=16, s=4.0, prng_backend="lfsr",
+                            lfsr_bits=16, seed_refresh=True)
+    tm = TM(spec, seed=0)
     tm.fit(xtr, ytr, epochs=2, batch=32)
     assert tm.score(xte, yte) > 0.8
 
@@ -59,8 +75,8 @@ def test_clause_skip_grows_with_convergence():
     cfg = TMConfig(tm_type=COALESCED, features=SPEC.features, clauses=64,
                    classes=SPEC.classes, T=16, s=4.0,
                    prng_backend="threefry")
-    tm = TsetlinMachine(cfg, seed=0, mode="sequential")
-    hist = tm.fit(xtr, ytr, epochs=6, batch=64)
+    _, _, hist = feedback_fit(cfg, xtr, ytr, epochs=6, batch=64, seed=0,
+                              mode="sequential")
     first, last = hist[0], hist[-1]
     assert last["selected_clauses"] < first["selected_clauses"]
     assert last["group_skip_frac"] >= first["group_skip_frac"]
@@ -71,10 +87,11 @@ def test_weight_bits_matter():
     xtr, ytr, xte, yte = _data()
 
     def run(bits):
-        cfg = TMConfig(tm_type=COALESCED, features=SPEC.features, clauses=32,
-                       classes=SPEC.classes, T=64, s=4.0, weight_bits=bits,
-                       prng_backend="threefry")
-        tm = TsetlinMachine(cfg, seed=0, mode="batched", chunk=8)
+        spec = TMSpec.coalesced(features=SPEC.features,
+                                classes=SPEC.classes, clauses=32, T=64,
+                                s=4.0, weight_bits=bits,
+                                prng_backend="threefry")
+        tm = TM(spec, seed=0)
         tm.fit(xtr, ytr, epochs=3, batch=32)
         return tm.score(xte, yte)
 

@@ -87,8 +87,11 @@ def test_program_swap_keeps_cache_at_one(backend):
     out, rerun, report = _roster_results(backend)
     report = dict(report)            # don't mutate the lru_cached dict
     paths = report.pop("path_per_stage")
-    assert report == {"infer": 1, "train": 1, "infer_conv": 1,
-                      "train_conv": 1}, report
+    # the four per-program stages compiled exactly once; the session /
+    # bank executables this roster never exercises stay at zero
+    assert {k: v for k, v in report.items() if v} == {
+        "infer": 1, "train": 1, "infer_conv": 1, "train_conv": 1}, report
+    assert all(v <= 1 for v in report.values()), report
     # dispatch == execution: every traced stage recorded the path the
     # dispatcher selects for its batch size (BATCH=8 -> throughput paths
     # by default; an env force like REPRO_KERNEL_PATH=packed_vpu must be
