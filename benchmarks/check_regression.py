@@ -21,6 +21,9 @@ Guarded metrics:
 * packed entries   — ``us_per_call``   (lower is better)
 * session fit      — ``scan_steps_per_s``   (higher is better)
 * session serve    — ``stacked_req_per_s``  (higher is better)
+* skip entries     — compact-vs-dense ``speedup`` at skip ≥ 0.5 (higher
+  is better; a machine-portable ratio, so a silent fall-back to the dense
+  TA update fails the guard even across runner classes)
 
 Metrics present only on one side are reported but never fail the guard
 (new benchmarks land before their baseline is committed).
@@ -39,7 +42,8 @@ from typing import Dict, Tuple
 # metric registry: (value, higher_is_better) per guarded key
 Metrics = Dict[str, Tuple[float, bool]]
 
-FILES = ("BENCH_fused.json", "BENCH_packed.json", "BENCH_session.json")
+FILES = ("BENCH_fused.json", "BENCH_packed.json", "BENCH_session.json",
+         "BENCH_skip.json")
 
 
 def _extract(fname: str, report: dict) -> Metrics:
@@ -63,6 +67,16 @@ def _extract(fname: str, report: dict) -> Metrics:
         for e in report.get("serve", []):
             out[f"session/serve_k{e['k']}"] = (e["stacked_req_per_s"],
                                                True)
+    elif fname == "BENCH_skip.json":
+        # guard the compact-vs-dense RATIO, not absolute wall clock — the
+        # speedup is machine-portable, and a collapse back to ~1x at high
+        # skip is exactly the silent-fallback failure mode this catches.
+        # The 0-skip entry is deliberately unguarded: there the two paths
+        # measure the same dense work and the ratio is pure runner noise.
+        for e in report.get("ta_update", []):
+            if e["skip_frac"] >= 0.5:
+                out[f"skip/ta_speedup_f{e['skip_frac']}"] = (e["speedup"],
+                                                             True)
     return out
 
 

@@ -28,13 +28,13 @@ def main() -> None:
 
     from . import (fig3_opcounts, fig7_clause_skip, fig11_kernels,
                    fig14_weight_bits, fig15_lfsr, fused_step_bench,
-                   packed_bench, session_bench,
+                   packed_bench, session_bench, skip_bench,
                    table1_accuracy, table2_kws6, table2_supp, convtm_bench)
     print("name,us_per_call,derived")
     for mod in (table1_accuracy, table2_kws6, table2_supp, fig3_opcounts,
                 fig7_clause_skip, fig11_kernels, fig14_weight_bits,
                 fig15_lfsr, convtm_bench, fused_step_bench,
-                packed_bench, session_bench):
+                packed_bench, session_bench, skip_bench):
         try:
             mod.run()
         except Exception:

@@ -1,0 +1,212 @@
+"""Clause-skip execution: measured wall-clock savings (ISSUE 5, paper
+Alg 6 / Fig 7 — the DTM's headline training optimisation, ≈40 % reported).
+
+Two claims, two sections in ``BENCH_skip.json``:
+
+* ``ta_update`` — the TA-update stage head-to-head: dense
+  ``ta_update_op`` vs the compacted ``ta_update_compact_op`` on identical
+  inputs (bit-identical outputs — tests/test_clause_skip.py) at skip
+  fractions {0, 0.5, 0.9}.  The acceptance bar is ≥ 1.5× steps/s at 0.9
+  skip.  The 0-skip entry is the pathological corner (EVERY row active →
+  the in-trace dense fallback): on CPU it pays ~1.3-1.6× because XLA CPU
+  runs conditional branch bodies without intra-op parallelism — a cost
+  real training never sees (epoch-0 activity is already ≲ 25 % of rows,
+  riding a compact bucket; see the convergence section) and TPU branches
+  (pallas_call bodies) don't share.
+
+* ``convergence`` — a REAL training run: per-epoch wall time alongside the
+  per-epoch ``group_skip_frac``.  As the model converges and feedback
+  concentrates, epoch time falls — skip statistics turned into wall clock,
+  measured end-to-end through the session scan path.
+
+Writes ``BENCH_skip.json`` (nightly CI artifact, perf-guarded against the
+committed baseline by ``benchmarks.check_regression``).  Standalone:
+``PYTHONPATH=src python -m benchmarks.skip_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import TM, TMSpec
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+from .common import FAST, row
+
+OUT_PATH = os.environ.get("BENCH_SKIP_PATH", "BENCH_skip.json")
+
+SKIP_FRACS = (0.0, 0.5, 0.9)
+# ref-path compaction granularity the engine uses (row-level: selected
+# clauses are SCATTERED across the pool, so row compaction skips every
+# unselected row; the Pallas path gathers whole yt tiles instead)
+GROUP = 1
+
+
+def _stage_inputs(R: int, L: int, B: int, skip_frac: float, seed: int = 0,
+                  group: int = GROUP):
+    """Synthetic TA-update inputs with ``skip_frac`` of the clause rows
+    receiving zero feedback, SCATTERED across the pool (the converged-
+    model activity pattern: few selected clauses, anywhere)."""
+    rng = np.random.default_rng(seed)
+    n_groups = -(-R // group)
+    active_groups = max(0 if skip_frac >= 1 else 1,
+                        round(n_groups * (1.0 - skip_frac)))
+    grp = np.zeros(n_groups, bool)
+    grp[rng.permutation(n_groups)[:active_groups]] = True
+    act_rows = np.repeat(grp, group)[:R]
+    ta = jnp.asarray(rng.integers(0, 256, (R, L)), jnp.int32)
+    lit = jnp.asarray(rng.integers(0, 2, (B, L)), jnp.int8)
+    cl = jnp.asarray(rng.integers(0, 2, (B, R)), jnp.int8)
+    t1 = jnp.asarray(rng.integers(0, 2, (B, R)) * act_rows[None, :],
+                     jnp.int8)
+    t2 = jnp.asarray(rng.integers(0, 2, (B, R)) * act_rows[None, :],
+                     jnp.int8)
+    lm = jnp.ones((L,), jnp.int32)
+    inc = ref.pack_include(ta, 256)
+    return ta, lit, cl, t1, t2, lm, inc
+
+
+def measure_ta_stage(R: int, L: int, B: int, skip_frac: float,
+                     backend: str, iters: int = 5,
+                     group: int = GROUP) -> dict:
+    """Time one dense-vs-compacted TA-update head-to-head (shared with
+    fig7_clause_skip, which reports the measured saving next to its
+    op-count model).
+
+    The two paths are timed INTERLEAVED (dense, compact, dense, ...) so
+    runner contention lands on both alike — the guarded metric is their
+    ratio, and back-to-back blocks let one slow scheduling window skew it
+    by 2-3× on a noisy CI box."""
+    ta, lit, cl, t1, t2, lm, inc = _stage_inputs(R, L, B, skip_frac,
+                                                 group=group)
+    seed, p_ta = jnp.uint32(99), jnp.uint32(16384)
+
+    def dense():
+        return kops.ta_update_op(ta, lit, cl, t1, t2, lm, seed, p_ta,
+                                 backend=backend, emit_include=True)
+
+    def compact():
+        return kops.ta_update_compact_op(ta, lit, cl, t1, t2, lm, inc,
+                                         seed, p_ta, backend=backend,
+                                         group=group)
+
+    jax.block_until_ready(dense())
+    jax.block_until_ready(compact())
+    dense_t, compact_t = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(dense())
+        dense_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(compact())
+        compact_t.append(time.perf_counter() - t0)
+    dense_us = float(np.median(dense_t) * 1e6)
+    compact_us = float(np.median(compact_t) * 1e6)
+    return {
+        "skip_frac": skip_frac, "R": R, "L": L, "B": B,
+        "dense_us": dense_us, "compact_us": compact_us,
+        "dense_steps_per_s": 1e6 / max(dense_us, 1e-9),
+        "compact_steps_per_s": 1e6 / max(compact_us, 1e-9),
+        "speedup": dense_us / max(compact_us, 1e-9),
+    }
+
+
+def _convergence_entry(epochs: int, n: int, features: int,
+                       clauses: int) -> dict:
+    """Per-epoch wall time + skip fraction on a learnable dataset: the
+    epoch-time TRAJECTORY is the claim (later epochs skip more clause
+    rows and finish faster), measured through the one-launch-per-epoch
+    scan path.  Edge-regime batch (8) so feedback concentration — not
+    batch-union dilution — drives the activity, like the paper's
+    sequential training."""
+    rng = np.random.default_rng(3)
+    classes, batch = 4, 8
+    spec = TMSpec.coalesced(features=features, classes=classes,
+                            clauses=clauses, T=24, s=6.0)
+    # linearly separable-ish patterns + noise so feedback actually decays
+    protos = (rng.random((classes, features)) < 0.5)
+    y = rng.integers(0, classes, n).astype(np.int32)
+    x = protos[y] ^ (rng.random((n, features)) < 0.03)
+    tm = TM(spec, seed=0)
+    session = tm.engine.bind(tm.program, x.astype(np.int8), y, spec=spec,
+                             prng=tm.prng)
+    session.fit_epochs(1, batch=batch, rng=np.random.default_rng(0))  # warm
+    epoch_s, skip_fracs, accs = [], [], []
+    shuffle = np.random.default_rng(1)
+    for _ in range(epochs):
+        t0 = time.perf_counter()
+        rec = session.fit_epochs(1, batch=batch, rng=shuffle)[0]
+        epoch_s.append(time.perf_counter() - t0)
+        skip_fracs.append(rec["group_skip_frac"])
+        accs.append(rec["train_acc"])
+    tm.program, tm.prng = session.unbind()
+    return {
+        "epochs": epochs, "n": n, "batch": batch,
+        "features": features, "clauses": clauses,
+        "epoch_s": epoch_s,
+        "group_skip_frac": skip_fracs,
+        "train_acc": accs,
+        "first_to_last_epoch_ratio": epoch_s[0] / max(epoch_s[-1], 1e-9),
+    }
+
+
+def run(out: str = OUT_PATH) -> dict:
+    smoke = FAST
+    # the compacted datapath rides the engine backend resolution: the jnp
+    # ref fast path on CPU, the Pallas sparse-gather kernel on TPU
+    backend = "ref" if kops.resolve_interpret() else "pallas"
+    R, L, B = (1024, 512, 8) if smoke else (2048, 1024, 16)
+    iters = 7 if smoke else 11
+    conv_epochs, conv_n, conv_f, conv_c = ((6, 128, 128, 256) if smoke
+                                           else (10, 256, 256, 512))
+
+    entries = []
+    for frac in SKIP_FRACS:
+        e = measure_ta_stage(R, L, B, frac, backend, iters=iters)
+        entries.append(e)
+        row(f"skip_ta_f{frac}", e["compact_us"],
+            f"speedup={e['speedup']:.2f}x;dense_us={e['dense_us']:.1f}")
+
+    conv = _convergence_entry(conv_epochs, conv_n, conv_f, conv_c)
+    row("skip_convergence", conv["epoch_s"][-1] * 1e6,
+        f"skip_frac_last={conv['group_skip_frac'][-1]:.3f};"
+        f"epoch0_over_epochN={conv['first_to_last_epoch_ratio']:.2f}x")
+
+    report = {
+        "smoke": smoke,
+        "backend": backend,
+        "skip_enabled": kops.resolve_skip(),
+        "skip_fractions": list(SKIP_FRACS),
+        "capacity_fractions": list(kops.SKIP_FRACTIONS),
+        "ta_update": entries,
+        "convergence": conv,
+        # the acceptance headline: compacted vs dense steps/s at 0.9 skip
+        "compact_speedup_at_0.9": entries[-1]["speedup"],
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["FAST"] = "1"
+        global FAST
+        FAST = True
+    run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -305,6 +305,10 @@ class TM:
         self.prng = PRNG.create(self.cfg, seed + 1)
         self.steps = 0
         self._stream = None      # lazy streaming TMSession (partial_fit)
+        # lifetime Alg-6 skip accounting (device-lazy accumulators — no
+        # extra host sync on the training hot path; see ``skip_frac``)
+        self._skip_active = 0
+        self._skip_total = 0
 
     # ---- data plumbing -----------------------------------------------------
     def _encode(self, x) -> jax.Array:
@@ -330,6 +334,8 @@ class TM:
         stats = self._stream.step(x, y)
         self.program, self.prng = self._stream.state()
         self.steps += 1
+        self._skip_active = self._skip_active + stats["active_groups"]
+        self._skip_total = self._skip_total + stats["total_groups"]
         return stats
 
     def fit(self, x, y, epochs: int = 1, batch: int = 32,
@@ -361,7 +367,21 @@ class TM:
             # even when an epoch / score callback raises mid-fit
             self.program, self.prng = session.unbind()
             self.steps += session.steps - steps_before
+        for rec in history:
+            self._skip_active = self._skip_active + rec["active_groups"]
+            self._skip_total = self._skip_total + rec["total_groups"]
         return history
+
+    @property
+    def skip_frac(self) -> Optional[float]:
+        """Lifetime Alg-6 clause-skip fraction: share of y-wide clause
+        groups whose TA tiles received NO feedback (and were therefore
+        skipped by the compacted TA-update datapath) over all training
+        this estimator has done.  ``None`` before any training."""
+        tot = int(self._skip_total)
+        if tot == 0:
+            return None
+        return 1.0 - int(self._skip_active) / tot
 
     # ---- inference ---------------------------------------------------------
     def _infer(self, x):

@@ -53,8 +53,20 @@ def _shard_prng(cfg: TMConfig, seed: int, idx) -> PRNG:
 
 def dp_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
                   labels: jax.Array, mesh, seed: int, chunk: int = 4,
-                  int8_wire: bool = True, axis: str = "data"):
-    """Data-parallel batched TM step over one mesh axis."""
+                  int8_wire: bool = True, axis: str = "data",
+                  compact_frac: float = 0.0):
+    """Data-parallel batched TM step over one mesh axis.
+
+    ``compact_frac`` > 0 enables Alg-6 WIRE compaction of the TA-delta
+    all-reduce: the shards first psum the (tiny, [rows]) active-row
+    bitmap; when the union of active rows fits the static capacity
+    ``ceil(rows * compact_frac)``, only those rows cross the wire
+    (gather → psum → scatter), shrinking the dominant collective by
+    ~1/compact_frac at convergence (Fig 7: feedback falls to ≲25 % of
+    clauses after the first epochs).  Falls back to the dense psum when
+    the capacity overflows — EXACT either way.  The bucket predicate is
+    derived from the psum'd bitmap, so every shard takes the same
+    ``lax.cond`` branch (collectives inside the branches stay matched)."""
     nshards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
     local_b = literals.shape[0] // nshards
     use_int8 = int8_wire and (2 * local_b) <= 127
@@ -67,7 +79,22 @@ def dp_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
             cfg, st, prng, lit, lab, chunk)
         if use_int8:  # exact: |delta| <= 2·local_b <= 127
             d_ta = d_ta.astype(jnp.int8).astype(jnp.int32)
-        d_ta = jax.lax.psum(d_ta, axis)
+        rows = d_ta.shape[0]
+        k = max(1, int(rows * compact_frac))
+        if compact_frac > 0 and k < rows:
+            act = jax.lax.psum((d_ta != 0).any(-1).astype(jnp.int32), axis)
+            n_act = act.sum()
+
+            def _compact(_):
+                ridx = jnp.nonzero(act > 0, size=k,
+                                   fill_value=rows - 1)[0]
+                g = jax.lax.psum(jnp.take(d_ta, ridx, axis=0), axis)
+                return jnp.zeros_like(d_ta).at[ridx].set(g)
+
+            d_ta = jax.lax.cond(n_act <= k, _compact,
+                                lambda _: jax.lax.psum(d_ta, axis), None)
+        else:
+            d_ta = jax.lax.psum(d_ta, axis)
         d_w = jax.lax.psum(
             d_w if d_w is not None else jnp.zeros((1,), jnp.int32), axis)
         d_sel = jax.lax.psum(d_sel, axis)
@@ -166,29 +193,16 @@ def pod_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
                         jnp.asarray(y_c), sel_rand[r], ta_rand)
                     acc_ta = acc_ta + d_ta
                 else:
-                    # Alg-6 compaction: gather the ≤K selected clause rows,
-                    # update only those, scatter-add back.  Clause-indexed
-                    # randoms keep this BIT-EXACT vs the dense path
-                    # whenever #selected ≤ K (tested).
+                    # Alg-6 compaction (shared unit — feedback.py): gather
+                    # the ≤K selected clause rows, update only those,
+                    # scatter-add back.  Clause-indexed randoms keep this
+                    # BIT-EXACT vs the dense path whenever #selected ≤ K
+                    # (tested).
                     sel = feedback.select_clauses(
                         cfg, csum, jnp.asarray(y_c), sel_rand[r])
-                    _, idx = jax.lax.top_k(
-                        sel * (1 << 16) + jnp.arange(c_loc), compact_k)
-                    sel_k = jnp.take(sel, idx)          # 1 for real picks
-                    ta_rand = indexed_bits(round_keys[r],
-                                           idx.astype(jnp.uint32),
-                                           cfg.literals, cfg.rand_bits)
-                    d_ta_k, d_w_k, _ = feedback.round_deltas(
-                        cfg, jnp.take(include, idx, 0), lit_1,
-                        jnp.take(cl_1, idx), jnp.take(w_row, idx), csum,
-                        jnp.asarray(y_c),
-                        # force re-selection of exactly the gathered rows
-                        jnp.where(sel_k == 1, jnp.uint32(0),
-                                  jnp.uint32((1 << cfg.rand_bits) - 1)),
-                        ta_rand)
-                    d_ta_k = d_ta_k * sel_k[:, None]
-                    d_w = jnp.zeros((c_loc,), jnp.int32).at[idx].add(
-                        d_w_k * sel_k)
+                    d_ta_k, idx, d_w = feedback.compact_round_deltas(
+                        cfg, include, lit_1, cl_1, w_row, csum,
+                        jnp.asarray(y_c), sel, round_keys[r], compact_k)
                     acc_ta = acc_ta.at[idx].add(d_ta_k)
                 acc_w = acc_w.at[cls].add(d_w)
                 acc_sel = acc_sel + sel

@@ -46,6 +46,16 @@ stage resolves its kernel path per call via ``kernels.select_path`` — the
 packed VPU path for edge batches, the MXU/fused recasts for throughput
 batches — and records the decision in ``cache_report()['path_per_stage']``
 so dispatch == execution is observable.
+
+Clause-skip execution (ISSUE 5, the paper's Alg 6 — its headline training
+optimisation): the TA-update stage runs COMPACTED — the Alg-3 selection
+masks give an active-clause-group bitmap, the active group indices are
+prefix-sum-compacted into a fixed-capacity vector (static capacity
+buckets, in-trace ``lax.switch``, dense fallback at full capacity) and
+only those TA tiles / include-bitplane rows are gathered, updated, and
+scattered back.  Bit-identical to the dense update, but wall-clock per
+step FALLS as the model converges (the paper's ≈40 % training-time
+saving, realised); ``REPRO_SKIP=0`` forces dense.
 """
 from __future__ import annotations
 
@@ -548,10 +558,32 @@ class DTMEngine:
         cl2 = jnp.concatenate([cl, cl], axis=0)
         t1 = jnp.concatenate([t1_lab, t1_neg], axis=0)
         t2 = jnp.concatenate([t2_lab, t2_neg], axis=0)
-        new_ta, new_inc = kops.ta_update_op(
-            prog.ta, lit2, cl2, t1, t2, prog.l_mask, seed=ta_seed,
-            p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
-            n_states=prog.n_states, backend=self._kb, emit_include=True)
+        # Clause-skip execution (Alg 6): clause rows with zero feedback
+        # across both rounds have a provably zero TA delta, so the
+        # compacted datapath gathers only active clause groups (in-trace
+        # capacity-bucket switch — the whole epoch scan stays ONE launch)
+        # and maintains only their include-bitplane rows.  Bit-identical
+        # to the dense update; dense is forced by REPRO_SKIP=0 or for
+        # vmapped program banks (see kernels.select_ta_path).
+        ta_path = kops.select_ta_path(lanes)
+        self._stage_paths[stage + "_ta"] = ta_path
+        if ta_path == kops.TA_COMPACT:
+            # granularity: the Pallas path gathers whole (yt, xt) VMEM
+            # tiles (group is ignored); the jnp ref path has no tiling
+            # constraint, so it compacts at ROW granularity — selected
+            # clauses are scattered across the pool, and row-level
+            # compaction skips every unselected row, not just fully-idle
+            # groups
+            new_ta, new_inc = kops.ta_update_compact_op(
+                prog.ta, lit2, cl2, t1, t2, prog.l_mask, prog.inc,
+                seed=ta_seed, p_ta=prog.p_ta, rand_bits=self.rand_bits,
+                boost=prog.boost, n_states=prog.n_states, backend=self._kb,
+                group=1)
+        else:
+            new_ta, new_inc = kops.ta_update_op(
+                prog.ta, lit2, cl2, t1, t2, prog.l_mask, seed=ta_seed,
+                p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
+                n_states=prog.n_states, backend=self._kb, emit_include=True)
 
         new_w, stats = self._weights_and_stats(
             prog, cl, sel_lab, sel_neg, cls_lab, neg, correct, abs_err)
@@ -836,6 +868,9 @@ class DTMEngine:
         stage actually EXECUTES (recorded inside the taken branch at trace
         time, for the most recent trace) — dispatch == execution is
         asserted in tests, closing the old silent packed_vpu→mxu fallback.
+        Train stages additionally record the SKIP dimension under
+        ``<stage>_ta``: ``compact`` (Alg-6 clause-skip TA update) or
+        ``dense`` (``REPRO_SKIP=0`` / program banks).
         """
         return {
             "infer": self._infer._cache_size(),

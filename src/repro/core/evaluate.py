@@ -57,6 +57,10 @@ def epoch_record(ep: int, agg: dict, n: int,
     rec = {"epoch": ep,
            "train_acc": agg.get("correct", 0) / max(n, 1),
            "selected_clauses": agg.get("selected", 0),
+           # raw Alg-6 group counts ride along so estimators/servers can
+           # accumulate lifetime skip fractions without re-deriving them
+           "active_groups": agg.get("active_groups", 0),
+           "total_groups": tot,
            "group_skip_frac": ((tot - agg.get("active_groups", 0))
                                / max(tot, 1))}
     if extra_metrics is not None:

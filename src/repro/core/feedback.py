@@ -17,8 +17,16 @@ Two execution modes:
   approximation; what scales across a pod — DESIGN.md §2.7).
 
 Clause-skip (Alg 6) is realised as *feedback compaction*: only clauses with
-non-zero feedback have their TA tiles touched; group-level skip statistics
-are emitted for the Fig 7 benchmark.
+non-zero feedback have their TA tiles touched.  This module owns the shared
+compaction unit (:func:`compact_round_deltas` — gather the ≤K selected
+rows, update, scatter-add; clause-indexed random streams keep it bit-exact)
+used by the pod training step, and emits the group-level skip statistics
+for the Fig 7 benchmark.  The DTM engine's hot path realises the same idea
+as the compacted TA-update datapath (``kernels.ta_update_compact_op``) —
+measured wall-clock per step falls as the model converges.  This legacy
+batched/sequential core keeps the dense update: its ta_rand tensors are
+drawn up front per datapoint, so skipping rows here saves memory traffic
+but not the PRNG draws the engine's counter-keyed streams avoid entirely.
 """
 from __future__ import annotations
 
@@ -164,6 +172,41 @@ def round_deltas(
 # ---------------------------------------------------------------------------
 # state application
 # ---------------------------------------------------------------------------
+
+def compact_round_deltas(cfg, include, literals, clause_out, weight_row,
+                         csum, y_c, sel, round_key,
+                         compact_k: int):
+    """Alg-6 feedback compaction for one CoTM round (gather → update →
+    scatter): only the (at most) ``compact_k`` SELECTED clause rows get
+    TA-delta math and random numbers.
+
+    Clause-indexed random streams (:func:`repro.core.prng.indexed_bits`)
+    keep this BIT-EXACT vs the dense :func:`round_deltas` whenever
+    ``#selected <= compact_k`` — the shared compaction unit of the pod
+    training step (:func:`repro.core.distributed.pod_train_step`); the
+    DTM engine's equivalent is ``kernels.ta_update_compact_op``.
+
+    Returns ``(d_ta_k [k, 2f] int32, idx [k] int32 — the gathered clause
+    rows to scatter-add, d_w [c] int32)``."""
+    from .prng import indexed_bits
+
+    assert cfg.tm_type == COALESCED, "compaction is defined on the CoTM pool"
+    c = sel.shape[0]
+    _, idx = jax.lax.top_k(sel * (1 << 16) + jnp.arange(c), compact_k)
+    sel_k = jnp.take(sel, idx)              # 1 for real picks, 0 for fill
+    ta_rand = indexed_bits(round_key, idx.astype(jnp.uint32),
+                           cfg.literals, cfg.rand_bits)
+    d_ta_k, d_w_k, _ = round_deltas(
+        cfg, jnp.take(include, idx, 0), literals, jnp.take(clause_out, idx),
+        jnp.take(weight_row, idx), csum, y_c,
+        # force re-selection of exactly the gathered rows
+        jnp.where(sel_k == 1, jnp.uint32(0),
+                  jnp.uint32((1 << cfg.rand_bits) - 1)),
+        ta_rand)
+    d_ta_k = d_ta_k * sel_k[:, None]
+    d_w = jnp.zeros((c,), jnp.int32).at[idx].add(d_w_k * sel_k)
+    return d_ta_k, idx, d_w
+
 
 def apply_ta_delta(cfg: TMConfig, ta: jax.Array, delta: jax.Array) -> jax.Array:
     hi = jnp.asarray(cfg.n_states - 1, ta.dtype)

@@ -22,6 +22,14 @@ consumes it); the class-sum matmul reads it from VMEM scratch, and the
 per-clause feedback-selection masks for the target and negated rounds are
 emitted by the same launch — no separate kernel, no re-read.
 
+The ``sel_lab``/``sel_neg`` masks this kernel emits are ALSO where the
+clause-skip execution (Alg 6, ISSUE 5) is born: the engine derives the
+Type I/II feedback masks from them, and the active-clause-group bitmap of
+those masks drives the COMPACTED TA-update back half
+(``ops.ta_update_compact_op`` → the scalar-prefetch gather kernel in
+ta_update.py) — clause tiles this launch selects no feedback for never
+move again for the rest of the step.
+
 Dynamic (traced) scalars ride in SMEM so a :class:`DTMProgram` swap never
 retraces: ``T`` and ``w_frozen`` are run-time model data (cache-size == 1
 reconfiguration semantics, paper §IV-D-a).

@@ -11,6 +11,11 @@ Two knobs are resolved HERE, once, for every kernel:
   compiled).  Read at trace time; flip it before the first kernel call.
 * ``REPRO_KERNEL_PATH`` — force one of ``mxu | packed_vpu | fused | ref``
   instead of the shape-based :func:`select_path` choice.
+* ``REPRO_SKIP`` — ``auto``/``1`` (default) runs the TA-update stage as the
+  Alg-6 clause-skip compaction (:func:`ta_update_compact_op`, bit-identical
+  to dense); ``0`` forces the dense update (the CI leg).  The decision is
+  the SKIP dimension of the dispatch (:func:`select_ta_path`), recorded per
+  train stage in ``cache_report()["path_per_stage"]``.
 
 :func:`select_path` is the MATADOR-style datapath selector: the MXU matmul
 recast for throughput batches, the bit-packed VPU path for the edge
@@ -20,6 +25,7 @@ steps (paper Fig 11 crossover; arXiv:2403.10538 §V).
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
@@ -30,7 +36,7 @@ from .class_sum import class_sum
 from .clause_eval import clause_eval
 from .fused_step import fused_step
 from .packed_clause import packed_clause_eval
-from .ta_update import ta_update
+from .ta_update import ta_update, ta_update_sparse
 from .tm_infer import tm_infer
 
 # Kernel path names (the dispatchable datapath variants).
@@ -44,6 +50,20 @@ _PATHS = (PATH_MXU, PATH_PACKED, PATH_FUSED, PATH_REF)
 # packed VPU path wins (edge single-datapoint regime, Fig 11).
 PACKED_MAX_BATCH = 4
 
+# TA-update execution modes (the SKIP dimension of the dispatch): the
+# dense full-R update vs the Alg-6 clause-skip compaction that gathers
+# only active clause groups (``ta_update_compact_op``).
+TA_DENSE = "dense"
+TA_COMPACT = "compact"
+
+# Capacity buckets for the compacted TA update, as fractions of the clause
+# group count.  Kept small and STATIC so the lax.switch over buckets traces
+# once per jit entry (bounded cache); 1.0 (the dense fallback) is implicit.
+# The 1/16 bucket is what a converged model actually rides (Fig 7:
+# feedback falls to a few % of clauses) — without it the smallest-bucket
+# floor caps the wall-clock saving long before convergence does.
+SKIP_FRACTIONS = (0.0625, 0.25, 0.5)
+
 
 def resolve_interpret() -> bool:
     """Single source of truth for Pallas interpret mode (REPRO_INTERPRET)."""
@@ -56,6 +76,37 @@ def resolve_interpret() -> bool:
         raise ValueError(
             f"REPRO_INTERPRET={env!r} not recognised; use auto, 1, or 0")
     return jax.default_backend() != "tpu"
+
+
+def resolve_skip() -> bool:
+    """Single source of truth for clause-skip execution (``REPRO_SKIP``).
+
+    ``auto``/``1`` (default) — the TA-update stage runs the Alg-6
+    compacted datapath (:func:`ta_update_compact_op`); ``0`` forces the
+    dense update everywhere (the CI leg that keeps both modes green).
+    Read at trace time, like ``REPRO_INTERPRET``."""
+    env = os.environ.get("REPRO_SKIP", "auto").strip().lower()
+    if env in ("1", "true", "yes", "on", "", "auto"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(f"REPRO_SKIP={env!r} not recognised; use auto, 1, or 0")
+
+
+def select_ta_path(lanes: int = 1) -> str:
+    """The SKIP dimension of the dispatch: how the TA-update stage runs.
+
+    Returns :data:`TA_COMPACT` (Alg-6 clause-skip compaction — gather the
+    active clause groups, update only those, scatter back; bit-identical
+    to dense) or :data:`TA_DENSE`.  Compaction is off under
+    ``REPRO_SKIP=0`` and for vmapped program banks (``lanes`` > 1): vmap
+    lowers the in-trace ``lax.switch`` over capacity buckets to a masked
+    execution of EVERY branch per lane, which would cost more than dense.
+    The engine records the decision per train stage in
+    ``cache_report()["path_per_stage"]`` (key ``<stage>_ta``)."""
+    if lanes > 1 or not resolve_skip():
+        return TA_DENSE
+    return TA_COMPACT
 
 
 def select_path(cfg=None, batch=None, training: bool = False,
@@ -214,6 +265,117 @@ def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
     if emit_include:
         return new_ta, ref.pack_include(new_ta, n_states)
     return new_ta
+
+
+def _skip_caps(n_groups: int) -> tuple:
+    """Static compaction capacity buckets (in clause groups) for a grid of
+    ``n_groups`` — the unique ``ceil(n_groups * f)`` for
+    :data:`SKIP_FRACTIONS`, strictly below the dense fallback."""
+    caps = sorted({max(1, math.ceil(n_groups * f)) for f in SKIP_FRACTIONS})
+    return tuple(c for c in caps if c < n_groups)
+
+
+@functools.partial(jax.jit, static_argnames=("rand_bits", "backend",
+                                             "group", "yt", "xt"))
+def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
+                         inc, seed, p_ta, rand_bits=16, boost=True,
+                         n_states=256, backend="pallas", group=32,
+                         yt=128, xt=256):
+    """Clause-skip TA update (Alg 6 made real): bit-identical to
+    ``ta_update_op(..., emit_include=True)`` but touches only ACTIVE
+    clause groups.
+
+    A clause row is active iff any batch element gives it Type I or
+    Type II feedback (``type1 | type2``); rows without feedback have a
+    provably zero delta, so their TA tiles (and include-bitplane rows)
+    need never move.  The active-group bitmap is compacted into a
+    fixed-capacity index vector (``jnp.nonzero(size=k)`` — the prefix-sum
+    compaction) at one of the static :data:`SKIP_FRACTIONS` capacity
+    buckets, selected IN-TRACE by ``lax.switch`` with the dense kernel as
+    the full-capacity fallback — jit caches stay bounded (one trace, all
+    buckets) and a converged model takes the small-bucket branch at run
+    time.  Kernel backend: the sparse scalar-prefetch kernel
+    (:func:`repro.kernels.ta_update.ta_update_sparse`) gathers active
+    (yt, xt) tiles; ref backend: ``jnp.take`` row gathers at ``group``-row
+    granularity feeding the stream-exact oracle.
+
+    ``inc`` must be the packed include bitplane OF ``ta`` (the engine's
+    maintained invariant): skipped rows keep their bitplane words, updated
+    rows are re-packed from the compacted output and scattered back.
+    Returns ``(new_ta int32 [C, L], new_inc uint32 [C, W])``."""
+    C, L = ta.shape
+    g = yt if backend != "ref" else group
+    n_groups = -(-C // g)
+    C_pad = n_groups * g
+    n_states_i = jnp.asarray(n_states, jnp.int32)
+
+    row_act = ((type1 > 0) | (type2 > 0)).any(axis=0)              # [C]
+    grp_act = jnp.pad(row_act, (0, C_pad - C)).reshape(n_groups, g).any(-1)
+    n_act = grp_act.sum()
+    caps = _skip_caps(n_groups)
+
+    if backend == "ref":
+        ta_p = jnp.pad(ta.astype(jnp.int32), ((0, C_pad - C), (0, 0)))
+        cl_p = jnp.pad(clause_out, ((0, 0), (0, C_pad - C)))
+        t1_p = jnp.pad(type1, ((0, 0), (0, C_pad - C)))
+        t2_p = jnp.pad(type2, ((0, 0), (0, C_pad - C)))
+        lit_p, lm = literals, l_mask
+    else:
+        ta_p = _pad2(ta.astype(jnp.int32), g, xt)
+        cl_p = _pad2(clause_out, 1, g)
+        t1_p = _pad2(type1, 1, g)
+        t2_p = _pad2(type2, 1, g)
+        lit_p = _pad2(literals, 1, xt)
+        lm = jnp.pad(l_mask, (0, (-L) % xt))
+    base = jnp.clip(ta_p, 0, n_states_i - 1)
+    inc_p = jnp.pad(inc, ((0, C_pad - C), (0, 0)))
+
+    def _compact_branch(k: int):
+        def branch():
+            gidx = jnp.nonzero(grp_act, size=k,
+                               fill_value=n_groups - 1)[0].astype(jnp.int32)
+            rows = (gidx[:, None] * g
+                    + jnp.arange(g, dtype=jnp.int32)).reshape(-1)   # [k*g]
+            if backend == "ref":
+                upd = ref.ta_update_ref(
+                    jnp.take(ta_p, rows, axis=0), lit_p,
+                    jnp.take(cl_p, rows, axis=1),
+                    jnp.take(t1_p, rows, axis=1),
+                    jnp.take(t2_p, rows, axis=1), lm, seed, p_ta,
+                    rand_bits, boost, n_states, xt=xt, row_idx=rows)
+            else:
+                upd = ta_update_sparse(
+                    ta_p, lit_p, cl_p, t1_p, t2_p, lm, gidx, seed=seed,
+                    p_ta=p_ta, rand_bits=rand_bits, boost=boost,
+                    n_states=n_states, yt=g, xt=xt,
+                    interpret=resolve_interpret())
+            # fill slots gather the last group (clamped, duplicate-safe:
+            # they recompute identical values); scatter restores rows
+            new_ta = base.at[rows].set(upd)
+            new_inc = inc_p.at[rows].set(
+                ref.pack_include(upd[:, :L], n_states))
+            return new_ta, new_inc
+        return branch
+
+    def _dense_branch():
+        if backend == "ref":
+            new_ta = ref.ta_update_ref(ta_p, lit_p, cl_p, t1_p, t2_p, lm,
+                                       seed, p_ta, rand_bits, boost,
+                                       n_states, xt=xt)
+        else:
+            new_ta = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed,
+                               p_ta=p_ta, rand_bits=rand_bits, boost=boost,
+                               n_states=n_states, yt=g, xt=xt,
+                               interpret=resolve_interpret())
+        return new_ta, ref.pack_include(new_ta[:, :L], n_states)
+
+    if caps:
+        bidx = sum((n_act > jnp.int32(c)).astype(jnp.int32) for c in caps)
+        new_ta, new_inc = jax.lax.switch(
+            bidx, [_compact_branch(k) for k in caps] + [_dense_branch])
+    else:       # a single clause group: nothing to compact
+        new_ta, new_inc = _dense_branch()
+    return new_ta[:C, :L], new_inc[:C]
 
 
 @functools.partial(jax.jit, static_argnames=("rand_bits", "backend",

@@ -32,15 +32,24 @@ def _kernel(lit_ref, inc_ref, out_ref, viol_ref, ne_ref, *,
         ne_ref[...] = jnp.zeros_like(ne_ref)
 
     inc = inc_ref[...]                                 # [yt, wt] uint32
-    lit = lit_ref[...]                                 # [bt, wt] uint32
-    ne_ref[...] |= jnp.bitwise_or.reduce(inc, axis=1, keepdims=True).T
+    # hoisted per-word nonempty reduction: one OR over the include tile
+    # serves both the eval-mode nonempty check and an all-exclude skip —
+    # a tile of zero include words can neither violate nor fire-gate, so
+    # the whole per-batch violation loop is skipped (exclude-dominated
+    # clauses are the common converged case; Fig 4-6 frugality)
+    col_or = jnp.bitwise_or.reduce(inc, axis=1, keepdims=True)  # [yt, 1]
 
-    def body(b, viol):
-        v = jnp.bitwise_and(inc, jnp.bitwise_not(lit[b])[None, :])
-        row = jnp.bitwise_or.reduce(v, axis=1)         # [yt]
-        return viol.at[b, :].set(viol[b, :] | row)
+    @pl.when(jnp.any(col_or != 0))
+    def _accumulate():
+        ne_ref[...] |= col_or.T
+        lit = lit_ref[...]                             # [bt, wt] uint32
 
-    viol_ref[...] = jax.lax.fori_loop(0, batch_tile, body, viol_ref[...])
+        def body(b, viol):
+            v = jnp.bitwise_and(inc, jnp.bitwise_not(lit[b])[None, :])
+            row = jnp.bitwise_or.reduce(v, axis=1)     # [yt]
+            return viol.at[b, :].set(viol[b, :] | row)
+
+        viol_ref[...] = jax.lax.fori_loop(0, batch_tile, body, viol_ref[...])
 
     @pl.when(k == n_k - 1)
     def _finish():
@@ -54,16 +63,25 @@ def _kernel(lit_ref, inc_ref, out_ref, viol_ref, ne_ref, *,
                                              "interpret"))
 def packed_clause_eval(packed_literals: jax.Array, packed_include: jax.Array,
                        eval_mode: bool = False, bt: int = 8, yt: int = 128,
-                       wt: int = 128, interpret: bool = True) -> jax.Array:
+                       wt: int = 128,
+                       interpret: bool | None = None) -> jax.Array:
     """packed_literals [B, W] uint32, packed_include [C, W] uint32
     -> clause [B, C] int32.  W = ceil(L/32), padded to wt multiples with
     zero words (zero include words never violate).
+
+    ``interpret=None`` (default) resolves through
+    ``ops.resolve_interpret()`` like every other kernel — direct callers
+    get the compiled TPU path on TPU instead of a silently interpreted
+    one (read at trace time; flip ``REPRO_INTERPRET`` before first call).
 
     Tail-bit contract: bits at positions >= L in the last real word of
     ``packed_include`` MUST be zero — they would otherwise veto clauses
     (and fake nonempty ones in eval mode).  ``ops.packed_clause_eval_op``
     enforces this via its ``n_bits`` argument (ref.tail_mask_words);
     callers going straight to this kernel own the masking themselves."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
     B, W = packed_literals.shape
     C, W2 = packed_include.shape
     assert W == W2 and B % bt == 0 and C % yt == 0 and W % wt == 0, (

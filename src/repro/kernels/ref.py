@@ -188,7 +188,8 @@ def _xorshift32(x):
 
 
 def ta_update_ref(ta, literals, clause_out, type1, type2, l_mask, seed,
-                  p_ta, rand_bits=16, boost=True, n_states=256, xt=256):
+                  p_ta, rand_bits=16, boost=True, n_states=256, xt=256,
+                  row_idx=None):
     """Bit-exact oracle for kernels.ta_update (same per-element streams).
 
     The stream is keyed on the element's global (row, col) index with the
@@ -197,7 +198,13 @@ def ta_update_ref(ta, literals, clause_out, type1, type2, l_mask, seed,
     therefore matches the padded kernel bit-for-bit on ANY shape (padded
     columns have their own stream positions, but those never land in the
     [:C, :L] region), so CPU-ref and TPU-kernel training runs are
-    reproducible against each other."""
+    reproducible against each other.
+
+    ``row_idx`` (optional, [C] int) overrides each row's GLOBAL row number
+    in the stream key — the clause-skip compaction path (ops.
+    ta_update_compact_op) gathers only the active rows and passes their
+    original indices here, so a compacted update reproduces the dense
+    per-element streams exactly."""
     C, L = ta.shape
     B = literals.shape[0]
     boost = jnp.asarray(boost)
@@ -205,7 +212,10 @@ def ta_update_ref(ta, literals, clause_out, type1, type2, l_mask, seed,
     include = ta.astype(jnp.int32) >= (n_states >> 1)
 
     stride = ((L + xt - 1) // xt) * xt
-    gy = jax.lax.broadcasted_iota(jnp.uint32, (C, L), 0)
+    if row_idx is None:
+        gy = jax.lax.broadcasted_iota(jnp.uint32, (C, L), 0)
+    else:
+        gy = jnp.broadcast_to(row_idx.astype(jnp.uint32)[:, None], (C, L))
     gx = jax.lax.broadcasted_iota(jnp.uint32, (C, L), 1)
     state0 = _splitmix32(jnp.asarray(seed, jnp.uint32)
                          ^ (gy * jnp.uint32(stride) + gx))

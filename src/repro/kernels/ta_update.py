@@ -46,10 +46,15 @@ def _xorshift32(x):
     return x.astype(jnp.uint32)
 
 
-def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, params_ref,
-            out_ref, *, batch: int, n_l_tiles: int, yt: int, xt: int,
-            rand_bits: int):
-    ci, li = pl.program_id(0), pl.program_id(1)
+def _tile_update(ci, li, ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref,
+                 params_ref, out_ref, *, batch: int, n_l_tiles: int, yt: int,
+                 xt: int, rand_bits: int):
+    """Shared (yt, xt) TA-tile update body.
+
+    ``ci``/``li`` are the tile's GLOBAL grid coordinates — the dense kernel
+    passes its program ids, the sparse kernel passes the gathered tile's
+    original row index so the counter-based PRNG streams are identical to
+    a dense launch (bit-exact clause-skip compaction)."""
     # dynamic model scalars ride in SMEM — a DTMProgram swap or a fresh
     # per-step seed never retraces (cache-size == 1 semantics, §IV-D-a).
     seed = params_ref[0, 0]
@@ -93,6 +98,95 @@ def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, params_ref,
     _, delta = jax.lax.fori_loop(0, batch, body, (state, delta))
     delta = delta * lmask_ref[...].astype(jnp.int32)      # Fig 6a inverse mask
     out_ref[...] = jnp.clip(ta + delta, 0, n_states - 1)
+
+
+def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, params_ref,
+            out_ref, *, batch: int, n_l_tiles: int, yt: int, xt: int,
+            rand_bits: int):
+    _tile_update(pl.program_id(0), pl.program_id(1), ta_ref, lit_ref,
+                 cl_ref, t1_ref, t2_ref, lmask_ref, params_ref, out_ref,
+                 batch=batch, n_l_tiles=n_l_tiles, yt=yt, xt=xt,
+                 rand_bits=rand_bits)
+
+
+def _sparse_kernel(idx_ref, params_ref, ta_ref, lit_ref, cl_ref, t1_ref,
+                   t2_ref, lmask_ref, out_ref, *, batch: int, n_l_tiles: int,
+                   yt: int, xt: int, rand_bits: int):
+    """Compacted grid step: slot ``program_id(0)`` owns the ACTIVE clause
+    tile whose original row-tile index is ``idx_ref[program_id(0)]`` (the
+    scalar-prefetch index vector also drives the BlockSpec gathers).  The
+    PRNG stream is keyed on the original tile coordinates, so the update
+    is bit-identical to the dense kernel's for that tile."""
+    _tile_update(idx_ref[pl.program_id(0)], pl.program_id(1), ta_ref,
+                 lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, params_ref,
+                 out_ref, batch=batch, n_l_tiles=n_l_tiles, yt=yt, xt=xt,
+                 rand_bits=rand_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("rand_bits", "yt", "xt",
+                                             "interpret"))
+def ta_update_sparse(ta: jax.Array, literals: jax.Array,
+                     clause_out: jax.Array, type1: jax.Array,
+                     type2: jax.Array, l_mask: jax.Array,
+                     tile_idx: jax.Array, seed, p_ta, rand_bits: int = 16,
+                     boost=True, n_states=256, yt: int = 128, xt: int = 256,
+                     interpret: bool | None = None) -> jax.Array:
+    """Compacted TA update over the ACTIVE clause tiles only (Alg 6 made
+    real): ``tile_idx`` [k] int32 lists the row-tile indices to update and
+    doubles as the scalar-prefetch index vector — every BlockSpec gathers
+    its (yt-high) tile through it, so only k of the C//yt clause tiles ever
+    move between HBM and VMEM (the paper's skipped BRAM traffic).
+
+    Returns the COMPACTED updated tiles [k*yt, L] int32 (slot i holds
+    original rows ``tile_idx[i]*yt : (tile_idx[i]+1)*yt``); the caller
+    scatters them back (ops.ta_update_compact_op).  Bit-identical to the
+    dense kernel on the gathered tiles — the PRNG stream is keyed on each
+    tile's ORIGINAL row index via the prefetched vector.  Duplicate
+    entries in ``tile_idx`` (capacity-bucket fill slots) are harmless:
+    they recompute the same tile with the same streams.
+
+    ``interpret=None`` (default) resolves through
+    ``ops.resolve_interpret()`` like every other kernel, so direct
+    callers on TPU get the compiled path."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
+    C, L = ta.shape
+    B = literals.shape[0]
+    k = tile_idx.shape[0]
+    assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
+    grid = (k, L // xt)
+    params = jnp.stack([
+        jnp.asarray(seed, jnp.uint32),
+        jnp.asarray(p_ta, jnp.uint32),
+        jnp.asarray(boost, jnp.uint32),
+        jnp.asarray(n_states, jnp.uint32),
+    ]).reshape(1, 4)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # (tile_idx, params)
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((yt, xt), lambda c, l, idx, prm: (idx[c], l)),
+            pl.BlockSpec((B, xt), lambda c, l, idx, prm: (0, l)),
+            pl.BlockSpec((B, yt), lambda c, l, idx, prm: (0, idx[c])),
+            pl.BlockSpec((B, yt), lambda c, l, idx, prm: (0, idx[c])),
+            pl.BlockSpec((B, yt), lambda c, l, idx, prm: (0, idx[c])),
+            pl.BlockSpec((1, xt), lambda c, l, idx, prm: (0, l)),
+        ],
+        out_specs=pl.BlockSpec((yt, xt), lambda c, l, idx, prm: (c, l)),
+    )
+    return pl.pallas_call(
+        functools.partial(_sparse_kernel, batch=B, n_l_tiles=grid[1], yt=yt,
+                          xt=xt, rand_bits=rand_bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k * yt, L), jnp.int32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(tile_idx.astype(jnp.int32), params,
+      ta.astype(jnp.int32), literals.astype(jnp.int8),
+      clause_out.astype(jnp.int8), type1.astype(jnp.int8),
+      type2.astype(jnp.int8), l_mask.reshape(1, L).astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("rand_bits", "yt", "xt",

@@ -28,6 +28,12 @@ reported per tenant as ``program_nbytes`` in :meth:`TMServer.stats` — is
 ~7× smaller than the int32 TA + re-thresholded include pair it replaced;
 literals ship packed 32-per-word from ``engine.encode``.
 
+On-line training requests run the clause-skip TA update (ISSUE 5): as a
+tenant's model converges, fewer clause groups receive feedback and its
+``train()`` wall-clock falls.  The per-tenant lifetime skip fraction is
+surfaced as ``skip_frac`` in :meth:`TMServer.stats` (device-lazy
+accumulators — no extra host sync on the train path).
+
 Benchmark (``BENCH_reconfig.json``): measures
 
 * ``engine_compile_s``   — one-time cost of the first request per stage
@@ -100,6 +106,10 @@ class TMServer:
         self._dirty: set = set()
         self.stacked_launches = 0
         self.coalesced_requests = 0
+        # per-tenant Alg-6 skip accounting: device-lazy [active, total]
+        # group-count accumulators (summed on the train path with zero
+        # extra host syncs; materialised only by stats())
+        self._skip_acc: Dict[str, list] = {}
 
     # ---- tenant management ------------------------------------------------
     def register(self, name: str, spec: TMSpec,
@@ -126,6 +136,9 @@ class TMServer:
         self._groups.pop(spec.kind == "conv", None)
         self._decode_info[name] = (spec.kind == "regression",
                                    int(spec.tm_config().T))
+        # a (re-)registered tenant is a fresh model: its lifetime skip
+        # accounting starts over (skip_frac == None until it trains)
+        self._skip_acc.pop(name, None)
 
     def _swap_to(self, name: str) -> _Tenant:
         tenant = self.tenants[name]
@@ -200,6 +213,9 @@ class TMServer:
         # the tenant's bank slot is stale until the next flush swaps the
         # fresh program back in (hot-swap at bank granularity)
         self._dirty.add(name)
+        acc = self._skip_acc.setdefault(name, [0, 0])
+        acc[0] = acc[0] + stats["active_groups"]
+        acc[1] = acc[1] + stats["total_groups"]
         return stats
 
     # ---- stacked (program-major) serving ----------------------------------
@@ -308,13 +324,24 @@ class TMServer:
         return sum(leaf.nbytes
                    for leaf in jax.tree.leaves(self.tenants[name].program))
 
+    def skip_frac(self, name: str) -> Optional[float]:
+        """Lifetime Alg-6 clause-skip fraction of one tenant's on-line
+        training (share of clause groups whose TA tiles the compacted
+        update skipped); ``None`` before the tenant ever trained."""
+        acc = self._skip_acc.get(name)
+        if acc is None or int(acc[1]) == 0:
+            return None
+        return 1.0 - int(acc[0]) / int(acc[1])
+
     def stats(self) -> dict:
         return {"tenants": sorted(self.tenants), "requests": self.requests,
                 "swaps": self.swaps, "cache": self.engine.cache_report(),
                 "stacked_launches": self.stacked_launches,
                 "coalesced_requests": self.coalesced_requests,
                 "program_nbytes": {n: self.program_nbytes(n)
-                                   for n in sorted(self.tenants)}}
+                                   for n in sorted(self.tenants)},
+                "skip_frac": {n: self.skip_frac(n)
+                              for n in sorted(self.tenants)}}
 
 
 # ---------------------------------------------------------------------------

@@ -96,7 +96,7 @@ def test_program_swap_keeps_cache_at_one(backend):
     # dispatcher selects for its batch size (BATCH=8 -> throughput paths
     # by default; an env force like REPRO_KERNEL_PATH=packed_vpu must be
     # honoured by every stage — the old silent mxu fallback is the bug)
-    from repro.kernels import select_path
+    from repro.kernels import select_path, select_ta_path
 
     def expect(batch, training=False):
         path = select_path(None, batch=batch, training=training)
@@ -108,8 +108,11 @@ def test_program_swap_keeps_cache_at_one(backend):
 
     # conv stages run clause eval on the flattened [B·P] patch batch
     conv_batch = BATCH * max(s.n_patches for s in SPECS.values())
+    # the train stage also records the SKIP dimension of its TA-update
+    # back half (compact by default; dense under REPRO_SKIP=0)
     assert paths == {"infer": expect(BATCH),
                      "train": expect(BATCH, training=True),
+                     "train_ta": select_ta_path(),
                      "infer_conv": expect(conv_batch),
                      "train_conv": expect(conv_batch)}, paths
     # programs are pure data: swapping through the whole roster and back
