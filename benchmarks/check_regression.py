@@ -24,6 +24,15 @@ Guarded metrics:
 * skip entries     — compact-vs-dense ``speedup`` at skip ≥ 0.5 (higher
   is better; a machine-portable ratio, so a silent fall-back to the dense
   TA update fails the guard even across runner classes)
+* pod entry        — ``equal_work_ratio_4x`` (lower is better; the mesh
+  tax: wall-clock of 4·K tenants sharded over 4 devices over the SAME
+  4·K-tenant roster on one device — equal compute on both sides, so the
+  ratio is stable across runner classes whether or not the host has
+  enough cores to run the forced devices in parallel.  The headline
+  ``scaling_ratio_4x`` acceptance number is reported in BENCH_pod.json
+  but deliberately NOT guarded: it flips regime between serialized
+  1-core containers (degenerates to >= 4x) and parallel CI runners,
+  so baseline and fresh run may legitimately sit on opposite sides.)
 
 Metrics present only on one side are reported but never fail the guard
 (new benchmarks land before their baseline is committed).
@@ -43,7 +52,7 @@ from typing import Dict, Tuple
 Metrics = Dict[str, Tuple[float, bool]]
 
 FILES = ("BENCH_fused.json", "BENCH_packed.json", "BENCH_session.json",
-         "BENCH_skip.json")
+         "BENCH_skip.json", "BENCH_pod.json")
 
 
 def _extract(fname: str, report: dict) -> Metrics:
@@ -77,6 +86,15 @@ def _extract(fname: str, report: dict) -> Metrics:
             if e["skip_frac"] >= 0.5:
                 out[f"skip/ta_speedup_f{e['skip_frac']}"] = (e["speedup"],
                                                              True)
+    elif fname == "BENCH_pod.json":
+        # guard the equal-work mesh-tax RATIO only (wall(4K tenants,
+        # 4 dev) / wall(4K tenants, 1 dev)) — equal compute both sides
+        # makes it stable across runner classes; the scaling_ratio_4x
+        # acceptance headline is regime-dependent (serialized vs
+        # parallel host) and is reported, not guarded
+        if "equal_work_ratio_4x" in report:
+            out["pod/equal_work_ratio_4x"] = (
+                report["equal_work_ratio_4x"], False)
     return out
 
 
@@ -88,10 +106,10 @@ def _load(path: str, fname: str) -> Metrics:
         return _extract(fname, json.load(fh))
 
 
-def check(baseline_dir: str, fresh_dir: str,
-          tolerance: float = 2.0) -> int:
+def check(baseline_dir: str, fresh_dir: str, tolerance: float = 2.0,
+          files=FILES) -> int:
     failures = []
-    for fname in FILES:
+    for fname in files:
         base = _load(baseline_dir, fname)
         fresh = _load(fresh_dir, fname)
         for key in sorted(set(base) | set(fresh)):
@@ -125,8 +143,13 @@ def main(argv=None) -> None:
     ap.add_argument("--fresh", default=".",
                     help="dir with freshly generated BENCH_*.json")
     ap.add_argument("--tolerance", type=float, default=2.0)
+    ap.add_argument("--files", nargs="+", default=list(FILES),
+                    choices=list(FILES),
+                    help="guard only these baselines (the PR-blocking "
+                         "smoke runs fused + session; nightly runs all)")
     args = ap.parse_args(argv)
-    sys.exit(check(args.baseline, args.fresh, args.tolerance))
+    sys.exit(check(args.baseline, args.fresh, args.tolerance,
+                   files=tuple(args.files)))
 
 
 if __name__ == "__main__":

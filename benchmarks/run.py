@@ -21,6 +21,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="shrunk sizes + single timing iteration")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. "
+                         "'fused_step_bench,session_bench') — the "
+                         "PR-blocking perf smoke runs just the guarded "
+                         "baselines instead of the full nightly sweep")
     args = ap.parse_args()
     if args.smoke:
         # must land before benchmark modules import benchmarks.common
@@ -28,13 +33,21 @@ def main() -> None:
 
     from . import (fig3_opcounts, fig7_clause_skip, fig11_kernels,
                    fig14_weight_bits, fig15_lfsr, fused_step_bench,
-                   packed_bench, session_bench, skip_bench,
+                   packed_bench, pod_bench, session_bench, skip_bench,
                    table1_accuracy, table2_kws6, table2_supp, convtm_bench)
+    mods = (table1_accuracy, table2_kws6, table2_supp, fig3_opcounts,
+            fig7_clause_skip, fig11_kernels, fig14_weight_bits,
+            fig15_lfsr, convtm_bench, fused_step_bench,
+            packed_bench, session_bench, skip_bench, pod_bench)
+    if args.only:
+        wanted = set(args.only.split(","))
+        names = {m.__name__.rsplit(".", 1)[-1] for m in mods}
+        unknown = wanted - names
+        assert not unknown, f"unknown benchmark module(s): {unknown}"
+        mods = tuple(m for m in mods
+                     if m.__name__.rsplit(".", 1)[-1] in wanted)
     print("name,us_per_call,derived")
-    for mod in (table1_accuracy, table2_kws6, table2_supp, fig3_opcounts,
-                fig7_clause_skip, fig11_kernels, fig14_weight_bits,
-                fig15_lfsr, convtm_bench, fused_step_bench,
-                packed_bench, session_bench, skip_bench):
+    for mod in mods:
         try:
             mod.run()
         except Exception:

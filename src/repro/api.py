@@ -272,6 +272,76 @@ def tile_for(*specs: TMSpec, x: int = 128, y: int = 128, m: int = 128,
         max_patches=max(s.n_patches for s in specs))
 
 
+@dataclasses.dataclass(frozen=True)
+class PodPlan:
+    """A per-mesh execution plan (the MATADOR per-deployment mapping,
+    mesh edition) — what :func:`plan_for` decided and why.
+
+    ``mode``: ``"single"`` (one device — no sharding), ``"tenants"``
+    (programs fit the per-device budget: tenant-parallel
+    :class:`repro.launch.pod.PodBank` over ``axis``), or ``"clauses"``
+    (over-budget program: clause-shard one machine over ``axis`` with
+    :class:`repro.launch.pod.ShardedTM`).
+    """
+
+    mode: str
+    axis: str
+    shards: int
+    tile: TileConfig
+    program_bytes: int
+    budget_bytes: int
+    reason: str
+
+
+def plan_for(mesh, *specs: TMSpec, vmem_budget: Optional[float] = None,
+             **tile_kw) -> PodPlan:
+    """Grow :func:`tile_for` into a per-mesh planner: size the engine for
+    the roster, then choose tenant- vs clause-sharding from the
+    ``launch/tm_perf`` roofline model.
+
+    A program whose padded RAM image (:func:`repro.launch.tm_perf
+    .program_bytes`) fits the per-device budget (``vmem_budget``,
+    default the hardware model's VMEM) serves tenant-parallel — D
+    device-local banks, zero collectives.  An over-budget program
+    clause-shards instead: the fewest shards (dividing the padded R,
+    bounded by the mesh) that bring the per-shard window under budget,
+    trading one ``[B, H]`` class-sum psum per step for fitting at all.
+    """
+    # lazy imports: api is the front-end layer; launch/ pulls it back in
+    from repro.launch.mesh import V5E, mesh_chips
+    from repro.launch import tm_perf
+
+    tile = tile_for(*specs, **tile_kw)
+    L, R, H = tile.padded_dims()
+    ta_bits = max(s.ta_bits for s in specs)
+    pbytes = tm_perf.program_bytes(L, R, H, ta_bits=ta_bits)
+    budget = int(vmem_budget if vmem_budget is not None else V5E.vmem_bytes)
+    n = mesh_chips(mesh)
+    axes = mesh.axis_names
+    if n <= 1:
+        return PodPlan("single", axes[0] if axes else "", 1, tile, pbytes,
+                       budget, "one device — nothing to shard")
+    if pbytes <= budget:
+        axis = "tenants" if "tenants" in axes else axes[0]
+        return PodPlan(
+            "tenants", axis, n, tile, pbytes, budget,
+            f"program image {pbytes}B fits the {budget}B device budget: "
+            f"tenant-parallel bank over '{axis}' ({n} devices)")
+    axis = "clauses" if "clauses" in axes else axes[-1]
+    shards = 1
+    for s in range(2, n + 1):
+        if R % s:
+            continue
+        shards = s
+        if pbytes // s <= budget:
+            break
+    return PodPlan(
+        "clauses", axis, shards, tile, pbytes, budget,
+        f"program image {pbytes}B exceeds the {budget}B device budget: "
+        f"clause-shard R={R} over '{axis}' x{shards} "
+        f"({pbytes // shards}B per shard window)")
+
+
 def compile(tile: Optional[TileConfig] = None, backend: str = "auto",
             rand_bits: int = 16) -> DTMEngine:
     """Compile the one engine (the FPGA 'synthesis' analogue).  Everything

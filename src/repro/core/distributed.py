@@ -20,16 +20,71 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# shard_map import fallback, resolved ONCE for the whole codebase:
+# jax >= 0.7 exports it top-level (and renamed check_rep -> check_vma);
+# the 0.4.x line only has jax.experimental.shard_map.  Import the
+# resolved ``shard_map`` wrapper (or ``_shard_map``/``SM_KW``) from here
+# — do not re-duplicate this try/except at call sites.
 try:  # jax >= 0.7 top-level, else experimental
     from jax import shard_map as _shard_map
-    _SM_KW = {"check_vma": False}
-except ImportError:  # pragma: no cover
+    SM_KW = {"check_vma": False}
+except ImportError:  # pragma: no cover — jax < 0.7 (the pinned toolchain)
     from jax.experimental.shard_map import shard_map as _shard_map
-    _SM_KW = {"check_rep": False}
+    SM_KW = {"check_rep": False}
+_SM_KW = SM_KW      # historical alias (pre-hoist call sites)
 
 from . import feedback
 from .prng import LFSRState, PRNG, _seed_lanes
 from .types import COALESCED, TMConfig, TMState, VANILLA
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking off — the
+    TM collectives are explicit integer psums/gathers, and the 0.4.x
+    checker rejects the psum-into-replicated-output pattern they use."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **SM_KW)
+
+
+def compact_rows_psum(d: jax.Array, axes, frac: float) -> jax.Array:
+    """Alg-6 WIRE compaction of a row-sparse integer delta all-reduce.
+
+    ``d`` [rows, ...] per-shard integer deltas; ``axes`` the mesh axis
+    name(s) to reduce over; ``frac`` the static capacity fraction.  The
+    shards first psum the (tiny, [rows] int32) active-row bitmap; when
+    the UNION of active rows fits the capacity ``k = max(1, rows*frac)``,
+    only those rows cross the wire (gather → psum → scatter), shrinking
+    the dominant collective by ~1/frac at convergence (Fig 7: feedback
+    falls to ≲25 % of clauses after the first epochs).  Overflow falls
+    back to the dense psum — EXACT either way.  The branch predicate is
+    derived from the psum'd bitmap, so every shard takes the same
+    ``lax.cond`` branch (the collectives inside stay matched).
+
+    ``frac <= 0`` (or a capacity that cannot beat dense) short-circuits
+    to the plain dense psum."""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+
+    def _dense(x):
+        for a in axes:
+            x = jax.lax.psum(x, a)
+        return x
+
+    rows = d.shape[0]
+    k = max(1, int(rows * frac))
+    if frac <= 0 or k >= rows:
+        return _dense(d)
+    nz = (d != 0).any(axis=tuple(range(1, d.ndim))).astype(jnp.int32)
+    act = _dense(nz)
+    # union size, not the summed per-shard counts — rows active on
+    # several shards still occupy one compacted slot
+    n_act = (act > 0).sum()
+
+    def _compact(_):
+        ridx = jnp.nonzero(act > 0, size=k, fill_value=rows - 1)[0]
+        g = _dense(jnp.take(d, ridx, axis=0))
+        return jnp.zeros_like(d).at[ridx].set(g)
+
+    return jax.lax.cond(n_act <= k, _compact, lambda _: _dense(d), None)
 
 
 def _shard_prng(cfg: TMConfig, seed: int, idx) -> PRNG:
@@ -79,22 +134,7 @@ def dp_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
             cfg, st, prng, lit, lab, chunk)
         if use_int8:  # exact: |delta| <= 2·local_b <= 127
             d_ta = d_ta.astype(jnp.int8).astype(jnp.int32)
-        rows = d_ta.shape[0]
-        k = max(1, int(rows * compact_frac))
-        if compact_frac > 0 and k < rows:
-            act = jax.lax.psum((d_ta != 0).any(-1).astype(jnp.int32), axis)
-            n_act = act.sum()
-
-            def _compact(_):
-                ridx = jnp.nonzero(act > 0, size=k,
-                                   fill_value=rows - 1)[0]
-                g = jax.lax.psum(jnp.take(d_ta, ridx, axis=0), axis)
-                return jnp.zeros_like(d_ta).at[ridx].set(g)
-
-            d_ta = jax.lax.cond(n_act <= k, _compact,
-                                lambda _: jax.lax.psum(d_ta, axis), None)
-        else:
-            d_ta = jax.lax.psum(d_ta, axis)
+        d_ta = compact_rows_psum(d_ta, axis, compact_frac)
         d_w = jax.lax.psum(
             d_w if d_w is not None else jnp.zeros((1,), jnp.int32), axis)
         d_sel = jax.lax.psum(d_sel, axis)
@@ -118,7 +158,7 @@ def dp_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
 
 def pod_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
                    labels: jax.Array, mesh, seed: int,
-                   compact_k: int = 0):
+                   compact_k: int = 0, compact_frac: float = 0.0):
     """Production-mesh CoTM training step (the paper's technique scaled to
     the 256/512-chip mesh — §Perf Cell C).
 
@@ -136,7 +176,13 @@ def pod_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
     (gather → update → scatter-add).  EXACT whenever #selected ≤ K per
     round (tested); Fig 7 shows feedback falls to ≲25 % of clauses after
     the first epochs, so K = c_loc/4 loses nothing at convergence while
-    cutting the dominant elementwise+PRNG FLOPs by c_loc/K."""
+    cutting the dominant elementwise+PRNG FLOPs by c_loc/K.
+
+    ``compact_frac`` > 0 additionally WIRE-compacts the cross-data-shard
+    TA-delta psum through :func:`compact_rows_psum` (the same Alg-6 unit
+    applied to the collective instead of the compute): only the union of
+    active clause rows crosses the 'data'/'pod' links, with the exact
+    dense psum as the overflow fallback."""
     assert cfg.tm_type == COALESCED
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]
     dp = tuple(axes)
@@ -215,9 +261,10 @@ def pod_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,
         (_, d_ta, d_w, d_sel), _ = jax.lax.scan(
             per_point, z, (lit, lab, cl, sums, c_rand))
         # integer delta reduction across the batch shards (int8-exact wire
-        # when 2·B_loc ≤ 127 — DESIGN.md §2.7)
+        # when 2·B_loc ≤ 127 — DESIGN.md §2.7); the dominant [c_loc, 2f]
+        # TA-delta collective optionally rides the Alg-6 wire compaction
+        d_ta = compact_rows_psum(d_ta, dp, compact_frac)
         for a in dp:
-            d_ta = jax.lax.psum(d_ta, a)
             d_w = jax.lax.psum(d_w, a)
             d_sel = jax.lax.psum(d_sel, a)
             correct = jax.lax.psum(correct, a)

@@ -393,16 +393,27 @@ class DTMEngine:
             cl = cl.astype(jnp.int32)
         return cl * prog.cl_mask[None, :]
 
+    def _class_sums_raw(self, prog: DTMProgram, cl: jax.Array) -> jax.Array:
+        """Weight-matrix stage, UNPINNED: [B, R] clauses -> raw [B, H] sums.
+
+        Split out of :meth:`_class_sums` so clause-sharded execution can
+        ``psum`` the per-shard partial sums over the mesh axis FIRST and
+        pin the padded classes afterwards — pinning partials before the
+        all-reduce would sum the NEG_INF sentinels."""
+        if self.backend == "kernel":
+            return kops.class_sum_op(cl, prog.weights)
+        return jax.lax.dot_general(
+            cl, prog.weights,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)                          # [B,H]
+
+    def _pin_class_sums(self, prog: DTMProgram, sums: jax.Array) -> jax.Array:
+        """Fig 6d remainder pinning: padded class columns -> NEG_INF."""
+        return jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
+
     def _class_sums(self, prog: DTMProgram, cl: jax.Array) -> jax.Array:
         """Weight-matrix stage: [B, R] clauses -> pinned [B, H] sums."""
-        if self.backend == "kernel":
-            sums = kops.class_sum_op(cl, prog.weights)
-        else:
-            sums = jax.lax.dot_general(
-                cl, prog.weights,
-                dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.int32)                      # [B,H]
-        return jnp.where(prog.h_mask[None, :] == 1, sums, _NEG_INF_SUM)
+        return self._pin_class_sums(prog, self._class_sums_raw(prog, cl))
 
     # ------------------------------------------------------------------ #
     # inference (Eq 1 + Eq 2/3 on the padded grid)                        #
@@ -716,6 +727,272 @@ class DTMEngine:
                    labels: jax.Array):
         """plits [B, P, W] packed (from encode) conv train step."""
         return self._train_conv(prog, prng, plits, labels)
+
+    # ------------------------------------------------------------------ #
+    # clause-sharded stage bodies (run INSIDE shard_map — launch/pod.py)  #
+    # ------------------------------------------------------------------ #
+    # One over-VMEM machine spread over a ``clauses`` mesh axis: each
+    # shard holds a contiguous row window of the clause-indexed program
+    # leaves (ta [r_loc, L], inc [r_loc, W], cl_mask [r_loc], weight
+    # COLUMNS [H, r_loc]); everything else is replicated.  Bit-identity
+    # with the single-device trace rests on three invariants:
+    #   1. every shard draws the same FULL-width PRNG streams as a
+    #      single-device step (the PRNG is replicated) and slices its row
+    #      window — no stream position ever moves;
+    #   2. class sums are psum'd RAW and pinned after (Alg-3 selection is
+    #      column-independent given the global sums, so selection runs
+    #      shard-local on the sliced randoms/weights);
+    #   3. the TA-update stage keys its in-kernel streams at GLOBAL row
+    #      numbers via ``row0`` (kernels.ta_update) — zero cross-shard TA
+    #      traffic, matching the FPGA's per-slice BRAM locality (Fig 5).
+
+    def _shard_window(self, prog: DTMProgram, axis: str):
+        """(row0, r_loc, shards) of this shard's clause-row window."""
+        r_loc = prog.ta.shape[0]
+        shards = self.R // r_loc
+        row0 = jax.lax.axis_index(axis) * r_loc
+        return row0, r_loc, shards
+
+    def _infer_sharded_impl(self, prog: DTMProgram, plits: jax.Array,
+                            axis: str = "clauses",
+                            stage: str = "infer_sharded"):
+        """Clause-sharded inference body: local clause eval, one [B, H]
+        psum, Fig-6d pinning after the all-reduce.  Returns (global sums
+        [B, H] replicated, LOCAL clause columns [B, r_loc])."""
+        _, _, shards = self._shard_window(prog, axis)
+        cl = self._clause_outputs(prog, plits, eval_mode=True, stage=stage)
+        sums = jax.lax.psum(self._class_sums_raw(prog, cl), axis)
+        self._stage_paths[stage + "_shard"] = f"{axis}:{shards}"
+        return self._pin_class_sums(prog, sums), cl
+
+    def _infer_conv_sharded_impl(self, prog: DTMProgram, plits: jax.Array,
+                                 axis: str = "clauses",
+                                 stage: str = "infer_conv_sharded"):
+        B, P, W = plits.shape
+        _, r_loc, shards = self._shard_window(prog, axis)
+        cl_p = self._clause_outputs(prog, plits.reshape(B * P, W),
+                                    eval_mode=True, stage=stage)
+        cl_p = cl_p.reshape(B, P, r_loc) * prog.p_mask[None, :, None]
+        cl = cl_p.max(axis=1)                                  # [B, r_loc]
+        sums = jax.lax.psum(self._class_sums_raw(prog, cl), axis)
+        self._stage_paths[stage + "_shard"] = f"{axis}:{shards}"
+        return self._pin_class_sums(prog, sums), cl
+
+    def _train_sharded_impl(self, prog: DTMProgram, prng: PRNG,
+                            plits: jax.Array, labels: jax.Array,
+                            axis: str = "clauses",
+                            stage: str = "train_sharded"):
+        """Clause-sharded train-step body (flat programs).
+
+        Mirrors :meth:`_train_impl` stage for stage; the only collectives
+        are the [B, H] class-sum psum, the [B] vote psum (regression
+        programs) and the tiny stat gathers — TA/include/weight updates
+        stay entirely shard-local."""
+        B = plits.shape[0]
+        row0, r_loc, shards = self._shard_window(prog, axis)
+        lits = unpack_literals(plits, self.L)                      # [B, L]
+        n_cls = prog.h_mask.sum()
+        reg = prog.regression
+
+        # full-width draws, identical on every shard (invariant 1)
+        prng, c_rand = prng.bits((B,))
+        prng, sel_rand_full = prng.bits((2, B, self.R))
+        prng, seed_bits = prng.bits((2,))
+        ta_seed = ((seed_bits[0] << jnp.uint32(self.rand_bits))
+                   | seed_bits[1])
+        sel_rand = jax.lax.dynamic_slice_in_dim(sel_rand_full, row0,
+                                                r_loc, axis=2)
+
+        cls_lab = jnp.where(reg, 0, labels)
+        rn = (c_rand % (jnp.maximum(n_cls - 1, 1).astype(jnp.uint32))
+              ).astype(jnp.int32)
+        neg = jnp.where(rn < cls_lab, rn, rn + 1)                  # [B]
+
+        # front half: local clause eval -> psum raw sums -> pin -> local
+        # Alg-3 selection on the sliced randoms/weight columns
+        cl = self._clause_outputs(prog, plits, eval_mode=False, stage=stage)
+        sums_m = self._pin_class_sums(
+            prog, jax.lax.psum(self._class_sums_raw(prog, cl), axis))
+        wf = prog.w_frozen.astype(jnp.int32)
+        sel_lab = kops.round_select_op(
+            sums_m, cls_lab, 1, sel_rand[0], prog.weights, prog.cl_mask,
+            prog.T, wf, rand_bits=self.rand_bits)
+        sel_neg = kops.round_select_op(
+            sums_m, neg, 0, sel_rand[1], prog.weights, prog.cl_mask,
+            prog.T, wf, rand_bits=self.rand_bits)
+        correct = jnp.where(reg, 0,
+                            (jnp.argmax(sums_m, -1) == labels).sum())
+
+        # regression: global clipped vote count needs one [B] psum
+        votes = jnp.clip(jax.lax.psum(cl.sum(axis=-1), axis), 0, prog.T)
+        err = labels - votes
+        sel_reg = ((sel_rand[0].astype(jnp.int32) * (2 * prog.T))
+                   < (jnp.abs(err)[:, None] << self.rand_bits))
+        sel_reg = sel_reg.astype(jnp.int32) * prog.cl_mask[None, :]
+        abs_err = jnp.abs(err).sum()
+
+        w_lab = jnp.take(prog.weights, cls_lab, axis=0)        # [B, r_loc]
+        w_neg = jnp.take(prog.weights, neg, axis=0)
+        zero = jnp.zeros_like(sel_lab)
+        t1_lab = jnp.where(reg, sel_reg * (err > 0)[:, None],
+                           sel_lab * (w_lab >= 0))
+        t2_lab = jnp.where(reg, sel_reg * (err < 0)[:, None],
+                           sel_lab * (w_lab < 0))
+        t1_neg = jnp.where(reg, zero, sel_neg * (w_neg < 0))
+        t2_neg = jnp.where(reg, zero, sel_neg * (w_neg >= 0))
+        sel_lab = jnp.where(reg, sel_reg, sel_lab)
+        sel_neg = jnp.where(reg, zero, sel_neg)
+
+        # local TA update with GLOBAL stream keys (invariant 3)
+        lit2 = jnp.concatenate([lits, lits], axis=0)
+        cl2 = jnp.concatenate([cl, cl], axis=0)
+        t1 = jnp.concatenate([t1_lab, t1_neg], axis=0)
+        t2 = jnp.concatenate([t2_lab, t2_neg], axis=0)
+        ta_path = kops.select_ta_path(1)
+        self._stage_paths[stage + "_ta"] = ta_path
+        self._stage_paths[stage + "_shard"] = f"{axis}:{shards}"
+        row0_u = row0.astype(jnp.uint32)
+        if ta_path == kops.TA_COMPACT:
+            new_ta, new_inc = kops.ta_update_compact_op(
+                prog.ta, lit2, cl2, t1, t2, prog.l_mask, prog.inc,
+                seed=ta_seed, p_ta=prog.p_ta, rand_bits=self.rand_bits,
+                boost=prog.boost, n_states=prog.n_states,
+                backend=self._kb, group=1, row0=row0_u)
+        else:
+            new_ta, new_inc = kops.ta_update_op(
+                prog.ta, lit2, cl2, t1, t2, prog.l_mask, seed=ta_seed,
+                p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
+                n_states=prog.n_states, backend=self._kb,
+                emit_include=True, row0=row0_u)
+
+        new_w, stats = self._weights_and_stats_sharded(
+            prog, cl, sel_lab, sel_neg, cls_lab, neg, correct, abs_err,
+            axis)
+        new_prog = dataclasses.replace(
+            prog, ta=new_ta.astype(prog.ta.dtype), weights=new_w,
+            inc=new_inc)
+        return new_prog, prng, stats
+
+    def _train_conv_sharded_impl(self, prog: DTMProgram, prng: PRNG,
+                                 plits: jax.Array, labels: jax.Array,
+                                 axis: str = "clauses",
+                                 stage: str = "train_conv_sharded"):
+        """Clause-sharded Conv-TM train-step body (mirrors
+        :meth:`_train_conv_impl` with row-sliced draws and local patch
+        feedback).  The full-width ``ta_rand`` draw means transient
+        memory scales with the GLOBAL R — the price of bit-exact streams;
+        the conv TA stage is the engine's jnp stage anyway."""
+        B, P, W = plits.shape
+        L, R = self.L, self.R
+        row0, r_loc, shards = self._shard_window(prog, axis)
+        pl_dense = unpack_literals(plits, L)                   # [B, P, L]
+        n_cls = prog.h_mask.sum()
+
+        prng, c_rand = prng.bits((B,))
+        prng, patch_rand_f = prng.bits((B, P, R))
+        prng, sel_rand_f = prng.bits((2, B, R))
+        prng, ta_rand_f = prng.bits((2, B, R, L))
+        patch_rand = jax.lax.dynamic_slice_in_dim(patch_rand_f, row0,
+                                                  r_loc, axis=2)
+        sel_rand = jax.lax.dynamic_slice_in_dim(sel_rand_f, row0, r_loc,
+                                                axis=2)
+        ta_rand = jax.lax.dynamic_slice_in_dim(ta_rand_f, row0, r_loc,
+                                               axis=2)
+
+        rn = (c_rand % (jnp.maximum(n_cls - 1, 1).astype(jnp.uint32))
+              ).astype(jnp.int32)
+        neg = jnp.where(rn < labels, rn, rn + 1)                   # [B]
+
+        cl_p = self._clause_outputs(prog, plits.reshape(B * P, W),
+                                    eval_mode=False, stage=stage)
+        cl_p = cl_p.reshape(B, P, r_loc) * prog.p_mask[None, :, None]
+        cl = cl_p.max(axis=1)                                  # [B, r_loc]
+        sums = self._pin_class_sums(
+            prog, jax.lax.psum(self._class_sums_raw(prog, cl), axis))
+        correct = (jnp.argmax(sums, -1) == labels).sum()
+        self._stage_paths[stage + "_shard"] = f"{axis}:{shards}"
+
+        wf = prog.w_frozen.astype(jnp.int32)
+        sel_lab = kops.round_select_op(
+            sums, labels, 1, sel_rand[0], prog.weights, prog.cl_mask,
+            prog.T, wf, rand_bits=self.rand_bits)
+        sel_neg = kops.round_select_op(
+            sums, neg, 0, sel_rand[1], prog.weights, prog.cl_mask,
+            prog.T, wf, rand_bits=self.rand_bits)
+
+        noise = (patch_rand % jnp.uint32(997)).astype(jnp.int32)
+        patch_idx = jnp.argmax(cl_p * 1000 + noise, axis=1)    # [B, r_loc]
+        onehot = (patch_idx[:, :, None]
+                  == jnp.arange(P)[None, None, :]).astype(jnp.int8)
+        sel_lits = jnp.einsum("brp,bpl->brl", onehot, pl_dense,
+                              preferred_element_type=jnp.int32)
+
+        w_lab = jnp.take(prog.weights, labels, axis=0)         # [B, r_loc]
+        w_neg = jnp.take(prog.weights, neg, axis=0)
+        rounds = ((sel_lab * (w_lab >= 0), sel_lab * (w_lab < 0),
+                   ta_rand[0]),
+                  (sel_neg * (w_neg < 0), sel_neg * (w_neg >= 0),
+                   ta_rand[1]))
+
+        clb = (cl > 0)[:, :, None]
+        litb = sel_lits > 0
+        incb = (unpack_literals(prog.inc, L) > 0)[None]
+        cl_and_lit = clb & litb
+        inc2 = (clb & ~litb & ~incb).astype(jnp.int8)
+        delta = jnp.zeros((r_loc, L), jnp.int32)
+        for t1, t2, tr in rounds:
+            low = tr < prog.p_ta
+            inc1 = jnp.where(prog.boost, cl_and_lit, cl_and_lit & ~low)
+            d1 = (inc1.astype(jnp.int8)
+                  - (~cl_and_lit & low).astype(jnp.int8))
+            delta = (delta
+                     + jnp.einsum("br,brl->rl", t1.astype(jnp.int32),
+                                  d1.astype(jnp.int32))
+                     + jnp.einsum("br,brl->rl", t2.astype(jnp.int32),
+                                  inc2.astype(jnp.int32)))
+        delta = delta * prog.l_mask[None, :] * prog.cl_mask[:, None]
+        new_ta = jnp.clip(prog.ta.astype(jnp.int32) + delta, 0,
+                          prog.n_states - 1)
+
+        new_w, stats = self._weights_and_stats_sharded(
+            prog, cl, sel_lab, sel_neg, labels, neg, correct,
+            jnp.asarray(0, jnp.int32), axis)
+        new_prog = dataclasses.replace(
+            prog, ta=new_ta.astype(prog.ta.dtype), weights=new_w,
+            inc=_pack_include(new_ta, prog.n_states))
+        return new_prog, prng, stats
+
+    def _weights_and_stats_sharded(self, prog: DTMProgram, cl, sel_lab,
+                                   sel_neg, lab, neg, correct, abs_err,
+                                   axis: str):
+        """Sharded mirror of :meth:`_weights_and_stats`: the Alg-4 weight
+        nudges act on this shard's weight COLUMNS (local, exact); the
+        Alg-6 group-skip accounting needs the GLOBAL [R] selection bitmap
+        (r_loc may be smaller than a y-tile, so group occupancy cannot be
+        derived per shard) — one tiny [r_loc] all_gather per step."""
+        hr = jnp.arange(self.H, dtype=jnp.int32)
+        lab_oh = (lab[:, None] == hr[None, :]).astype(jnp.int32)   # [B,H]
+        neg_oh = (neg[:, None] == hr[None, :]).astype(jnp.int32)
+        contract_b = (((0,), (0,)), ((), ()))
+        d_w = (jax.lax.dot_general(lab_oh, sel_lab * cl, contract_b,
+                                   preferred_element_type=jnp.int32)
+               - jax.lax.dot_general(neg_oh, sel_neg * cl, contract_b,
+                                     preferred_element_type=jnp.int32))
+        new_w = jnp.where(prog.w_frozen, prog.weights,
+                          jnp.clip(prog.weights + d_w, -prog.w_clip,
+                                   prog.w_clip))
+
+        d_sel = (sel_lab + sel_neg).sum(axis=0)                # [r_loc]
+        d_sel_all = jax.lax.all_gather(d_sel, axis).reshape(-1)    # [R]
+        clm_all = jax.lax.all_gather(prog.cl_mask, axis).reshape(-1)
+        g = (d_sel_all > 0).astype(jnp.int32).reshape(
+            -1, self.tile.y).max(-1)
+        gmask = clm_all.reshape(-1, self.tile.y).max(-1)
+        stats = {"selected": d_sel_all.sum(),
+                 "active_groups": (g * gmask).sum(),
+                 "total_groups": gmask.sum(), "correct": correct,
+                 "abs_err": abs_err}
+        return new_w, stats
 
     # ------------------------------------------------------------------ #
     # session epoch executables (device-resident scan training)           #

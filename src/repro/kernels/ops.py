@@ -229,23 +229,31 @@ def packed_clause_eval_op(packed_literals, packed_include, eval_mode=False,
     "rand_bits", "backend", "emit_include", "yt", "xt"))
 def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
                  rand_bits=16, boost=True, n_states=256, backend="pallas",
-                 emit_include=False, yt=128, xt=256):
+                 emit_include=False, yt=128, xt=256, row0=0):
     """Batched TA update [C,L] -> [C,L] (pads C/L, strips on return).
 
-    ``seed``/``p_ta``/``boost``/``n_states`` may be traced scalars — a new
-    per-step seed or a DTMProgram swap never retraces.  ``ta`` may be any
-    integer dtype (the engine stores int8-narrowed states, 4 per word);
-    the returned states are int32 — callers narrow back.
+    ``seed``/``p_ta``/``boost``/``n_states``/``row0`` may be traced scalars
+    — a new per-step seed or a DTMProgram swap never retraces.  ``ta`` may
+    be any integer dtype (the engine stores int8-narrowed states, 4 per
+    word); the returned states are int32 — callers narrow back.
+
+    ``row0`` (default 0) offsets the PRNG stream keys' global row numbers:
+    a clause shard holding rows [row0, row0 + C) of a larger machine
+    updates them with exactly the streams a single-device launch would use
+    for those rows (clause-sharded execution, launch/pod.py).
 
     ``emit_include=True`` returns ``(new_ta, new_inc)`` where ``new_inc``
     is the packed include bitplane uint32 [C, ceil(L/32)] of the UPDATED
     states — the update stage maintains the engine's canonical bitplane
     incrementally, fused into this same jitted call, so no consumer ever
     re-thresholds the full [C, L] TA matrix afterwards."""
+    C = ta.shape[0]
     if backend == "ref":
+        rows = (jnp.asarray(row0, jnp.int32)
+                + jnp.arange(C, dtype=jnp.int32))
         new_ta = ref.ta_update_ref(ta, literals, clause_out, type1, type2,
                                    l_mask, seed, p_ta, rand_bits, boost,
-                                   n_states)
+                                   n_states, row_idx=rows)
     else:
         C, L = ta.shape
         # The PRNG stream is keyed on the padded row stride (ceil(L/xt)*xt);
@@ -259,7 +267,7 @@ def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
         lm = jnp.pad(l_mask, (0, (-L) % xt))
         out = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed,
                         p_ta=p_ta, rand_bits=rand_bits, boost=boost,
-                        n_states=n_states, yt=yt, xt=xt,
+                        n_states=n_states, yt=yt, xt=xt, row0=row0,
                         interpret=resolve_interpret())
         new_ta = out[:C, :L]
     if emit_include:
@@ -280,7 +288,7 @@ def _skip_caps(n_groups: int) -> tuple:
 def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
                          inc, seed, p_ta, rand_bits=16, boost=True,
                          n_states=256, backend="pallas", group=32,
-                         yt=128, xt=256):
+                         yt=128, xt=256, row0=0):
     """Clause-skip TA update (Alg 6 made real): bit-identical to
     ``ta_update_op(..., emit_include=True)`` but touches only ACTIVE
     clause groups.
@@ -302,6 +310,10 @@ def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
     ``inc`` must be the packed include bitplane OF ``ta`` (the engine's
     maintained invariant): skipped rows keep their bitplane words, updated
     rows are re-packed from the compacted output and scattered back.
+    ``row0`` (traced scalar, default 0) offsets every stream key's global
+    row number — a clause shard passes its first global row so its
+    compacted update reproduces the matching rows of a single-device
+    launch bit-for-bit (launch/pod.py).
     Returns ``(new_ta int32 [C, L], new_inc uint32 [C, W])``."""
     C, L = ta.shape
     g = yt if backend != "ref" else group
@@ -342,12 +354,13 @@ def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
                     jnp.take(cl_p, rows, axis=1),
                     jnp.take(t1_p, rows, axis=1),
                     jnp.take(t2_p, rows, axis=1), lm, seed, p_ta,
-                    rand_bits, boost, n_states, xt=xt, row_idx=rows)
+                    rand_bits, boost, n_states, xt=xt,
+                    row_idx=rows + jnp.asarray(row0, jnp.int32))
             else:
                 upd = ta_update_sparse(
                     ta_p, lit_p, cl_p, t1_p, t2_p, lm, gidx, seed=seed,
                     p_ta=p_ta, rand_bits=rand_bits, boost=boost,
-                    n_states=n_states, yt=g, xt=xt,
+                    n_states=n_states, yt=g, xt=xt, row0=row0,
                     interpret=resolve_interpret())
             # fill slots gather the last group (clamped, duplicate-safe:
             # they recompute identical values); scatter restores rows
@@ -359,13 +372,15 @@ def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
 
     def _dense_branch():
         if backend == "ref":
-            new_ta = ref.ta_update_ref(ta_p, lit_p, cl_p, t1_p, t2_p, lm,
-                                       seed, p_ta, rand_bits, boost,
-                                       n_states, xt=xt)
+            new_ta = ref.ta_update_ref(
+                ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed, p_ta, rand_bits,
+                boost, n_states, xt=xt,
+                row_idx=(jnp.asarray(row0, jnp.int32)
+                         + jnp.arange(C_pad, dtype=jnp.int32)))
         else:
             new_ta = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed,
                                p_ta=p_ta, rand_bits=rand_bits, boost=boost,
-                               n_states=n_states, yt=g, xt=xt,
+                               n_states=n_states, yt=g, xt=xt, row0=row0,
                                interpret=resolve_interpret())
         return new_ta, ref.pack_include(new_ta[:, :L], n_states)
 

@@ -54,19 +54,25 @@ def _tile_update(ci, li, ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref,
     ``ci``/``li`` are the tile's GLOBAL grid coordinates — the dense kernel
     passes its program ids, the sparse kernel passes the gathered tile's
     original row index so the counter-based PRNG streams are identical to
-    a dense launch (bit-exact clause-skip compaction)."""
+    a dense launch (bit-exact clause-skip compaction).  ``params_ref[0, 4]``
+    is a global ROW offset added on top (uint32, usually 0): a clause shard
+    holding rows [row0, row0 + C_loc) of a larger machine keys its streams
+    at the rows' global numbers, so a sharded update is bit-identical to
+    the same rows of a single-device launch."""
     # dynamic model scalars ride in SMEM — a DTMProgram swap or a fresh
     # per-step seed never retraces (cache-size == 1 semantics, §IV-D-a).
     seed = params_ref[0, 0]
     p_ta = params_ref[0, 1]
     boost = params_ref[0, 2] > 0
     n_states = params_ref[0, 3].astype(jnp.int32)
+    row0 = params_ref[0, 4]
     ta = ta_ref[...].astype(jnp.int32)                    # [yt, xt]
     include = ta >= (n_states >> 1)
 
     # counter-based per-element stream keyed on GLOBAL element index — the
     # result is tile-layout independent (ref.py reproduces it exactly).
-    gy = ci * yt + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 0)
+    gy = (ci * yt + row0
+          + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 0))
     gx = li * xt + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 1)
     state = _splitmix32(seed ^ (gy * jnp.uint32(n_l_tiles * xt) + gx))
 
@@ -130,7 +136,7 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
                      type2: jax.Array, l_mask: jax.Array,
                      tile_idx: jax.Array, seed, p_ta, rand_bits: int = 16,
                      boost=True, n_states=256, yt: int = 128, xt: int = 256,
-                     interpret: bool | None = None) -> jax.Array:
+                     row0=0, interpret: bool | None = None) -> jax.Array:
     """Compacted TA update over the ACTIVE clause tiles only (Alg 6 made
     real): ``tile_idx`` [k] int32 lists the row-tile indices to update and
     doubles as the scalar-prefetch index vector — every BlockSpec gathers
@@ -144,6 +150,10 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
     tile's ORIGINAL row index via the prefetched vector.  Duplicate
     entries in ``tile_idx`` (capacity-bucket fill slots) are harmless:
     they recompute the same tile with the same streams.
+
+    ``row0`` (traced uint32 scalar, default 0) offsets every stream key's
+    global row number — clause shards pass their first global row so the
+    sharded update matches a single-device launch bit-for-bit.
 
     ``interpret=None`` (default) resolves through
     ``ops.resolve_interpret()`` like every other kernel, so direct
@@ -161,7 +171,8 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
         jnp.asarray(p_ta, jnp.uint32),
         jnp.asarray(boost, jnp.uint32),
         jnp.asarray(n_states, jnp.uint32),
-    ]).reshape(1, 4)
+        jnp.asarray(row0, jnp.uint32),
+    ]).reshape(1, 5)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # (tile_idx, params)
         grid=grid,
@@ -194,16 +205,18 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
 def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
               type1: jax.Array, type2: jax.Array, l_mask: jax.Array,
               seed, p_ta, rand_bits: int = 16, boost=True,
-              n_states=256, yt: int = 128, xt: int = 256,
+              n_states=256, yt: int = 128, xt: int = 256, row0=0,
               interpret: bool = True) -> jax.Array:
     """Batched TA update.
 
     ta [C, L] any int dtype (the engine stores uint8-narrowed states, 4 per
     32-bit word; widened to int32 on entry), literals [B, L] {0,1},
     clause_out/type1/type2 [B, C] {0,1}, l_mask [L] {0,1} -> new ta [C, L]
-    int32.  ``seed``/``p_ta``/``boost``/``n_states`` may be traced scalars
-    (they ride in SMEM).  ``ops.ta_update_op(emit_include=True)`` fuses the
-    packed include-bitplane emission onto this kernel's output."""
+    int32.  ``seed``/``p_ta``/``boost``/``n_states``/``row0`` may be traced
+    scalars (they ride in SMEM).  ``row0`` offsets the PRNG stream keys'
+    global row numbers (clause-sharded execution — see ``_tile_update``).
+    ``ops.ta_update_op(emit_include=True)`` fuses the packed
+    include-bitplane emission onto this kernel's output."""
     C, L = ta.shape
     B = literals.shape[0]
     assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
@@ -213,7 +226,8 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
         jnp.asarray(p_ta, jnp.uint32),
         jnp.asarray(boost, jnp.uint32),
         jnp.asarray(n_states, jnp.uint32),
-    ]).reshape(1, 4)
+        jnp.asarray(row0, jnp.uint32),
+    ]).reshape(1, 5)
     return pl.pallas_call(
         functools.partial(_kernel, batch=B, n_l_tiles=grid[1], yt=yt, xt=xt,
                           rand_bits=rand_bits),
@@ -225,7 +239,7 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
             pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type1
             pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type2
             pl.BlockSpec((1, xt), lambda c, l: (0, l)),        # l_mask
-            pl.BlockSpec((1, 4), lambda c, l: (0, 0),
+            pl.BlockSpec((1, 5), lambda c, l: (0, 0),
                          memory_space=pltpu.SMEM),             # scalars
         ],
         out_specs=pl.BlockSpec((yt, xt), lambda c, l: (c, l)),

@@ -26,6 +26,20 @@ def make_host_mesh(model_axis: int = 1):
                          ("data", "model"))
 
 
+def make_tenant_mesh(n: int | None = None):
+    """1-D serving mesh over a ``tenants`` axis (launch/pod.py: D devices
+    each hosting a device-local slice of a stacked ProgramBank)."""
+    n = len(jax.devices()) if n is None else n
+    return jax.make_mesh((n,), ("tenants",))
+
+
+def make_clause_mesh(n: int | None = None):
+    """1-D mesh over a ``clauses`` axis (launch/pod.py: one over-VMEM TM's
+    clause rows spread across D devices)."""
+    n = len(jax.devices()) if n is None else n
+    return jax.make_mesh((n,), ("clauses",))
+
+
 @dataclasses.dataclass(frozen=True)
 class HardwareModel:
     """TPU v5e constants (per prompt §Roofline)."""
@@ -36,6 +50,9 @@ class HardwareModel:
     ici_link_bw: float = 50e9              # B/s per link (~)
     ici_links_per_chip: int = 4            # 2D torus on v5e
     hbm_bytes: float = 16e9
+    vmem_bytes: float = 128e6              # per-core VMEM (pod planner
+    #                                        budget: a program whose RAM
+    #                                        image exceeds it clause-shards)
 
     def collective_bw(self) -> float:
         """Aggregate per-chip ICI bandwidth available to a collective."""

@@ -1,0 +1,281 @@
+"""Pod-scale sharded TM execution: tenant-parallel banks + clause-sharded
+giant machines over a device mesh.
+
+The paper's single-chip story is run-time reconfiguration: one synthesised
+datapath, many models, swap = RAM rewrite.  This module is the mesh-level
+continuation (ROADMAP Open item 1) in the MATADOR spirit (arXiv 2403.10538
+— automated per-deployment mapping): ONE compiled engine per device and a
+per-mesh *plan* for how work maps onto devices, chosen by
+:func:`repro.api.plan_for` from the ``launch/tm_perf`` roofline model.
+
+Two orthogonal shardings, both lowering through the UNCHANGED
+:class:`repro.core.dtm.DTMEngine` stage bodies:
+
+* **tenant-parallel** (:class:`PodBank`, mesh axis ``tenants``) — a
+  stacked :class:`repro.api.ProgramBank` is ``shard_map``-ped over its
+  program axis, so D devices each run a device-local K-slot bank: K·D
+  tenants execute concurrently with ZERO collectives.  Hot-swap survives
+  sharding: ``swap_in``/``swap_out`` are global row scatters/gathers that
+  XLA routes to the owning device (the per-tenant RAM rewrite, now
+  addressed through the :class:`TMServer` routing table).
+
+* **clause-sharded** (:class:`ShardedTM`, mesh axis ``clauses``) — one
+  over-VMEM machine's clause rows are spread across shards (TA plane
+  ``[r_loc, L]``, include ``[r_loc, W]``, weight COLUMNS ``[H, r_loc]``);
+  clause evaluation and TA update stay device-local (the FPGA's
+  per-slice BRAM locality, paper Fig 5) and only the tiny ``[B, H]``
+  class sums (+ the Alg-6 group-stat gathers) cross the wire.  Training
+  and inference are BIT-IDENTICAL to the single-device trace — see the
+  invariants comment over ``DTMEngine._train_sharded_impl``; the
+  cross-data-shard TA traffic of ``core.distributed.pod_train_step``
+  additionally rides the PR-5 Alg-6 wire compaction
+  (``compact_rows_psum`` — exact dense fallback on overflow).
+
+Run locally on N fake host devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (set BEFORE jax
+imports) — the recipe the ``mesh`` CI leg and tests/test_pod.py use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import api
+from repro.api import ProgramBank
+from repro.core.distributed import shard_map
+from repro.core.dtm import DTMEngine, DTMProgram
+from repro.core.prng import PRNG
+
+
+def mesh_axis_size(mesh, axis: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+# ---------------------------------------------------------------------------
+# program partition specs (clause sharding)
+# ---------------------------------------------------------------------------
+
+def program_specs(axis: str = "clauses") -> DTMProgram:
+    """Per-leaf PartitionSpecs of a clause-sharded :class:`DTMProgram`
+    (a DTMProgram pytree whose leaves are specs — usable directly as a
+    ``shard_map`` in/out spec tree and with :func:`shard_program`).
+
+    Clause-indexed leaves shard their row axis; the weight matrix shards
+    its clause COLUMNS; everything else (literal/class masks, scalar
+    hyper-params) is replicated."""
+    return DTMProgram(
+        ta=P(axis, None), weights=P(None, axis), cl_mask=P(axis),
+        l_mask=P(), h_mask=P(), w_frozen=P(), T=P(), p_ta=P(), boost=P(),
+        n_states=P(), w_clip=P(), regression=P(), p_mask=P(),
+        inc=P(axis, None))
+
+
+def shard_program(prog: DTMProgram, mesh,
+                  axis: str = "clauses") -> DTMProgram:
+    """Lay a lowered program out clause-sharded over ``mesh``.  The padded
+    clause count R must divide evenly by the axis size (it does for the
+    engine's y-tiled padding and power-of-two meshes)."""
+    shards = mesh_axis_size(mesh, axis)
+    assert prog.ta.shape[0] % shards == 0, (prog.ta.shape, shards)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        prog, program_specs(axis))
+
+
+def gather_program(prog: DTMProgram) -> DTMProgram:
+    """Fetch a (possibly sharded) program back to single-device leaves."""
+    return jax.tree.map(lambda x: jnp.asarray(jax.device_get(x)), prog)
+
+
+# ---------------------------------------------------------------------------
+# ShardedTM — one over-VMEM machine, clause rows spread over the mesh
+# ---------------------------------------------------------------------------
+
+class ShardedTM:
+    """Clause-sharded train/infer executor for ONE over-budget program.
+
+    Wraps the engine's ``_*_sharded_impl`` stage bodies in ``shard_map``
+    over ``axis`` and jits the result; literals/labels/PRNG are
+    replicated (invariant: every shard draws the full-width streams),
+    program leaves follow :func:`program_specs`.  Outputs: class sums
+    replicated, the clause matrix re-assembled ``[B, R]`` in global row
+    order, train stats replicated (they are all-reduced in-impl).
+    """
+
+    def __init__(self, engine: DTMEngine, mesh, axis: str = "clauses",
+                 conv: bool = False):
+        self.engine = engine
+        self.mesh = mesh
+        self.axis = axis
+        self.conv = conv
+        self.shards = mesh_axis_size(mesh, axis)
+        assert engine.R % self.shards == 0, (engine.R, self.shards)
+        pspec, rep = program_specs(axis), P()
+        infer_body = functools.partial(
+            engine._infer_conv_sharded_impl if conv
+            else engine._infer_sharded_impl, axis=axis)
+        train_body = functools.partial(
+            engine._train_conv_sharded_impl if conv
+            else engine._train_sharded_impl, axis=axis)
+        self._infer = jax.jit(shard_map(
+            infer_body, mesh, in_specs=(pspec, rep),
+            out_specs=(rep, P(None, axis))))
+        self._train = jax.jit(shard_map(
+            train_body, mesh, in_specs=(pspec, rep, rep, rep),
+            out_specs=(pspec, rep, rep)))
+
+    def shard(self, prog: DTMProgram) -> DTMProgram:
+        return shard_program(prog, self.mesh, self.axis)
+
+    def infer(self, prog: DTMProgram, plits: jax.Array):
+        """(sums [B, H], clause [B, R]) — same contract as engine.infer."""
+        return self._infer(prog, plits)
+
+    def train_step(self, prog: DTMProgram, prng: PRNG, plits: jax.Array,
+                   labels: jax.Array):
+        """Same contract as ``engine.train_step`` / ``train_conv`` —
+        bit-identical outputs, clause-sharded execution."""
+        return self._train(prog, prng, plits, labels)
+
+
+# ---------------------------------------------------------------------------
+# PodBank — tenant-parallel stacked serving over a ``tenants`` axis
+# ---------------------------------------------------------------------------
+
+class PodBank(ProgramBank):
+    """A :class:`repro.api.ProgramBank` sharded over a ``tenants`` mesh
+    axis: D devices each execute a device-local ``K/D``-slot bank in the
+    SAME launch (``shard_map`` over the stacked program axis — zero
+    collectives; per-device work is the single-device bank executable).
+
+    Built by :func:`pod_stack`; K must be a multiple of the axis size
+    (pad the roster — :class:`repro.launch.serve_tm.TMServer` does).
+    Slot semantics (``swap_in``/``swap_out``/``unstack``) are inherited:
+    global row scatters/gathers that XLA routes to the owning device.
+    """
+
+    def __init__(self, engine: DTMEngine, progs: DTMProgram, k: int,
+                 mesh, axis: str = "tenants", conv: bool = False,
+                 prngs: Optional[PRNG] = None):
+        super().__init__(engine, progs, k, conv=conv, prngs=prngs)
+        self.mesh = mesh
+        self.axis = axis
+        self.devices = mesh_axis_size(mesh, axis)
+        assert k % self.devices == 0, (
+            f"bank slots ({k}) must be a multiple of the '{axis}' axis "
+            f"size ({self.devices}) — pad the roster")
+        sh = P(axis)
+        infer_sm = shard_map(
+            engine._infer_conv_bank_impl if conv
+            else engine._infer_bank_impl,
+            mesh, in_specs=(sh, sh), out_specs=(sh, sh))
+        self._pod_train = jax.jit(shard_map(
+            engine._train_bank_impl, mesh,
+            in_specs=(sh, sh, sh, sh), out_specs=(sh, sh, sh)),
+            donate_argnums=(0, 1))
+
+        def _predict_body(progs_, lits_):
+            sums, cl = engine._infer_bank_impl(progs_, lits_)
+            preds = jnp.argmax(sums, axis=-1).astype(jnp.int32)
+            votes = jnp.clip(cl.sum(axis=-1), 0, progs_.T[:, None])
+            return preds, votes.astype(jnp.int32)
+
+        predict_sm = shard_map(
+            _predict_body, mesh, in_specs=(sh, sh), out_specs=(sh, sh))
+        # stacked-array and K-tuple entry points; the tuple variants
+        # stack IN-TRACE (like the engine's *_bank_list executables) so
+        # the serving flush pays one compiled launch, not K eager
+        # stacks + a host-side reshard
+        self._pod_infer = jax.jit(infer_sm)
+        self._pod_infer_list = jax.jit(
+            lambda progs_, *ls: infer_sm(progs_, jnp.stack(ls)))
+        self._pod_predict = jax.jit(predict_sm)
+        self._pod_predict_list = jax.jit(
+            lambda progs_, *ls: predict_sm(progs_, jnp.stack(ls)))
+
+    def infer(self, lits):
+        if isinstance(lits, (list, tuple)):
+            return self._pod_infer_list(self.progs, *lits)
+        return self._pod_infer(self.progs, lits)
+
+    def predict(self, lits):
+        assert not self.conv, "conv banks decode host-side (use infer)"
+        if isinstance(lits, (list, tuple)):
+            return self._pod_predict_list(self.progs, *lits)
+        return self._pod_predict(self.progs, lits)
+
+    def train(self, lits, labels) -> dict:
+        assert not self.conv, "conv banks are inference-only"
+        assert self.prngs is not None, (
+            "bank built without PRNGs; pass prngs= to pod_stack")
+        if isinstance(lits, (list, tuple)):
+            lits = jnp.stack(lits)
+        if isinstance(labels, (list, tuple)):
+            labels = jnp.stack(labels)
+        self.progs, self.prngs, stats = self._pod_train(
+            self.progs, self.prngs, lits, labels)
+        return stats
+
+
+def pod_stack(programs: Sequence[DTMProgram], engine: DTMEngine, mesh,
+              axis: str = "tenants", conv: bool = False,
+              prngs: Optional[Sequence[PRNG]] = None) -> PodBank:
+    """:func:`repro.api.stack`, pod edition: stack K same-tile programs
+    and lay the bank out over the ``axis`` mesh axis (leading program
+    axis sharded, ``K/D`` slots resident per device)."""
+    devices = mesh_axis_size(mesh, axis)
+    assert len(programs) % devices == 0, (
+        f"bank slots ({len(programs)}) must be a multiple of the "
+        f"'{axis}' axis size ({devices}) — pad the roster")
+    base = api.stack(programs, engine, conv=conv, prngs=prngs)
+    sharding = NamedSharding(mesh, P(axis))
+    progs = jax.tree.map(lambda x: jax.device_put(x, sharding), base.progs)
+    sprngs = (None if base.prngs is None else
+              jax.tree.map(lambda x: jax.device_put(x, sharding),
+                           base.prngs))
+    return PodBank(engine, progs, k=base.k, mesh=mesh, axis=axis,
+                   conv=conv, prngs=sprngs)
+
+
+# ---------------------------------------------------------------------------
+# Route — the TMServer routing-table entry (tenant -> device, slot)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """Where one tenant's program physically lives: bank slot ``index``
+    (the global stacked row) = device ``device`` (position along the
+    tenants axis) × slots-per-device + ``slot`` (device-local row)."""
+
+    device: int
+    slot: int
+    index: int
+    conv: bool
+
+
+def routing_table(names: Sequence[Optional[str]], devices: int,
+                  conv: bool) -> Dict[str, Route]:
+    """Global tenant → (device, slot) map for one padded bank roster
+    (``None`` entries are pad slots and get no route).  Contiguous row
+    blocks per device — exactly the ``P(axis)`` layout of the stacked
+    program axis."""
+    spd = len(names) // max(devices, 1)
+    table = {}
+    for k, name in enumerate(names):
+        if name is None:
+            continue
+        table[name] = Route(device=k // spd, slot=k % spd, index=k,
+                            conv=conv)
+    return table
+
+
+def pad_roster(names: List[str], devices: int) -> List[Optional[str]]:
+    """Pad a tenant roster with ``None`` to a multiple of the device
+    count (pad slots replay a real program; outputs are dropped)."""
+    pad = (-len(names)) % max(devices, 1)
+    return list(names) + [None] * pad

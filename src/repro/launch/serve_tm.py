@@ -64,6 +64,7 @@ from repro import api
 from repro.api import ProgramBank, TM, TMSpec
 from repro.core.dtm import DTMEngine, DTMProgram
 from repro.core.prng import PRNG
+from repro.launch import pod as _pod
 
 
 @dataclasses.dataclass
@@ -89,11 +90,24 @@ class TMServer:
     ``batch_slot`` is the fixed request batch the executables are traced
     for; incoming batches are padded up to it (and the padding stripped),
     so heterogeneous request sizes never retrace the engine.
+
+    Pod mode (``mesh=`` with > 1 device): the resident banks become
+    tenant-parallel :class:`repro.launch.pod.PodBank` s sharded over
+    ``tenants_axis`` — D devices each serve a device-local slice of the
+    roster in the same stacked launch.  The server owns the global
+    tenant → (device, slot) map (:meth:`routing_table`); per-tenant
+    hot-swap stays a global-row scatter/gather that XLA routes to the
+    owning device (:meth:`swap_in` / :meth:`swap_out`).
     """
 
-    def __init__(self, engine: DTMEngine, batch_slot: int = 32):
+    def __init__(self, engine: DTMEngine, batch_slot: int = 32,
+                 mesh=None, tenants_axis: str = "tenants"):
         self.engine = engine
         self.batch_slot = batch_slot
+        self.mesh = mesh
+        self.tenants_axis = tenants_axis
+        self.pod_devices = (_pod.mesh_axis_size(mesh, tenants_axis)
+                            if mesh is not None else 1)
         self.tenants: Dict[str, _Tenant] = {}
         self.active: Optional[str] = None
         self.swaps = 0
@@ -226,13 +240,25 @@ class TMServer:
     def _bank_for(self, conv: bool) -> Tuple[List[str], ProgramBank]:
         """Resident ProgramBank over ALL tenants of a stage family (flat
         vs conv), built once per roster; per-tenant updates are scattered
-        in via ``swap_in`` rather than restacking."""
+        in via ``swap_in`` rather than restacking.  Pod mode instead
+        builds a tenant-sharded :class:`repro.launch.pod.PodBank` (the
+        roster padded to a multiple of the device count — pad slots
+        replay slot 0's program and their outputs are dropped)."""
         if conv not in self._banks:
             names = self._group_names(conv)
-            bank = api.stack([self.tenants[n].program for n in names],
-                             self.engine, conv=conv)
+            if self.mesh is not None and self.pod_devices > 1:
+                padded = _pod.pad_roster(names, self.pod_devices)
+                progs = [self.tenants[n].program if n is not None
+                         else self.tenants[names[0]].program
+                         for n in padded]
+                bank = _pod.pod_stack(progs, self.engine, self.mesh,
+                                      axis=self.tenants_axis, conv=conv)
+                names = padded
+            else:
+                bank = api.stack([self.tenants[n].program for n in names],
+                                 self.engine, conv=conv)
             self._banks[conv] = (names, bank)
-            self._dirty -= set(names)
+            self._dirty -= set(n for n in names if n is not None)
         names, bank = self._banks[conv]
         if self._dirty:
             for n in list(self._dirty):
@@ -312,9 +338,45 @@ class TMServer:
         names, bank = self._bank_for(conv)
         progs = {}
         for k, name in enumerate(names):
+            if name is None:          # pod-mode roster pad slot
+                continue
             progs[name] = bank.swap_out(k)
             self.tenants[name].program = progs[name]
         return progs
+
+    # ---- pod routing (tenant -> device, slot) ------------------------------
+    def routing_table(self) -> Dict[str, "_pod.Route"]:
+        """Global tenant → (device, slot) map over BOTH stage-family
+        banks (flat + conv), rebuilt-on-demand alongside the banks.  The
+        slot index is the stacked program row; with the bank's leading
+        axis laid out ``P(tenants)``, contiguous row blocks of size
+        ``len(roster)/D`` live per device — single-device servers route
+        everything to device 0."""
+        table: Dict[str, _pod.Route] = {}
+        for conv in (False, True):
+            if not self._group_names(conv):
+                continue
+            names, _ = self._bank_for(conv)
+            table.update(_pod.routing_table(names, self.pod_devices, conv))
+        return table
+
+    def swap_in(self, name: str, program: DTMProgram) -> "_pod.Route":
+        """Hot-swap a tenant's program THROUGH the routing table: update
+        the tenant record and scatter the new program into its bank slot
+        on the owning device.  Returns the route it resolved to."""
+        route = self.routing_table()[name]
+        self.tenants[name].program = program
+        _, bank = self._bank_for(route.conv)
+        bank.swap_in(route.index, program)
+        self._dirty.discard(name)
+        return route
+
+    def swap_out(self, name: str) -> DTMProgram:
+        """Read a tenant's program back out of its routed bank slot."""
+        route = self.routing_table()[name]
+        prog = self._bank_for(route.conv)[1].swap_out(route.index)
+        self.tenants[name].program = prog
+        return prog
 
     def program_nbytes(self, name: str) -> int:
         """Hot-swap payload of one tenant: total bytes of its DTMProgram
@@ -336,6 +398,7 @@ class TMServer:
     def stats(self) -> dict:
         return {"tenants": sorted(self.tenants), "requests": self.requests,
                 "swaps": self.swaps, "cache": self.engine.cache_report(),
+                "pod_devices": self.pod_devices,
                 "stacked_launches": self.stacked_launches,
                 "coalesced_requests": self.coalesced_requests,
                 "program_nbytes": {n: self.program_nbytes(n)

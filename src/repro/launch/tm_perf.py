@@ -57,6 +57,38 @@ def train_front_costs(B: int, L: int, C: int, H: int) -> dict:
     }
 
 
+def program_bytes(L: int, C: int, H: int, ta_bits: int = 8) -> int:
+    """RAM image of one lowered DTMProgram at PADDED geometry (L literals,
+    C clause rows, H classes) — the quantity the pod planner compares
+    against the per-device VMEM budget: uint8 TA plane [C, L] (int32 iff
+    ta_bits > 8), packed include bitplane [C, ceil(L/32)] uint32, weight
+    matrix [H, C] int32, plus the int32 row/column/class masks."""
+    W = (L + 31) // 32
+    ta = C * L * (1 if ta_bits <= 8 else 4)
+    inc = C * W * 4
+    weights = H * C * 4
+    masks = (C + L + H) * 4
+    return ta + inc + weights + masks
+
+
+def clause_shard_step_s(B: int, L: int, C: int, H: int,
+                        shards: int) -> dict:
+    """Roofline estimate of one clause-sharded train step: each shard
+    runs the :func:`train_front_costs` fused datapath on its C/shards row
+    window, then the [B, H] int32 class sums cross the ICI once
+    (ring all-reduce moves ``2·(s-1)/s`` of the buffer per chip)."""
+    local = train_front_costs(B, L, max(C // shards, 1), H)
+    psum_bytes = (0 if shards <= 1
+                  else 2 * (shards - 1) / shards * B * H * 4)
+    ici_s = psum_bytes / V5E.collective_bw()
+    return {
+        "local_s": local["fused_roofline_s"],
+        "psum_bytes": psum_bytes,
+        "ici_s": ici_s,
+        "step_s": local["fused_roofline_s"] + ici_s,
+    }
+
+
 def clause_eval_bytes(B: int, L: int, C: int, packed: bool) -> dict:
     """Bytes moved by one clause-evaluation call (the edge-regime hot
     loop's memory bill — paper Fig 4-6's frugal-BRAM argument).

@@ -61,20 +61,16 @@ def test_compressed_psum_shardmap():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.runtime.compression import compressed_psum
-        try:
-            from jax import shard_map
-            kw = {"check_vma": False}
-        except ImportError:
-            from jax.experimental.shard_map import shard_map
-            kw = {"check_rep": False}
+        # the version-portable wrapper distributed.py resolves ONCE
+        from repro.core.distributed import shard_map
         mesh = jax.make_mesh((8,), ("data",))
         x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 128)),
                         jnp.float32)
         def f(xl):
             y, resid = compressed_psum(xl, "data")
             return y, resid
-        g = shard_map(f, mesh=mesh, in_specs=(P("data"),),
-                      out_specs=(P("data"), P("data")), **kw)
+        g = shard_map(f, mesh, in_specs=(P("data"),),
+                      out_specs=(P("data"), P("data")))
         y, resid = g(x)
         want = np.broadcast_to(np.asarray(x).sum(0, keepdims=True), (8, 128))
         got = np.asarray(y)

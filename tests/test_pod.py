@@ -1,0 +1,251 @@
+"""Pod-scale sharded serving (launch/pod.py) on a forced host mesh.
+
+These tests need >= 4 devices; run them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the ``mesh`` CI
+leg does).  On a plain single-device host they skip.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.prng import PRNG
+from repro.launch import pod
+from repro.launch.mesh import make_clause_mesh, make_tenant_mesh
+from repro.launch.serve_tm import TMServer, demo_batch, demo_specs
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+KINDS = ("cotm", "vanilla", "conv", "regression", "head")
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.fixture(scope="module")
+def roster():
+    specs = demo_specs(small=True)
+    engine = api.compile(api.tile_for(*specs.values()))
+    return specs, engine
+
+
+def _encoded_batch(engine, spec, batch, seed=3):
+    x = demo_batch(spec, batch, seed=seed)
+    return engine.encode(spec, jnp.asarray(x))
+
+
+def _labels(spec, batch):
+    if spec.kind == "regression":
+        return spec.encode_labels(np.linspace(0, 1, batch))
+    return jnp.asarray(np.arange(batch) % spec.classes, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# clause-sharded bit-identity (tentpole acceptance: all five TM kinds)
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("kind", KINDS)
+def test_clause_sharded_train_infer_bit_identical(roster, kind):
+    """Clause-sharded train + infer on a 4-shard mesh vs the
+    single-device engine stages: every program leaf, the class sums, the
+    clause matrix and the step stats must match bit-for-bit."""
+    specs, engine = roster
+    spec = specs[kind]
+    conv = spec.kind == "conv"
+    mesh = make_clause_mesh(4)
+    stm = pod.ShardedTM(engine, mesh, conv=conv)
+
+    prog = engine.lower(spec, jax.random.PRNGKey(11))
+    prng = PRNG.create(spec.tm_config(), 12)
+    lits = _encoded_batch(engine, spec, 16)
+    lab = _labels(spec, 16)
+
+    step = engine.train_conv if conv else engine.train_step
+    p_ref, r_ref, st_ref = step(prog, prng, lits, lab)
+    p_sh, r_sh, st_sh = stm.train_step(stm.shard(prog), prng, lits, lab)
+
+    assert _trees_equal(p_ref, p_sh)
+    assert _trees_equal(r_ref, r_sh)
+    for k in st_ref:
+        assert int(st_ref[k]) == int(st_sh[k]), (kind, k)
+
+    infer = engine.infer_conv if conv else engine.infer
+    s_ref, c_ref = infer(p_ref, lits)
+    s_sh, c_sh = stm.infer(p_sh, lits)
+    assert np.array_equal(np.asarray(s_ref), np.asarray(s_sh))
+    assert np.array_equal(np.asarray(c_ref), np.asarray(c_sh))
+    # the sharding decision is observable per stage
+    paths = engine.cache_report()["path_per_stage"]
+    stage = "train_conv_sharded" if conv else "train_sharded"
+    assert paths[stage + "_shard"] == "clauses:4"
+
+
+@needs_mesh
+def test_clause_sharded_multi_step_training(roster):
+    """Sharded training stays on the single-device trajectory over
+    several steps (PRNG stream positions never diverge)."""
+    specs, engine = roster
+    spec = specs["cotm"]
+    mesh = make_clause_mesh(4)
+    stm = pod.ShardedTM(engine, mesh)
+    p_ref = engine.lower(spec, jax.random.PRNGKey(0))
+    p_sh = stm.shard(p_ref)
+    r_ref = r_sh = PRNG.create(spec.tm_config(), 5)
+    for step in range(4):
+        lits = _encoded_batch(engine, spec, 16, seed=step)
+        lab = _labels(spec, 16)
+        p_ref, r_ref, _ = engine.train_step(p_ref, r_ref, lits, lab)
+        p_sh, r_sh, _ = stm.train_step(p_sh, r_sh, lits, lab)
+    assert _trees_equal(p_ref, p_sh)
+
+
+# ---------------------------------------------------------------------------
+# tenant-parallel PodBank
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+def test_pod_bank_matches_program_bank(roster):
+    specs, engine = roster
+    spec = specs["cotm"]
+    mesh = make_tenant_mesh(4)
+    progs = [engine.lower(spec, jax.random.PRNGKey(i)) for i in range(8)]
+    prngs = [PRNG.create(spec.tm_config(), 20 + i) for i in range(8)]
+    lits = tuple(_encoded_batch(engine, spec, 16, seed=i)
+                 for i in range(8))
+    labs = jnp.stack([_labels(spec, 16)] * 8)
+
+    bank = api.stack(progs, engine, prngs=prngs)
+    pbank = pod.pod_stack(progs, engine, mesh, prngs=prngs)
+
+    s_a, c_a = bank.infer(jnp.stack(lits))
+    s_b, c_b = pbank.infer(lits)
+    assert np.array_equal(np.asarray(s_a), np.asarray(s_b))
+    assert np.array_equal(np.asarray(c_a), np.asarray(c_b))
+
+    pr_a, v_a = bank.predict(lits)
+    pr_b, v_b = pbank.predict(lits)
+    assert np.array_equal(np.asarray(pr_a), np.asarray(pr_b))
+    assert np.array_equal(np.asarray(v_a), np.asarray(v_b))
+
+    st_a = bank.train(jnp.stack(lits), labs)
+    st_b = pbank.train(lits, labs)
+    for k in st_a:
+        assert np.array_equal(np.asarray(st_a[k]), np.asarray(st_b[k])), k
+    for k in range(8):
+        assert _trees_equal(bank.swap_out(k), pbank.swap_out(k))
+
+
+@needs_mesh
+def test_pod_bank_needs_divisible_roster(roster):
+    specs, engine = roster
+    spec = specs["cotm"]
+    mesh = make_tenant_mesh(4)
+    progs = [engine.lower(spec, jax.random.PRNGKey(i)) for i in range(3)]
+    with pytest.raises(AssertionError, match="multiple"):
+        pod.pod_stack(progs, engine, mesh)
+
+
+# ---------------------------------------------------------------------------
+# routing table (satellite: property test)
+# ---------------------------------------------------------------------------
+
+def test_routing_table_properties():
+    """Pure-function properties, any device count: every non-pad tenant
+    gets exactly one route; routes are unique (no slot collisions);
+    device/slot reconstruct the stacked row index."""
+    rng = np.random.default_rng(0)
+    for devices in (1, 2, 4):
+        for n in (1, 3, 4, 7, 16):
+            names = [f"t{i}" for i in range(n)]
+            rng.shuffle(names)
+            padded = pod.pad_roster(names, devices)
+            assert len(padded) % devices == 0
+            table = pod.routing_table(padded, devices, conv=False)
+            assert set(table) == set(names)          # all reachable
+            idxs = [r.index for r in table.values()]
+            assert len(set(idxs)) == len(idxs)       # no collisions
+            spd = len(padded) // devices
+            for r in table.values():
+                assert 0 <= r.device < devices
+                assert 0 <= r.slot < spd
+                assert r.device * spd + r.slot == r.index
+
+
+@needs_mesh
+def test_server_routing_and_swap_round_trip(roster):
+    """TMServer pod mode: every registered tenant is reachable through
+    the routing table, tenants spread across all 4 devices, and
+    swap_out → swap_in round-trips bit-exactly through the routed bank
+    slots."""
+    specs, engine = roster
+    srv = TMServer(engine, batch_slot=16, mesh=make_tenant_mesh(4))
+    for name, spec in specs.items():
+        srv.register(name, spec, seed=2)
+    table = srv.routing_table()
+    assert set(table) == set(specs)
+    flat = {n for n, r in table.items() if not r.conv}
+    assert {table[n].device for n in flat} == {0, 1, 2, 3}
+    for name in specs:
+        original = srv.tenants[name].program
+        out = srv.swap_out(name)
+        assert _trees_equal(original, out)
+        srv.swap_in(name, out)
+        assert _trees_equal(out, srv.swap_out(name))
+
+
+@needs_mesh
+def test_server_pod_flush_matches_single_device(roster):
+    """The pod server's stacked flush (4-device PodBank, padded roster)
+    returns the same predictions as a single-device stacked server —
+    including after an on-line training request dirties a slot."""
+    specs, engine = roster
+    srv_pod = TMServer(engine, batch_slot=16, mesh=make_tenant_mesh(4))
+    srv_ref = TMServer(api.compile(engine.tile), batch_slot=16)
+    for name, spec in specs.items():
+        srv_pod.register(name, spec, seed=7)
+        srv_ref.register(name, spec, seed=7)
+    for round_seed in (3, 5):
+        for name, spec in specs.items():
+            x = demo_batch(spec, 16, seed=round_seed)
+            srv_pod.enqueue(name, x)
+            srv_ref.enqueue(name, x)
+        out_pod, out_ref = srv_pod.flush(), srv_ref.flush()
+        for name in specs:
+            assert np.array_equal(out_pod[name], out_ref[name]), name
+        # dirty one slot between rounds (exercises the pod rescatter)
+        x = demo_batch(specs["cotm"], 16)
+        y = np.zeros(16, np.int32)
+        srv_pod.train("cotm", x, y)
+        srv_ref.train("cotm", x, y)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_plan_for_picks_mode(roster):
+    specs, engine = roster
+    mesh = (make_tenant_mesh(4) if jax.device_count() >= 4
+            else make_tenant_mesh(1))
+    plan = api.plan_for(mesh, *specs.values())
+    if jax.device_count() >= 4:
+        # demo programs are tiny: tenant-parallel wins
+        assert plan.mode == "tenants" and plan.shards == 4
+    else:
+        assert plan.mode == "single"
+    assert plan.program_bytes > 0
+
+    # squeeze the budget: the planner must clause-shard, with the
+    # fewest shards (dividing padded R) that fit the per-shard window
+    if jax.device_count() >= 4:
+        tight = plan.program_bytes // 2
+        plan2 = api.plan_for(mesh, *specs.values(), vmem_budget=tight)
+        assert plan2.mode == "clauses"
+        assert plan2.shards in (2, 4)
+        assert plan2.program_bytes // plan2.shards <= tight
