@@ -33,6 +33,10 @@ Guarded metrics:
   but deliberately NOT guarded: it flips regime between serialized
   1-core containers (degenerates to >= 4x) and parallel CI runners,
   so baseline and fresh run may legitimately sit on opposite sides.)
+* serve entries    — ``sched_speedup_k8`` (higher is better; the async
+  scheduler's continuous-batching speedup over one-launch-per-request)
+  and ``p95_over_seq`` (lower is better; open-loop p95 latency over the
+  sequential per-request wall — both ratios machine-portable)
 
 Metrics present only on one side are reported but never fail the guard
 (new benchmarks land before their baseline is committed).
@@ -52,7 +56,7 @@ from typing import Dict, Tuple
 Metrics = Dict[str, Tuple[float, bool]]
 
 FILES = ("BENCH_fused.json", "BENCH_packed.json", "BENCH_session.json",
-         "BENCH_skip.json", "BENCH_pod.json")
+         "BENCH_skip.json", "BENCH_pod.json", "BENCH_serve.json")
 
 
 def _extract(fname: str, report: dict) -> Metrics:
@@ -95,6 +99,18 @@ def _extract(fname: str, report: dict) -> Metrics:
         if "equal_work_ratio_4x" in report:
             out["pod/equal_work_ratio_4x"] = (
                 report["equal_work_ratio_4x"], False)
+    elif fname == "BENCH_serve.json":
+        # guard the two machine-portable RATIOS: the scheduled-vs-
+        # sequential speedup at K=8 (a collapse back to ~1x means the
+        # scheduler stopped coalescing) and the open-loop p95 over the
+        # sequential per-request wall (both sides move with host speed).
+        # Absolute latencies are reported, not guarded — they are pure
+        # runner class.
+        if "sched_speedup_k8" in report:
+            out["serve/sched_speedup_k8"] = (report["sched_speedup_k8"],
+                                             True)
+        if "p95_over_seq" in report:
+            out["serve/p95_over_seq"] = (report["p95_over_seq"], False)
     return out
 
 

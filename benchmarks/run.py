@@ -33,12 +33,14 @@ def main() -> None:
 
     from . import (fig3_opcounts, fig7_clause_skip, fig11_kernels,
                    fig14_weight_bits, fig15_lfsr, fused_step_bench,
-                   packed_bench, pod_bench, session_bench, skip_bench,
-                   table1_accuracy, table2_kws6, table2_supp, convtm_bench)
+                   packed_bench, pod_bench, serve_bench, session_bench,
+                   skip_bench, table1_accuracy, table2_kws6, table2_supp,
+                   convtm_bench)
     mods = (table1_accuracy, table2_kws6, table2_supp, fig3_opcounts,
             fig7_clause_skip, fig11_kernels, fig14_weight_bits,
             fig15_lfsr, convtm_bench, fused_step_bench,
-            packed_bench, session_bench, skip_bench, pod_bench)
+            packed_bench, session_bench, skip_bench, pod_bench,
+            serve_bench)
     if args.only:
         wanted = set(args.only.split(","))
         names = {m.__name__.rsplit(".", 1)[-1] for m in mods}

@@ -1,0 +1,260 @@
+"""Async-scheduler load generator -> BENCH_serve.json (ISSUE 7).
+
+Two sections:
+
+* ``closed_loop`` — K=8 tenants, every request pre-encoded.  The
+  baseline serves one request per launch (``TMServer.predict`` — the
+  swap-per-request path); the scheduler serves the same trace through
+  ``TMScheduler.submit`` + ``drain`` (continuous batching over the
+  stacked bank, pipeline depth 2).  ``sched_speedup_k8`` is the
+  acceptance headline: the scheduled path must stay >= 2x the
+  one-request-per-launch baseline.
+* ``open_loop`` — a paced arrival process at a fraction of the measured
+  closed-loop capacity, uniform and zipf tenant skew, served by the
+  background scheduler thread.  Reports p50/p95/p99 latency, goodput
+  (completions within the STANDARD 50 ms deadline), and admission
+  rejections.  ``p95_over_seq`` is the guarded ratio: open-loop p95
+  latency at 0.4x capacity over the sequential per-request launch wall
+  — machine-portable the way the pod mesh tax is (both sides move with
+  host speed).
+
+Regime tagging mirrors BENCH_pod.json: the open-loop numbers need a
+core for the submitter AND one for the driver thread; a 1-core
+container serializes them, so the report carries ``host_cpu_cores`` /
+``serialized_host`` for the reader and the regression-guard baseline.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.api import TMSpec
+from repro.launch.scheduler import (STANDARD, Backpressure, SchedulerConfig,
+                                    TMScheduler)
+from repro.launch.serve_tm import TMServer
+
+from .common import FAST, row
+
+OUT = "BENCH_serve.json"
+K = 8
+OPEN_FRACS = (0.4, 0.8)
+SKEWS = ("uniform", "zipf")
+
+
+def _spec(features: int, clauses: int, classes: int = 4) -> TMSpec:
+    return TMSpec.coalesced(features=features, classes=classes,
+                            clauses=clauses, T=16, s=4.0)
+
+
+def _roster(engine, features: int, clauses: int, batch_slot: int):
+    """K flat tenants (mixed class counts) + pre-encoded request
+    payloads, one server shared by every measurement."""
+    server = TMServer(engine, batch_slot=batch_slot)
+    rng = np.random.default_rng(0)
+    names, lits = [], {}
+    for i in range(K):
+        name = f"tenant{i}"
+        server.register(name, _spec(features, clauses, classes=2 + i % 3),
+                        seed=i)
+        x = (rng.random((batch_slot, features)) < 0.5).astype(np.int8)
+        lits[name] = jnp.asarray(
+            engine.encode(server.tenants[name].spec, jnp.asarray(x)))
+        names.append(name)
+    return server, names, lits
+
+
+def _closed_loop(server, names, lits, rounds: int) -> dict:
+    """Total wall for rounds*K requests: per-request launches vs the
+    scheduled continuous-batching path, identical payloads."""
+    sched = TMScheduler(server, SchedulerConfig(pipeline_depth=2))
+    # warm both paths untimed (bank build + executable compile)
+    for n in names:
+        server.predict(n, lits[n], encoded=True)
+    for _ in range(2):
+        futs = [sched.submit(n, lits[n], encoded=True) for n in names]
+        sched.drain()
+        [f.result() for f in futs]
+
+    # interleaved repeats: each repeat times BOTH paths back to back (so
+    # ambient load hits them together and the per-repeat RATIO stays
+    # meaningful), ALTERNATING which path goes first (so slow drift in
+    # the container cancels instead of biasing one side).  The speedup
+    # is the median of the per-repeat ratios, the throughput numbers the
+    # best (minimum) wall of each path.
+    total = rounds * K
+
+    def _seq_pass():
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for n in names:
+                server.predict(n, lits[n], encoded=True)
+        return time.perf_counter() - t0
+
+    def _sched_pass():
+        t0 = time.perf_counter()
+        futs = [sched.submit(n, lits[n], encoded=True)
+                for _ in range(rounds) for n in names]
+        sched.drain()
+        dt = time.perf_counter() - t0
+        assert all(f.done() for f in futs)
+        return dt
+
+    repeats = 7
+    seq_t, sched_t = [], []
+    gc.disable()
+    try:
+        for r in range(repeats):
+            if r % 2 == 0:
+                seq_t.append(_seq_pass())
+                sched_t.append(_sched_pass())
+            else:
+                sched_t.append(_sched_pass())
+                seq_t.append(_seq_pass())
+    finally:
+        gc.enable()
+    seq_s, sched_s = float(np.min(seq_t)), float(np.min(sched_t))
+    speedup = float(np.median(np.asarray(seq_t) / np.asarray(sched_t)))
+
+    entry = {
+        "k": K, "rounds": rounds,
+        "seq_req_per_s": total / max(seq_s, 1e-9),
+        "sched_req_per_s": total / max(sched_s, 1e-9),
+        "sched_speedup": speedup,
+        "seq_req_ms": seq_s / total * 1e3,
+        "launches": sched.launches,
+    }
+    row(f"serve_closed_k{K}", sched_s / total * 1e6,
+        f"sched_speedup={entry['sched_speedup']:.2f}x")
+    return entry
+
+
+def _open_loop(server, names, lits, offered_rps: float, n_req: int,
+               skew: str, seq_req_ms: float) -> dict:
+    """Paced arrivals at ``offered_rps`` served by the background
+    scheduler thread; per-request latency observed at Future
+    resolution."""
+    rng = np.random.default_rng(7)
+    if skew == "zipf":
+        w = 1.0 / np.arange(1, len(names) + 1)
+        w /= w.sum()
+    else:
+        w = np.full(len(names), 1.0 / len(names))
+    picks = rng.choice(len(names), n_req, p=w)
+
+    sched = TMScheduler(server, SchedulerConfig(max_wait_s=0.001,
+                                                pipeline_depth=2))
+    lat: list = []
+    rejected = 0
+    gap = 1.0 / offered_rps
+    sched.start()
+    try:
+        t_start = time.perf_counter()
+        next_t = t_start
+        for i in picks:
+            now = time.perf_counter()
+            if now < next_t:
+                time.sleep(next_t - now)
+            next_t += gap
+            try:
+                t_sub = time.perf_counter()
+                fut = sched.submit(names[i], lits[names[i]], encoded=True)
+            except Backpressure:
+                rejected += 1
+                continue
+            fut.add_done_callback(
+                lambda _f, t=t_sub: lat.append(time.perf_counter() - t))
+    finally:
+        sched.stop()                      # drains in-flight work
+    wall = time.perf_counter() - t_start
+    assert len(lat) + rejected == n_req
+
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    deadline_ms = STANDARD.deadline_ms
+    goodput = float(np.mean(lat_ms <= deadline_ms)) if len(lat_ms) else 0.0
+    p = (lambda q: float(np.percentile(lat_ms, q))) if len(lat_ms) else (
+        lambda q: 0.0)
+    entry = {
+        "skew": skew,
+        "offered_rps": offered_rps,
+        "achieved_rps": n_req / max(wall, 1e-9),
+        "completed": len(lat_ms),
+        "rejected": rejected,
+        "p50_ms": p(50), "p95_ms": p(95), "p99_ms": p(99),
+        "goodput": goodput,
+        "p95_over_seq": p(95) / max(seq_req_ms, 1e-9),
+        "deadline_ms": deadline_ms,
+    }
+    row(f"serve_open_{skew}_{offered_rps:.0f}rps", p(95) * 1e3,
+        f"p95={p(95):.2f}ms goodput={goodput:.2f} rej={rejected}")
+    return entry
+
+
+def run(out: str = OUT) -> dict:
+    smoke = FAST
+    features, clauses = (32, 24) if smoke else (128, 96)
+    rounds = 48 if smoke else 192
+    n_req = 160 if smoke else 640
+    # edge single-datapoint request slots, as in session_bench: the
+    # per-request launch overhead IS the serving cost the bank amortises
+    batch_slot = 1 if smoke else 32
+
+    engine = api.compile(api.tile_for(_spec(features, clauses)))
+    server, names, lits = _roster(engine, features, clauses, batch_slot)
+    closed = _closed_loop(server, names, lits, rounds)
+
+    # offer a fraction of the measured scheduled capacity, capped where
+    # time.sleep can still pace arrivals (sub-ms gaps just burst)
+    capacity = closed["sched_req_per_s"]
+    open_entries = []
+    for frac in OPEN_FRACS:
+        offered = min(capacity * frac, 2000.0)
+        for skew in SKEWS:
+            open_entries.append(_open_loop(
+                server, names, lits, offered, n_req, skew,
+                closed["seq_req_ms"]))
+
+    cores = len(os.sched_getaffinity(0))
+    guard = next(e for e in open_entries
+                 if e["skew"] == "uniform")        # lowest-load uniform
+    report = {
+        "smoke": smoke,
+        "backend": engine.backend,
+        "features": features, "clauses": clauses,
+        "batch_slot": batch_slot,
+        "closed_loop": closed,
+        "open_loop": open_entries,
+        "sched_speedup_k8": closed["sched_speedup"],
+        "p95_over_seq": guard["p95_over_seq"],
+        "host_cpu_cores": cores,
+        # submitter + driver thread want a core each
+        "serialized_host": cores < 2,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["FAST"] = "1"
+        global FAST
+        FAST = True
+    run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

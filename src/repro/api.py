@@ -620,3 +620,36 @@ def stack(programs: Sequence[DTMProgram], engine: DTMEngine,
         stacked_prng = jax.tree.map(lambda *xs: jnp.stack(xs), *prngs)
     return ProgramBank(engine, progs, k=len(programs), conv=conv,
                        prngs=stacked_prng)
+
+
+# ---------------------------------------------------------------------------
+# serve — the full async serving stack in one call
+# ---------------------------------------------------------------------------
+
+def serve(roster: dict, batch_slot: int = 32, backend: str = "auto",
+          mesh=None, config=None, slas: Optional[dict] = None,
+          seed: int = 0):
+    """Build the async serving stack for a tenant roster in one call:
+    a :func:`tile_for`-sized engine, a multi-tenant
+    :class:`repro.launch.serve_tm.TMServer` (pod-sharded when ``mesh``
+    spans > 1 device) and a
+    :class:`repro.launch.scheduler.TMScheduler` in front of it.
+
+    ``roster`` maps tenant name -> :class:`TMSpec`; ``slas`` (optional)
+    maps tenant name -> :class:`repro.launch.scheduler.SLAClass`;
+    ``config`` is a :class:`repro.launch.scheduler.SchedulerConfig`.
+    Returns the scheduler (its ``.server`` / ``.server.engine`` expose
+    the layers below).  Call ``.start()`` for the background flush loop
+    or drive it inline with ``.step()`` / ``.drain()``."""
+    # lazy imports: launch/ pulls this front-end module back in
+    from repro.launch.scheduler import TMScheduler
+    from repro.launch.serve_tm import TMServer
+
+    assert roster, "serve() needs at least one tenant spec"
+    engine = compile(tile_for(*roster.values()), backend=backend)
+    server = TMServer(engine, batch_slot=batch_slot, mesh=mesh)
+    sched = TMScheduler(server, config=config)
+    for i, (name, spec) in enumerate(roster.items()):
+        sched.register(name, spec, seed=seed + i,
+                       sla=(slas or {}).get(name))
+    return sched

@@ -5,5 +5,7 @@ from .mesh import (make_production_mesh, make_host_mesh, HardwareModel,
 __all__ = ["make_production_mesh", "make_host_mesh", "HardwareModel",
            "V5E", "mesh_chips", "data_axes"]
 
-# NOTE: the multi-tenant DTM server lives in repro.launch.serve_tm
-# (imported lazily there — it pulls in the full repro.api front-end).
+# NOTE: the multi-tenant DTM server lives in repro.launch.serve_tm and
+# the async continuous-batching runtime in repro.launch.scheduler
+# (imported lazily there — they pull in the full repro.api front-end;
+# `api.serve(roster)` builds the whole stack in one call).

@@ -279,3 +279,14 @@ def pad_roster(names: List[str], devices: int) -> List[Optional[str]]:
     count (pad slots replay a real program; outputs are dropped)."""
     pad = (-len(names)) % max(devices, 1)
     return list(names) + [None] * pad
+
+
+def first_pad_slot(names: Sequence[Optional[str]]) -> Optional[int]:
+    """Index of the first pad (``None``) slot in a padded bank roster,
+    or ``None`` when the bank is full — dynamic bank membership promotes
+    into a pad slot in place (one routed ``swap_in``) before paying a
+    restack."""
+    for k, name in enumerate(names):
+        if name is None:
+            return k
+    return None

@@ -1,0 +1,489 @@
+"""Async continuous-batching serving runtime over the resident bank.
+
+The FPGA operating mode the paper targets is a *stream*: requests arrive
+continuously and the accelerator stays busy without a host round-trip
+per request (the online-learning architecture of arXiv 2306.01027).  Up
+to now the repo's serving stack made the CALLER drive batching —
+``TMServer.enqueue`` + ``flush`` coalesce only when the client says so
+and block on results.  This module owns time instead: requesters feed
+per-tenant queues and ONE driver owns the device (the actor/learner
+split of the circuit-training exemplar — many producers, one
+device-owning loop).
+
+The pieces:
+
+* **SLA / priority queues** (:class:`SLAClass`): every tenant carries an
+  admission cap (``max_queue_depth`` — :meth:`TMScheduler.submit` raises
+  :class:`Backpressure` beyond it, the load-shedding contract) and a
+  latency target (``deadline_ms``).  Batch formation is deadline-aware:
+  the heads of the non-empty tenant queues are served
+  earliest-deadline-first, class ``priority`` breaking ties — under
+  load, gold-class tenants consistently pre-empt batch-class ones.
+* **Continuous batching**: the driver drains at most one request per
+  tenant per cycle (a bank slot serves one request), forms a
+  program-major batch under a ``max_batch_tenants`` / ``max_wait_s``
+  policy, and launches it through :meth:`TMServer.flush_async` — the
+  stacked one-launch-per-stage-family path.
+* **Pipelining**: launches are NOT synced on the hot path.  Up to
+  ``pipeline_depth`` :class:`repro.launch.serve_tm.PendingFlush` es stay
+  in flight while the driver encodes and launches the next batch; a
+  launch is only :meth:`TMServer.collect` ed (the one host sync) once it
+  falls behind the pipeline window or the queues go idle.  Callers get
+  :class:`concurrent.futures.Future` s back immediately.
+* **Dynamic bank membership**: with ``resident_slots`` set, only that
+  many tenants per stage family ride the stacked launch; the rest are
+  served through the per-request cold path.  A per-tenant EWMA of
+  arrival rate drives promotion (hot swapped tenant) and demotion (cold
+  resident tenant) through the routed
+  :meth:`TMServer.swap_resident` / :meth:`TMServer.add_resident` —
+  device-side row swaps, no restack, no retrace.
+
+Determinism: inference is pure and programs are static between training
+requests, so scheduled results are bit-identical to the synchronous
+per-tenant ``enqueue`` + ``flush`` path whatever the batching — asserted
+(single-device and 4-device mesh) in ``tests/test_scheduler.py``.
+
+Drive it synchronously (tests, closed-loop benchmarks)::
+
+    sched = TMScheduler(server)
+    sched.register("t0", spec)
+    fut = sched.submit("t0", x)
+    sched.drain()                  # run the driver inline until idle
+    fut.result()
+
+or as a background thread (open-loop serving)::
+
+    sched.start()
+    futs = [sched.submit(name, x) for ...]
+    ...
+    sched.stop()                   # drains in-flight work first
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.launch.serve_tm import TMServer
+
+
+class Backpressure(RuntimeError):
+    """Admission control rejected the request: the tenant's queue is at
+    its SLA depth cap.  Callers shed load or retry later."""
+
+
+# one condition shared by every TMFuture: completion is signalled by the
+# per-future done flag (waiters re-check it in a loop, so cross-future
+# wakeups are harmless), and sharing it makes future creation a plain
+# allocation — ~10x cheaper than concurrent.futures.Future, which builds
+# a private Condition+RLock per instance.  At edge request rates that
+# construction cost was the scheduler's single biggest hot-path item.
+_FUTURE_COND = threading.Condition()
+
+
+class TMFuture:
+    """Minimal future for scheduler results: ``result(timeout)``,
+    ``done()``, ``exception()``, ``add_done_callback(fn)`` — the subset
+    of the :class:`concurrent.futures.Future` surface the serving API
+    promises.  Completion methods are driver-side only."""
+
+    __slots__ = ("_done", "_result", "_exc", "_callbacks")
+
+    def __init__(self):
+        self._done = False
+        self._result = None
+        self._exc = None
+        self._callbacks = []
+
+    def done(self) -> bool:
+        return self._done
+
+    def _finish(self, result, exc) -> None:
+        with _FUTURE_COND:
+            self._result = result
+            self._exc = exc
+            self._done = True
+            cbs = self._callbacks
+            self._callbacks = []
+            _FUTURE_COND.notify_all()
+        for cb in cbs:
+            cb(self)
+
+    def set_result(self, result) -> None:
+        self._finish(result, None)
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._finish(None, exc)
+
+    def add_done_callback(self, fn) -> None:
+        with _FUTURE_COND:
+            if not self._done:
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _wait(self, timeout) -> None:
+        if self._done:
+            return
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        with _FUTURE_COND:
+            while not self._done:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError("request still pending — is the "
+                                       "driver running (start/drain)?")
+                _FUTURE_COND.wait(remaining)
+
+    def result(self, timeout: Optional[float] = None):
+        self._wait(timeout)
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        self._wait(timeout)
+        return self._exc
+
+
+@dataclasses.dataclass(frozen=True)
+class SLAClass:
+    """Per-tenant service class: admission cap + latency target.
+
+    ``deadline_ms`` orders batch formation (earliest deadline first), so
+    a shorter deadline IS higher effective priority under load;
+    ``priority`` breaks deadline ties (higher first).  ``max_queue_depth``
+    is the admission-control cap — submits beyond it raise
+    :class:`Backpressure` instead of growing an unbounded backlog."""
+
+    name: str = "standard"
+    priority: int = 1
+    deadline_ms: float = 50.0
+    max_queue_depth: int = 64
+
+
+GOLD = SLAClass("gold", priority=4, deadline_ms=5.0, max_queue_depth=256)
+STANDARD = SLAClass()
+BATCH = SLAClass("batch", priority=0, deadline_ms=1000.0,
+                 max_queue_depth=1024)
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    """Policy knobs of the continuous-batching driver (see README
+    "Async serving" for the operator-facing description)."""
+
+    max_batch_tenants: int = 0        # per launch; 0 = whole roster
+    max_wait_s: float = 0.002         # batch-formation window
+    pipeline_depth: int = 1           # launches in flight before a sync
+    resident_slots: Optional[int] = None   # per-family bank capacity
+    ewma_alpha: float = 0.4           # arrival-rate smoothing
+    membership_every: int = 16        # driver cycles per membership tick
+    promote_margin: float = 1.5       # hot/cold QPS ratio to swap
+    promote_min_qps: float = 1.0      # never promote below this rate
+    min_dwell_ticks: int = 2          # anti-thrash: ticks between moves
+    idle_wait_s: float = 0.02         # thread-mode idle poll
+
+
+@dataclasses.dataclass
+class _Request:
+    tenant: str
+    x: object
+    encoded: bool
+    t_submit: float
+    deadline: float
+    seq: int
+    future: TMFuture
+
+
+@dataclasses.dataclass
+class _TenantState:
+    sla: SLAClass
+    queue: collections.deque
+    arrivals: int = 0            # since the last membership tick
+    ewma_qps: float = 0.0
+    completed: int = 0
+    rejected: int = 0
+    dwell: int = 10 ** 9         # ticks since last promote/demote
+    last_latency_s: Optional[float] = None
+
+
+class TMScheduler:
+    """The device-owning driver: per-tenant SLA queues in front of a
+    :class:`repro.launch.serve_tm.TMServer`.
+
+    All device work (encode, launch, fetch) happens on the driver — the
+    thread started by :meth:`start`, or the caller of :meth:`step` /
+    :meth:`drain` when running inline.  :meth:`submit` only enqueues
+    host data (and may run on any thread)."""
+
+    def __init__(self, server: TMServer,
+                 config: Optional[SchedulerConfig] = None,
+                 default_sla: SLAClass = STANDARD):
+        self.server = server
+        self.cfg = config or SchedulerConfig()
+        self.default_sla = default_sla
+        self._tenants: Dict[str, _TenantState] = {}
+        self._registered: Dict[bool, List[str]] = {False: [], True: []}
+        self._cap_init: Dict[bool, bool] = {False: False, True: False}
+        self._work = threading.Condition()
+        self._in_flight: collections.deque = collections.deque()
+        self._seq = 0
+        self._cycles = 0
+        self._t_last_tick = time.perf_counter()
+        self.submitted = self.completed = self.rejected = 0
+        self.launches = 0
+        self.promotions = self.demotions = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        # tenants already registered on the server are admitted under
+        # the default SLA (re-class them with set_sla)
+        for name, tenant in server.tenants.items():
+            self._admit(name, tenant.spec.kind == "conv", None)
+
+    # ---- tenant management ------------------------------------------------
+    def register(self, name: str, spec, program=None, seed: int = 0,
+                 sla: Optional[SLAClass] = None) -> None:
+        """Admit a tenant: register with the server and place it in (or
+        out of) the resident bank under the capacity policy."""
+        self.server.register(name, spec, program=program, seed=seed)
+        self._admit(name, spec.kind == "conv", sla)
+
+    def adopt(self, name: str, tm, sla: Optional[SLAClass] = None) -> None:
+        """Admit a trained ``repro.api.TM`` estimator."""
+        self.server.adopt(name, tm)
+        self._admit(name, tm.spec.kind == "conv", sla)
+
+    def _admit(self, name: str, conv: bool,
+               sla: Optional[SLAClass]) -> None:
+        with self._work:
+            self._tenants[name] = _TenantState(sla or self.default_sla,
+                                               collections.deque())
+            if name not in self._registered[conv]:
+                self._registered[conv].append(name)
+        cap = self.cfg.resident_slots
+        if cap is None:
+            return
+        # fill the bank in registration order until the capacity is
+        # reached; later arrivals start swapped-out and the EWMA
+        # membership loop promotes them from live traffic.  Never
+        # clobber a membership the loop already re-decided.
+        if not self._cap_init[conv]:
+            self.server.set_resident(self._registered[conv][:cap],
+                                     conv=conv)
+            self._cap_init[conv] = True
+        else:
+            member = self.server.resident_names(conv)
+            if name not in member and len(member) < cap:
+                self.server.set_resident(member + [name], conv=conv)
+
+    def sla_of(self, name: str) -> SLAClass:
+        return self._tenants[name].sla
+
+    def set_sla(self, name: str, sla: SLAClass) -> None:
+        """Re-class an admitted tenant (e.g. after auto-admission)."""
+        with self._work:
+            self._tenants[name].sla = sla
+
+    # ---- request ingress (any thread) -------------------------------------
+    def submit(self, name: str, x, encoded: bool = False) -> TMFuture:
+        """Enqueue one inference request; returns a :class:`TMFuture`
+        resolving to the prediction array.  Raises
+        :class:`Backpressure` when the tenant's queue is at its SLA
+        depth cap (admission control)."""
+        st = self._tenants[name]
+        now = time.perf_counter()
+        fut = TMFuture()
+        with self._work:
+            if len(st.queue) >= st.sla.max_queue_depth:
+                st.rejected += 1
+                self.rejected += 1
+                raise Backpressure(
+                    f"tenant {name!r} queue at its SLA depth cap "
+                    f"({st.sla.max_queue_depth})")
+            self._seq += 1
+            st.queue.append(_Request(
+                tenant=name, x=x, encoded=encoded, t_submit=now,
+                deadline=now + st.sla.deadline_ms / 1e3, seq=self._seq,
+                future=fut))
+            st.arrivals += 1
+            self.submitted += 1
+            if self._thread is not None:      # wake the idle driver
+                self._work.notify()
+        return fut
+
+    # ---- the driver (one thread owns the device) ---------------------------
+    def _queued(self) -> int:
+        return sum(len(st.queue) for st in self._tenants.values())
+
+    def _launch(self, force: bool) -> bool:
+        """Form one program-major batch (≤ 1 request per tenant, EDF
+        order, ``max_batch_tenants`` cap) and dispatch it un-synced."""
+        now = time.perf_counter()
+        with self._work:
+            heads = [(st.queue[0], st.sla.priority)
+                     for st in self._tenants.values() if st.queue]
+            if not heads:
+                return False
+            cap = self.cfg.max_batch_tenants or len(heads)
+            if not force and len(heads) < cap:
+                oldest = min(r.t_submit for r, _ in heads)
+                if now - oldest < self.cfg.max_wait_s:
+                    return False          # keep filling the batch window
+            heads.sort(key=lambda h: (h[0].deadline, -h[1], h[0].seq))
+            batch = [r for r, _ in heads[:cap]]
+            for req in batch:
+                self._tenants[req.tenant].queue.popleft()
+        # device work OUTSIDE the lock: host encode of this batch
+        # overlaps whatever launch is still in flight on the device
+        for req in batch:
+            self.server.enqueue(req.tenant, req.x, encoded=req.encoded)
+        self._in_flight.append((self.server.flush_async(), batch))
+        self.launches += 1
+        return True
+
+    def _resolve_oldest(self) -> int:
+        pf, batch = self._in_flight.popleft()
+        out = self.server.collect(pf)
+        now = time.perf_counter()
+        for req in batch:
+            st = self._tenants[req.tenant]
+            st.completed += 1
+            self.completed += 1
+            st.last_latency_s = now - req.t_submit
+            req.future.set_result(out[req.tenant])
+        return len(batch)
+
+    def step(self, force: bool = True) -> int:
+        """One driver cycle: launch at most one stacked flush, then
+        resolve any launch past the pipeline window (all of them when
+        idle).  Returns the number of requests completed.  ``force=False``
+        honours the ``max_wait_s`` batch-formation window (the thread
+        loop's mode); ``force=True`` launches whatever is queued."""
+        launched = self._launch(force)
+        done = 0
+        while self._in_flight and (
+                len(self._in_flight) > self.cfg.pipeline_depth
+                or (not launched and not self._queued())):
+            done += self._resolve_oldest()
+        self._cycles += 1
+        if (self.cfg.resident_slots is not None
+                and self._cycles % self.cfg.membership_every == 0):
+            self._membership_tick()
+        return done
+
+    def drain(self) -> int:
+        """Run the driver inline until every queued and in-flight
+        request has completed; returns the number completed."""
+        done = 0
+        while self._queued() or self._in_flight:
+            done += self.step(force=True)
+        return done
+
+    # ---- dynamic bank membership (EWMA promote / demote) -------------------
+    def _membership_tick(self) -> None:
+        now = time.perf_counter()
+        dt = max(now - self._t_last_tick, 1e-9)
+        self._t_last_tick = now
+        a = self.cfg.ewma_alpha
+        with self._work:
+            for st in self._tenants.values():
+                st.ewma_qps = a * (st.arrivals / dt) + (1 - a) * st.ewma_qps
+                st.arrivals = 0
+                st.dwell += 1
+        for conv in (False, True):
+            resident = [n for n in self.server.resident_names(conv)
+                        if n in self._tenants]
+            swapped = [n for n in self._registered[conv]
+                       if n not in resident]
+            if not swapped:
+                continue
+            hot = max(swapped, key=lambda n: self._tenants[n].ewma_qps)
+            hs = self._tenants[hot]
+            if (hs.ewma_qps < self.cfg.promote_min_qps
+                    or hs.dwell < self.cfg.min_dwell_ticks):
+                continue
+            if self.cfg.resident_slots and (
+                    len(resident) < self.cfg.resident_slots):
+                self.server.add_resident(hot)
+                hs.dwell = 0
+                self.promotions += 1
+                continue
+            if not resident:
+                continue
+            cold = min(resident, key=lambda n: self._tenants[n].ewma_qps)
+            cs = self._tenants[cold]
+            if (cs.dwell >= self.cfg.min_dwell_ticks
+                    and hs.ewma_qps
+                    > self.cfg.promote_margin * max(cs.ewma_qps, 1e-9)):
+                self.server.swap_resident(cold, hot)
+                hs.dwell = cs.dwell = 0
+                self.promotions += 1
+                self.demotions += 1
+
+    # ---- background thread mode -------------------------------------------
+    def start(self) -> None:
+        """Start the background flush loop (the device-owning driver)."""
+        assert self._thread is None, "scheduler already running"
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True, name="tm-scheduler")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        poll = max(self.cfg.max_wait_s / 2, 1e-4)
+        while not self._stop.is_set():
+            with self._work:
+                if not self._queued() and not self._in_flight:
+                    self._work.wait(self.cfg.idle_wait_s)
+                    continue
+            before = self.launches
+            done = self.step(force=False)
+            if done == 0 and self.launches == before:
+                # batch window still filling — don't spin
+                time.sleep(poll)
+        self.drain()
+
+    def stop(self) -> None:
+        """Stop the background loop; drains in-flight work first so no
+        caller is left holding an unresolved Future."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        with self._work:
+            self._work.notify_all()
+        self._thread.join(timeout=60)
+        assert not self._thread.is_alive(), "scheduler thread hung"
+        self._thread = None
+
+    # ---- observability -----------------------------------------------------
+    def stats(self) -> dict:
+        """Operator snapshot: scheduler totals + per-tenant queue/SLA/
+        rate state, with the server's own stats nested under
+        ``server``."""
+        with self._work:
+            resident = set(self.server.resident_names())
+            per_tenant = {
+                n: {"queue_depth": len(st.queue),
+                    "sla": st.sla.name,
+                    "ewma_qps": round(st.ewma_qps, 3),
+                    "resident": n in resident,
+                    "completed": st.completed,
+                    "rejected": st.rejected,
+                    "last_latency_ms":
+                        (None if st.last_latency_s is None
+                         else round(st.last_latency_s * 1e3, 3))}
+                for n, st in sorted(self._tenants.items())}
+        return {"tenants": per_tenant,
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "launches": self.launches,
+                "in_flight": len(self._in_flight),
+                "promotions": self.promotions,
+                "demotions": self.demotions,
+                "running": self._thread is not None,
+                "server": self.server.stats()}

@@ -28,6 +28,19 @@ reported per tenant as ``program_nbytes`` in :meth:`TMServer.stats` — is
 ~7× smaller than the int32 TA + re-thresholded include pair it replaced;
 literals ship packed 32-per-word from ``engine.encode``.
 
+Async serving (ISSUE 7): ``flush`` is split into a launch phase
+(:meth:`TMServer.flush_async` — dispatches the stacked bank executables
+and returns a :class:`PendingFlush` WITHOUT fetching) and a fetch phase
+(:meth:`TMServer.collect`), so a driver can overlap device work with
+host-side encode of the next batch (``repro.launch.scheduler`` owns that
+loop).  Bank membership is DYNAMIC: :meth:`TMServer.set_resident`
+restricts a stage family's bank roster, :meth:`TMServer.swap_resident`
+promotes a swapped tenant into a demoted tenant's slot through the
+routed ``swap_in``/``swap_out`` path (a pair of device-side row
+scatters — no restack), and requests for non-resident tenants fall back
+to a per-request single-program launch (the measured "cold path" the
+promotion policy exists to avoid).
+
 On-line training requests run the clause-skip TA update (ISSUE 5): as a
 tenant's model converges, fewer clause groups receive feedback and its
 ``train()`` wall-clock falls.  The per-tenant lifetime skip fraction is
@@ -54,7 +67,7 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +85,22 @@ class _Tenant:
     spec: TMSpec
     program: DTMProgram
     prng: PRNG
+
+
+@dataclasses.dataclass
+class PendingFlush:
+    """One in-flight stacked flush: device work dispatched, results not
+    yet fetched.  Produced by :meth:`TMServer.flush_async`; resolved by
+    :meth:`TMServer.collect` (which is where the only host-device sync
+    of the serving path happens).  ``hot`` holds one entry per launched
+    stage-family bank (lazy output arrays), ``cold`` one per
+    non-resident tenant served through the single-program fallback."""
+
+    t0: float                              # flush_async entry time
+    served: Dict[str, float]               # tenant -> enqueue time
+    n_real: Dict[str, int]                 # tenant -> un-padded batch
+    hot: list                              # (conv, names, out_a, out_b)
+    cold: list                             # (name, sums, cl)
 
 
 def _decode_np(spec: TMSpec, sums: np.ndarray, cl: np.ndarray,
@@ -113,13 +142,21 @@ class TMServer:
         self.swaps = 0
         self.requests = 0
         # stacked (program-major) serving state
-        self._pending: List[Tuple[str, jax.Array, int]] = []
+        self._pending: List[Tuple[str, jax.Array, int, float]] = []
         self._banks: Dict[bool, Tuple[List[str], ProgramBank]] = {}
         self._groups: Dict[bool, List[str]] = {}
         self._decode_info: Dict[str, Tuple[bool, int]] = {}
         self._dirty: set = set()
         self.stacked_launches = 0
         self.coalesced_requests = 0
+        # dynamic bank membership (scheduler-driven): per stage family,
+        # the ordered resident roster — None = every registered tenant
+        self._membership: Dict[bool, Optional[List[str]]] = {}
+        self.cold_requests = 0
+        self.membership_swaps = 0
+        # per-tenant latency of the last flush that served the tenant
+        # (enqueue -> collect wall, seconds)
+        self._last_flush: Dict[str, float] = {}
         # per-tenant Alg-6 skip accounting: device-lazy [active, total]
         # group-count accumulators (summed on the train path with zero
         # extra host syncs; materialised only by stats())
@@ -234,8 +271,92 @@ class TMServer:
 
     # ---- stacked (program-major) serving ----------------------------------
     def _group_names(self, conv: bool) -> List[str]:
+        member = self._membership.get(conv)
+        if member is not None:
+            return [n for n in member if n in self.tenants]
         return sorted(n for n, t in self.tenants.items()
                       if (t.spec.kind == "conv") == conv)
+
+    def resident_names(self, conv: Optional[bool] = None) -> List[str]:
+        """Tenants eligible for the stacked bank launch (the resident
+        roster): the dynamic membership if one was set, otherwise every
+        registered tenant of the family."""
+        fams = (False, True) if conv is None else (conv,)
+        return [n for c in fams for n in self._group_names(c)]
+
+    # ---- dynamic bank membership (promote / demote) ------------------------
+    def set_resident(self, names: Sequence[str], conv: bool = False) -> None:
+        """Restrict one stage family's bank roster to ``names`` (slot
+        order).  Tenants left out stay registered and servable — their
+        stacked-flush requests take the per-request cold path until
+        :meth:`swap_resident` / :meth:`add_resident` promotes them."""
+        names = list(names)
+        assert len(set(names)) == len(names), names
+        for n in names:
+            assert n in self.tenants, n
+            assert (self.tenants[n].spec.kind == "conv") == conv, n
+        self._membership[conv] = names
+        self._banks.pop(conv, None)
+        self._groups.pop(conv, None)
+
+    def swap_resident(self, out_name: str, in_name: str):
+        """Dynamic bank membership: demote ``out_name`` (its fresh
+        program reads back to the tenant record via the routed
+        ``swap_out``) and promote ``in_name`` into the freed slot (routed
+        ``swap_in``) — two device-side row ops, NO bank restack.  Returns
+        the reused :class:`repro.launch.pod.Route` (``None`` when the
+        bank was not built yet and only the roster changed)."""
+        t_in = self.tenants[in_name]
+        conv = t_in.spec.kind == "conv"
+        assert (self.tenants[out_name].spec.kind == "conv") == conv, (
+            "swap_resident stays within one stage family (flat vs conv)")
+        member = self._membership.get(conv)
+        assert member is not None, "set_resident() first"
+        assert out_name in member and in_name not in member, (out_name,
+                                                             in_name)
+        self.membership_swaps += 1
+        if conv not in self._banks:
+            member[member.index(out_name)] = in_name
+            self._groups.pop(conv, None)
+            return None
+        names, bank = self._bank_for(conv)     # applies dirty rescatter
+        idx = names.index(out_name)
+        self.tenants[out_name].program = bank.swap_out(idx)
+        bank.swap_in(idx, t_in.program)
+        names[idx] = in_name
+        member[member.index(out_name)] = in_name
+        self._groups.pop(conv, None)
+        self._dirty.discard(in_name)
+        spd = len(names) // max(self.pod_devices, 1)
+        return _pod.Route(device=idx // spd, slot=idx % spd, index=idx,
+                          conv=conv)
+
+    def add_resident(self, in_name: str):
+        """Promote ``in_name`` without demoting anyone: fill a pod-mode
+        pad slot in place when one exists (routed ``swap_in``), else
+        grow the roster (bank restacks on the next flush).  Returns the
+        filled :class:`repro.launch.pod.Route` or ``None``."""
+        conv = self.tenants[in_name].spec.kind == "conv"
+        member = self._membership.get(conv)
+        assert member is not None, "set_resident() first"
+        assert in_name not in member, in_name
+        self.membership_swaps += 1
+        if conv in self._banks:
+            names, bank = self._bank_for(conv)
+            pad = _pod.first_pad_slot(names)
+            if pad is not None:
+                bank.swap_in(pad, self.tenants[in_name].program)
+                names[pad] = in_name
+                member.append(in_name)
+                self._groups.pop(conv, None)
+                self._dirty.discard(in_name)
+                spd = len(names) // max(self.pod_devices, 1)
+                return _pod.Route(device=pad // spd, slot=pad % spd,
+                                  index=pad, conv=conv)
+        member.append(in_name)
+        self._banks.pop(conv, None)
+        self._groups.pop(conv, None)
+        return None
 
     def _bank_for(self, conv: bool) -> Tuple[List[str], ProgramBank]:
         """Resident ProgramBank over ALL tenants of a stage family (flat
@@ -271,22 +392,26 @@ class TMServer:
         """Queue an inference request for the next stacked flush."""
         tenant = self.tenants[name]
         lits, n = self._encode_request(tenant, x, encoded)
-        self._pending.append((name, lits, n))
+        self._pending.append((name, lits, n, time.perf_counter()))
 
-    def flush(self) -> Dict[str, np.ndarray]:
-        """Serve every pending request in ONE stacked launch per stage
-        family: the full tenant bank executes (vmapped over the program
-        axis); tenants without a pending request run their last/zero
-        slot and their outputs are dropped.  Returns {tenant: prediction}
-        (last request wins if a tenant queued twice)."""
+    def flush_async(self) -> Optional[PendingFlush]:
+        """Launch phase of :meth:`flush`: dispatch ONE stacked launch per
+        stage family with pending requests (plus one single-program
+        launch per pending NON-resident tenant — the cold path) and
+        return a :class:`PendingFlush` WITHOUT fetching any result, so a
+        driver can overlap the device work with host encode of the next
+        batch.  An empty queue is a cheap no-op (``None``): no bank
+        build, no launch, no device sync — the background flush loop
+        calls this on a timer."""
+        if not self._pending:
+            return None
         pending, self._pending = self._pending, []
-        if not pending:
-            return {}
-        out: Dict[str, np.ndarray] = {}
-        by_name: Dict[str, Tuple[jax.Array, int]] = {}
-        for name, lits, n in pending:
-            by_name[name] = (lits, n)
+        t0 = time.perf_counter()
+        by_name: Dict[str, Tuple[jax.Array, int, float]] = {}
+        for name, lits, n, t_enq in pending:
+            by_name[name] = (lits, n, t_enq)
             self.requests += 1
+        hot, cold, claimed = [], [], set()
         for conv in (False, True):
             group = self._groups.get(conv)
             if group is None:
@@ -294,6 +419,7 @@ class TMServer:
             req_names = [n for n in group if n in by_name]
             if not req_names:
                 continue
+            claimed.update(req_names)
             names, bank = self._bank_for(conv)
             # idle slots replay a pending tenant's literals — their
             # outputs are dropped, so the filler's values are irrelevant
@@ -305,32 +431,77 @@ class TMServer:
             self.stacked_launches += 1
             self.coalesced_requests += len(req_names)
             if not conv:
-                # flat banks decode IN-TRACE: fetch two tiny [K, B]
-                # planes, no host argmax, no clause-matrix round trip
-                preds, votes = bank.predict(lits)
-                preds_np = np.asarray(preds)
-                votes_np = (np.asarray(votes) if any(
-                    self._decode_info[n][0] for n in req_names) else None)
+                # flat banks decode IN-TRACE: two tiny [K, B] planes, no
+                # host argmax, no clause-matrix round trip
+                hot.append((False, list(names)) + tuple(bank.predict(lits)))
+            else:
+                hot.append((True, list(names)) + tuple(bank.infer(lits)))
+        for name in by_name:
+            # requests for tenants OUTSIDE the resident roster (dynamic
+            # bank membership demoted them) fall back to a per-request
+            # single-program launch — the measured cold path
+            if name in claimed:
+                continue
+            tenant = self.tenants[name]
+            sums, cl = self.engine.infer_fn(tenant.spec)(
+                tenant.program, by_name[name][0])
+            self.cold_requests += 1
+            cold.append((name, sums, cl))
+        return PendingFlush(
+            t0=t0,
+            served={n: v[2] for n, v in by_name.items()},
+            n_real={n: v[1] for n, v in by_name.items()},
+            hot=hot, cold=cold)
+
+    def collect(self, pf: Optional[PendingFlush]) -> Dict[str, np.ndarray]:
+        """Fetch phase of :meth:`flush`: materialise a
+        :class:`PendingFlush`'s lazy outputs, decode per tenant, and
+        record per-tenant flush latency.  Returns {tenant: prediction}."""
+        if pf is None:
+            return {}
+        out: Dict[str, np.ndarray] = {}
+        for conv, names, a, b in pf.hot:
+            if not conv:
+                preds_np = np.asarray(a)
+                votes_np = (np.asarray(b) if any(
+                    self._decode_info[n][0] for n in names
+                    if n in pf.n_real) else None)
                 for k, name in enumerate(names):
-                    if name not in by_name:
+                    if name not in pf.n_real:
                         continue
                     is_reg, t = self._decode_info[name]
-                    n_real = by_name[name][1]
+                    n_real = pf.n_real[name]
                     if is_reg:
                         out[name] = (votes_np[k][:n_real]
                                      .astype(np.float32) / t)
                     else:
                         out[name] = preds_np[k][:n_real]
                 continue
-            sums, cl = bank.infer(lits)
-            sums_np = np.asarray(sums)
-            preds = np.argmax(sums_np, axis=-1)
+            preds = np.argmax(np.asarray(a), axis=-1)
             for k, name in enumerate(names):
-                if name not in by_name:
-                    continue
-                n_real = by_name[name][1]
-                out[name] = preds[k][:n_real]
+                if name in pf.n_real:
+                    out[name] = preds[k][:pf.n_real[name]]
+        for name, sums, cl in pf.cold:
+            is_reg, t = self._decode_info[name]
+            n_real = pf.n_real[name]
+            if is_reg:
+                votes = np.clip(np.asarray(cl).sum(-1), 0, t)
+                out[name] = votes[:n_real].astype(np.float32) / t
+            else:
+                out[name] = np.argmax(np.asarray(sums), axis=-1)[:n_real]
+        t_done = time.perf_counter()
+        for name, t_enq in pf.served.items():
+            self._last_flush[name] = t_done - t_enq
         return out
+
+    def flush(self) -> Dict[str, np.ndarray]:
+        """Serve every pending request in ONE stacked launch per stage
+        family: the full tenant bank executes (vmapped over the program
+        axis); tenants without a pending request run their last/zero
+        slot and their outputs are dropped.  Returns {tenant: prediction}
+        (last request wins if a tenant queued twice).  Equivalent to
+        ``collect(flush_async())`` — the synchronous convenience path."""
+        return self.collect(self.flush_async())
 
     def unstack(self, conv: bool = False) -> Dict[str, DTMProgram]:
         """Swap every bank slot back out to its tenant (and return the
@@ -396,11 +567,22 @@ class TMServer:
         return 1.0 - int(acc[0]) / int(acc[1])
 
     def stats(self) -> dict:
+        resident = self.resident_names()
         return {"tenants": sorted(self.tenants), "requests": self.requests,
                 "swaps": self.swaps, "cache": self.engine.cache_report(),
                 "pod_devices": self.pod_devices,
                 "stacked_launches": self.stacked_launches,
                 "coalesced_requests": self.coalesced_requests,
+                # operator visibility (ISSUE 7): backlog + bank membership
+                # + per-tenant service latency of the last flush
+                "queue_depth": len(self._pending),
+                "resident_tenants": len(resident),
+                "swapped_tenants": len(self.tenants) - len(resident),
+                "resident": sorted(resident),
+                "cold_requests": self.cold_requests,
+                "membership_swaps": self.membership_swaps,
+                "last_flush_latency_s": dict(sorted(
+                    self._last_flush.items())),
                 "program_nbytes": {n: self.program_nbytes(n)
                                    for n in sorted(self.tenants)},
                 "skip_frac": {n: self.skip_frac(n)
