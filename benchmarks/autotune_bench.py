@@ -1,0 +1,94 @@
+"""Autotuner plan sweep: what measure mode picks on THIS host, per stage.
+
+Runs the kernels/autotune.py measure pass against a throw-away plan cache
+for a small shape grid (edge + throughput batch buckets), reports every
+winning plan with its measured wall-clock, and compares it against the
+roofline seed plan — a disagreement is not an error (that is the point of
+measuring), but a large one on TPU hardware means the tm_perf cost model
+needs recalibrating.
+
+Writes ``BENCH_autotune.json``.  Deliberately UNGUARDED by
+check_regression: the winners are host-dependent by design (CPU containers
+pick VPU word paths where a TPU picks the MXU recast).
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.autotune_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+from repro.kernels import autotune
+
+from .common import FAST, row
+
+OUT_PATH = os.environ.get("BENCH_AUTOTUNE_PATH", "BENCH_autotune.json")
+
+# (stage, batch, (L, R, H)) grid: edge and throughput buckets per stage
+GRID = [
+    ("eval", 1), ("eval", 8), ("eval", 256),
+    ("train", 8), ("train", 256),
+    ("ta", None),
+]
+
+
+def run(smoke: bool | None = None, out_path: str = OUT_PATH) -> dict:
+    smoke = FAST if smoke is None else smoke
+    shape = (256, 128, 4) if smoke else (1024, 512, 8)
+    entries = []
+    old_cache = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    old_mode = os.environ.get("REPRO_AUTOTUNE")
+    with tempfile.TemporaryDirectory() as tmp:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(tmp, "plans.json")
+        try:
+            for stage, batch in GRID:
+                os.environ["REPRO_AUTOTUNE"] = "seed"
+                autotune.clear_cache()
+                seed_plan = autotune.lookup(stage, batch, shape)
+                os.environ["REPRO_AUTOTUNE"] = "measure"
+                autotune.clear_cache()
+                plan = autotune.lookup(stage, batch, shape)
+                if plan is None:
+                    continue
+                seed_path = None if seed_plan is None else seed_plan["path"]
+                row(f"autotune/{autotune.plan_key(stage, batch, shape)}",
+                    plan["us"],
+                    f"path={plan['path']};tiles={plan['tiles']};"
+                    f"seed_path={seed_path}")
+                entries.append({
+                    "key": autotune.plan_key(stage, batch, shape),
+                    "stage": stage, "batch": batch,
+                    "shape": {"L": shape[0], "R": shape[1], "H": shape[2]},
+                    "measured": plan, "seed_path": seed_path,
+                    "agrees_with_seed": plan["path"] == seed_path,
+                })
+        finally:
+            for k, v in (("REPRO_AUTOTUNE_CACHE", old_cache),
+                         ("REPRO_AUTOTUNE", old_mode)):
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+            autotune.clear_cache()
+    payload = {
+        "benchmark": "autotune",
+        "smoke": bool(smoke),
+        "device_kind": autotune.device_kind(),
+        "entries": entries,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"# wrote {out_path} ({len(entries)} plans)")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shape grid, fewer timing iterations")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke or None, out_path=args.out)

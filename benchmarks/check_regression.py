@@ -18,7 +18,13 @@ same-machine comparison.
 Guarded metrics:
 
 * fused entries    — ``us_per_call``   (lower is better)
+* fused kernel_bench — ``streamed_over_inkernel`` TA-PRNG ratio (higher
+  is better; collapse to ~1x = the in-kernel stream fell back to
+  materialising the random tensor)
 * packed entries   — ``us_per_call``   (lower is better)
+* packed headline  — ``mxu_popcount_speedup_b256`` (higher is better;
+  deterministic v5e roofline ratio — drops only if the dispatch/cost
+  model changed)
 * session fit      — ``scan_steps_per_s``   (higher is better)
 * session serve    — ``stacked_req_per_s``  (higher is better)
 * skip entries     — compact-vs-dense ``speedup`` at skip ≥ 0.5 (higher
@@ -66,6 +72,14 @@ def _extract(fname: str, report: dict) -> Metrics:
             if "us_per_call" in e:
                 out[f"fused/{e['name']}/{e['path']}"] = (e["us_per_call"],
                                                          False)
+        # kernel_bench: the in-kernel TA-update PRNG vs the streamed
+        # random-tensor baseline.  Guard the RATIO (machine-portable —
+        # streamed computes the identical update plus a [B,C,L] uint32
+        # materialisation, so a collapse to ~1x means the in-kernel
+        # stream silently fell back to streaming).
+        for e in report.get("kernel_bench", []):
+            out[f"fused/ta_prng_ratio/b{e['B']}"] = (
+                e["streamed_over_inkernel"], True)
     elif fname == "BENCH_packed.json":
         # byte-accounting entries (program payload sizes) carry no
         # wall-clock — only timed entries are guarded
@@ -73,6 +87,13 @@ def _extract(fname: str, report: dict) -> Metrics:
             if "us_per_call" in e and "B" in e:
                 out[f"packed/{e['name']}/b{e['B']}"] = (e["us_per_call"],
                                                         False)
+        # popcount-as-matmul headline: the v5e roofline speedup of the
+        # mxu_popcount leg over the VPU word path at B=256 — fully
+        # deterministic (same cost model the autotune seed plans read),
+        # so any drop means the dispatch/cost model changed
+        if "mxu_popcount_speedup_b256" in report:
+            out["packed/mxu_popcount_speedup_b256"] = (
+                report["mxu_popcount_speedup_b256"], True)
     elif fname == "BENCH_session.json":
         for e in report.get("fit", []):
             out[f"session/fit_b{e['batch']}"] = (e["scan_steps_per_s"],

@@ -28,6 +28,26 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def time_interleaved(fa: Callable, fb: Callable, warmup: int = 1,
+                     iters: int = 3) -> tuple:
+    """Median wall-times (us) of two thunks measured back-to-back in
+    alternation — run-to-run drift (thermal, host contention) hits both
+    columns equally, so their RATIO is stable enough to regression-guard
+    even on noisy CI runners."""
+    for _ in range(warmup):
+        jax.block_until_ready(fa())
+        jax.block_until_ready(fb())
+    tas, tbs = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fa())
+        tas.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fb())
+        tbs.append(time.perf_counter() - t0)
+    return float(np.median(tas) * 1e6), float(np.median(tbs) * 1e6)
+
+
 def row(name: str, us: float, derived: str = "") -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line)

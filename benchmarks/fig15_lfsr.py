@@ -1,15 +1,70 @@
 """Fig 15: LFSR length × seed-refresh sweep — short LFSRs quantise the
 feedback-probability comparisons and correlate lanes; the paper's master-
-slave re-seeding recovers most of the loss at small L."""
+slave re-seeding recovers most of the loss at small L.
+
+Also measures the ISSUE-8 in-kernel PRNG win (:func:`kernel_bench`): the
+TA update with its random stream generated IN the kernel vs the streamed
+baseline that materialises the same [B, C, L] uint32 tensor first —
+interleaved wall-clock plus the analytic HBM random-bits traffic both
+paths move.  The section is embedded in ``BENCH_fused.json`` by
+``fused_step_bench.run()`` and ratio-guarded by ``check_regression.py``.
+"""
 from __future__ import annotations
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.api import TM, TMSpec
+from repro.kernels import ta_update_op
+from repro.launch.tm_perf import ta_rand_bytes
 from repro.data import MNIST_LIKE, make_bool_dataset
 
-from .common import FAST, row
+from .common import FAST, row, time_interleaved
+
+
+def kernel_bench(smoke: bool | None = None) -> list:
+    """In-kernel vs streamed TA-update PRNG, edge batches (B <= 8).
+
+    Both columns run the jnp ref backend (the meaningful CPU wall-clock;
+    interpret-mode Pallas numbers are relative only) with the lfsr stream
+    family.  The streamed column computes the IDENTICAL update from a
+    pre-materialised random tensor — strictly more work and
+    ``B*C*L*4`` more HBM bytes, so ``streamed_over_inkernel >= 1`` is a
+    machine-portable ratio (guarded)."""
+    # fixed DTM-L-ish shape regardless of smoke: at toy sizes the two jit
+    # programs differ by less than host dispatch noise and the ratio is
+    # meaningless — here it is stably >= 1 on CPU at both batches
+    del smoke
+    C, L, iters = 512, 1024, 3
+    rng = np.random.default_rng(0)
+    ta = jnp.asarray(rng.integers(0, 256, (C, L)), jnp.int32)
+    lm = jnp.ones((L,), jnp.int32)
+    entries = []
+    for B in (1, 8):
+        lit = jnp.asarray(rng.integers(0, 2, (B, L)), jnp.int8)
+        cl = jnp.asarray(rng.integers(0, 2, (B, C)), jnp.int8)
+        t1 = jnp.asarray(rng.integers(0, 2, (B, C)), jnp.int8)
+        t2 = jnp.asarray(rng.integers(0, 2, (B, C)), jnp.int8)
+        kw = dict(backend="ref", prng="lfsr", lfsr_bits=24)
+        us_in, us_st = time_interleaved(
+            lambda: ta_update_op(ta, lit, cl, t1, t2, lm, 3, 9000, **kw),
+            lambda: ta_update_op(ta, lit, cl, t1, t2, lm, 3, 9000,
+                                 stream=True, **kw),
+            iters=iters)
+        bts = ta_rand_bytes(B, L, C)
+        ratio = us_st / us_in
+        row(f"fig15/kernel_prng/B{B}", us_in,
+            f"streamed_us={us_st:.1f};ratio={ratio:.2f};"
+            f"rand_bytes_saved={bts['streamed_rand_bytes']}")
+        entries.append({"name": "ta_prng", "B": B,
+                        "shape": {"clauses": C, "literals": L},
+                        "us_inkernel": us_in, "us_streamed": us_st,
+                        "streamed_over_inkernel": ratio, **bts})
+    return entries
 
 
 def run() -> None:
+    kernel_bench()
     n_train, n_test = (640, 256) if FAST else (1536, 512)
     x, y = make_bool_dataset(MNIST_LIKE, n_train + n_test)
     xtr, ytr, xte, yte = x[:n_train], y[:n_train], x[n_train:], y[n_train:]

@@ -89,11 +89,16 @@ def run(smoke: bool | None = None, out_path: str = OUT_PATH) -> dict:
                 "us_per_call": us, "ops": flops, "ops_per_s": ops_per_s,
                 "v5e_roofline_s": rl,
             })
+    # ISSUE-8 kernel-speed section: the in-kernel TA-update PRNG vs the
+    # streamed random-tensor baseline (interleaved; ratio-guarded)
+    from . import fig15_lfsr
+    kernel_bench = fig15_lfsr.kernel_bench(smoke)
     payload = {
         "benchmark": "fused_step",
         "smoke": bool(smoke),
         "interpret_mode_pallas": True,   # relative numbers off-TPU
         "entries": entries,
+        "kernel_bench": kernel_bench,
     }
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)

@@ -38,10 +38,11 @@ import numpy as np
 from repro import api
 from repro.api import TMSpec
 from repro.core.booleanize import pack_literals
-from repro.kernels import clause_eval_op, packed_clause_eval_op, select_path
-from repro.launch.tm_perf import clause_eval_bytes
+from repro.kernels import (clause_eval_op, packed_clause_eval_op,
+                           packed_clause_mxu_op, select_path)
+from repro.launch.tm_perf import clause_eval_bytes, packed_eval_costs
 
-from .common import FAST, row, time_call
+from .common import FAST, row, time_call, time_interleaved
 
 OUT_PATH = os.environ.get("BENCH_PACKED_PATH", "BENCH_packed.json")
 
@@ -63,10 +64,14 @@ def _op_entries(f: int, C: int, iters: int) -> list:
             "packed": lambda: packed_clause_eval_op(plit, pinc,
                                                     eval_mode=True,
                                                     n_bits=L, backend="ref"),
+            "packed_mxu": lambda: packed_clause_mxu_op(plit, pinc,
+                                                       eval_mode=True,
+                                                       n_bits=L,
+                                                       backend="ref"),
         }
         for name, fn in paths.items():
             us = time_call(fn, warmup=1, iters=iters)
-            bts = clause_eval_bytes(B, L, C, packed=(name == "packed"))
+            bts = clause_eval_bytes(B, L, C, packed=(name != "unpacked"))
             row(f"packed/{name}/B{B}", us,
                 f"lit_bytes={bts['literal_bytes']};"
                 f"total_bytes={bts['total_bytes']}")
@@ -108,13 +113,60 @@ def _program_entry(f: int, C: int) -> dict:
             "ratio": unpacked / packed}
 
 
+def _mxu_headline(f: int, C: int, iters: int) -> dict:
+    """The ISSUE-8 popcount-as-matmul claim at B=256.
+
+    The mxu-popcount win is an MXU-engine property (the systolic array's
+    int8 throughput vs the 8x128 VPU word path) — off-TPU there is no
+    MXU, so the committed headline is the v5e ROOFLINE ratio from the
+    same cost model the autotune seed plans read: deterministic,
+    machine-portable, and a collapse means the dispatch/cost model broke
+    (exactly what the guard is for).  The measured columns beside it are
+    this host's wall-clock (interleaved; on CPU the word path wins — the
+    roofline says so too at occupancy 1/128-ish, which is why dispatch is
+    batch-bucketed).
+
+    The headline shape is FIXED at DTM-L (f=512, C=512) regardless of
+    smoke: at toy shapes both legs are HBM-bound and the roofline ratio
+    degenerates to 1.0."""
+    del f, C
+    f, C = 512, 512
+    B, L = 256, 2 * f
+    costs = packed_eval_costs(B, L, C)
+    rng = np.random.default_rng(2)
+    plit = pack_literals(jnp.asarray(
+        (rng.random((B, L)) < 0.5).astype(np.int8)))
+    pinc = pack_literals(jnp.asarray(
+        (rng.random((C, L)) < 0.05).astype(np.int8)))
+    us_vpu, us_mxu = time_interleaved(
+        lambda: packed_clause_eval_op(plit, pinc, eval_mode=True, n_bits=L,
+                                      backend="ref"),
+        lambda: packed_clause_mxu_op(plit, pinc, eval_mode=True, n_bits=L,
+                                     backend="ref"),
+        iters=iters)
+    speedup = costs["vpu_s"] / costs["mxu_s"]
+    row("packed/mxu_popcount_b256", us_mxu,
+        f"roofline_speedup={speedup:.2f};vpu_wall_us={us_vpu:.1f};"
+        f"dispatch={select_path(None, batch=B, shape=(L, C, 4))}")
+    return {"name": "mxu_popcount_headline", "B": B,
+            "shape": {"features": f, "clauses": C},
+            "roofline_vpu_s": costs["vpu_s"],
+            "roofline_mxu_s": costs["mxu_s"],
+            "cpu_wall_us_vpu": us_vpu, "cpu_wall_us_mxu": us_mxu,
+            "mxu_popcount_speedup_b256": speedup}
+
+
 def run(smoke: bool | None = None, out_path: str = OUT_PATH) -> dict:
     smoke = FAST if smoke is None else smoke
-    f, C = (64, 128) if smoke else (512, 512)
+    # smoke floor (256, 256): big enough that the seed autotune plan's
+    # B=256 eval dispatch leaves the HBM-bound tie and picks the
+    # mxu_popcount recast, like the full shape does
+    f, C = (256, 256) if smoke else (512, 512)
     iters = 1 if smoke else 3
     op_entries = _op_entries(f, C, iters)
     engine_entries = _engine_entries(f, C, iters)
     program = _program_entry(f, C)
+    mxu = _mxu_headline(f, C, iters)
 
     # headline derived numbers: the acceptance claims, machine-readable
     by = {(e["name"], e["B"]): e for e in op_entries}
@@ -126,10 +178,13 @@ def run(smoke: bool | None = None, out_path: str = OUT_PATH) -> dict:
         "smoke": bool(smoke),
         "batches": list(BATCHES),
         "literal_bytes_ratio_b1": lit_ratio_b1,      # claim: >= 8
-        # claim: throughput batches keep the dense recast (mxu on TPU,
-        # the jnp oracle on CPU) — packing costs nothing at B=256
+        # claim: throughput batches run the packed-bitplane matmul recast
+        # (mxu_popcount under the seed autotune plan — 8x fewer HBM bytes
+        # than the dense-literal mxu path it displaces)
         "engine_b256_path": eng_by[256]["path"],
-        "entries": op_entries + engine_entries + [program],
+        # claim: >= 1.5 (v5e roofline — see _mxu_headline docstring)
+        "mxu_popcount_speedup_b256": mxu["mxu_popcount_speedup_b256"],
+        "entries": op_entries + engine_entries + [program, mxu],
     }
     with open(out_path, "w") as fh:
         json.dump(payload, fh, indent=2)

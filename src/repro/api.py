@@ -57,7 +57,8 @@ from repro.core.booleanize import Booleanizer, fit_thermometer
 from repro.core.dtm import DTMEngine, DTMProgram, TMSession
 from repro.core.evaluate import accuracy, batched_predict
 from repro.core.prng import PRNG
-from repro.core.types import COALESCED, TMConfig, TileConfig, VANILLA
+from repro.core.types import (COALESCED, PRNG_BACKENDS, TMConfig,
+                              TileConfig, VANILLA)
 
 KINDS = ("vanilla", "coalesced", "conv", "regression", "head")
 
@@ -146,6 +147,10 @@ class TMSpec:
 
     def __post_init__(self):
         assert self.kind in KINDS, self.kind
+        if self.prng_backend not in PRNG_BACKENDS:
+            raise ValueError(
+                f"prng_backend={self.prng_backend!r} not recognised; "
+                f"use one of {PRNG_BACKENDS}")
 
     # ---- derived geometry --------------------------------------------------
     @property

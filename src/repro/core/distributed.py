@@ -101,9 +101,15 @@ def _shard_prng(cfg: TMConfig, seed: int, idx) -> PRNG:
         st = jnp.uint32(seed) ^ (jnp.uint32(idx) * jnp.uint32(0x85EBCA6B))
         return PRNG("counter", cfg.lfsr_bits, cfg.rand_bits,
                     cfg.seed_refresh, st)
-    key = jax.random.fold_in(jax.random.PRNGKey(seed), idx)
-    return PRNG("threefry", cfg.lfsr_bits, cfg.rand_bits, cfg.seed_refresh,
-                key)
+    if cfg.prng_backend == "threefry":
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), idx)
+        return PRNG("threefry", cfg.lfsr_bits, cfg.rand_bits,
+                    cfg.seed_refresh, key)
+    # TMConfig validates at construction; a hand-rolled cfg object (tests,
+    # duck typing) must not silently get threefry streams on a typo.
+    raise ValueError(
+        f"prng_backend={cfg.prng_backend!r} not recognised; "
+        "use lfsr, counter, or threefry")
 
 
 def dp_train_step(cfg: TMConfig, state: TMState, literals: jax.Array,

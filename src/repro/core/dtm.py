@@ -348,17 +348,40 @@ class DTMEngine:
 
         ``lanes`` is the program-bank width when the stage runs under a
         vmapped bank executable (per-program batch still governs the
-        edge-regime choice — see ``select_path``)."""
+        edge-regime choice — see ``select_path``).  The engine hands the
+        dispatcher its padded (L, R, H) geometry, so the autotune plan
+        cache participates (``REPRO_AUTOTUNE``; kernels/autotune.py)."""
         path = kops.select_path(None, batch=batch, training=False,
-                                lanes=lanes)
+                                lanes=lanes, shape=(self.L, self.R, self.H))
         if path == kops.PATH_FUSED:
             # the fused kernel only exists for train steps; eval falls back
             # to its dense front half (documented in README)
             path = kops.PATH_REF if self.backend == "ref" else kops.PATH_MXU
         if self.backend == "ref" and path == kops.PATH_MXU:
             path = kops.PATH_REF    # jnp matmul recast IS the mxu oracle
+        # mxu_popcount is NOT remapped on ref: packed_clause_mxu_ref IS the
+        # bit-exact jnp recast of the bitplane-matmul kernel.
         self._stage_paths[stage] = path
         return path
+
+    def _ta_prng(self, prng: PRNG, stage: str) -> tuple:
+        """Resolve the TA-update random-stream family + provenance for
+        this trace and record it (key ``<stage>_prng`` in
+        ``path_per_stage``, e.g. ``lfsr-inkernel``).
+
+        The FAMILY follows the model's ``prng_backend``: ``lfsr`` programs
+        advance the paper-faithful Galois cluster INSIDE the TA kernels
+        (per-TA lanes, ``lfsr_bits`` wide, master refresh per
+        ``seed_refresh`` — Fig 8 in place); ``counter``/``threefry`` keep
+        the TPU-native counter chains.  The PROVENANCE is
+        ``REPRO_TA_PRNG``: ``inkernel`` (default, zero random-bits HBM
+        traffic) or ``stream`` (the materialised [B, C, L] baseline,
+        bit-identical — benchmarks/fig15_lfsr.py)."""
+        family = "lfsr" if prng.backend == "lfsr" else "counter"
+        stream = kops.resolve_ta_prng() == kops.TA_PRNG_STREAM
+        self._stage_paths[stage + "_prng"] = (
+            f"{family}-{'stream' if stream else 'inkernel'}")
+        return family, stream
 
     def _clause_outputs(self, prog: DTMProgram, plits: jax.Array,
                         eval_mode: bool, stage: str,
@@ -373,6 +396,14 @@ class DTMEngine:
             cl = kops.packed_clause_eval_op(plits, prog.inc,
                                             eval_mode=eval_mode,
                                             n_bits=self.L, backend=self._kb)
+        elif path == kops.PATH_PACKED_MXU:
+            # popcount-as-matmul: same packed operands as packed_vpu, int8
+            # bitplane dot products on the systolic array (throughput
+            # batches; the autotune seed plan picks this over the dense
+            # mxu recast — identical compute, ~8x fewer literal bytes).
+            cl = kops.packed_clause_mxu_op(plits, prog.inc,
+                                           eval_mode=eval_mode,
+                                           n_bits=self.L, backend=self._kb)
         elif path == kops.PATH_MXU:
             lits = unpack_literals(plits, self.L)
             include = unpack_literals(prog.inc, self.L)
@@ -471,15 +502,17 @@ class DTMEngine:
         ``path_per_stage`` at trace time."""
         wf = prog.w_frozen.astype(jnp.int32)
         path = kops.select_path(None, batch=plits.shape[0], training=True,
-                                lanes=lanes)
-        if self.backend == "ref" and path != kops.PATH_PACKED:
+                                lanes=lanes, shape=(self.L, self.R, self.H))
+        if (self.backend == "ref"
+                and path not in (kops.PATH_PACKED, kops.PATH_PACKED_MXU)):
             path = kops.PATH_REF
         self._stage_paths[stage] = path
-        if path == kops.PATH_PACKED:
+        if path in (kops.PATH_PACKED, kops.PATH_PACKED_MXU):
             return kops.packed_step_op(
                 plits, prog.inc, prog.weights, cls_lab, neg, sel_rand[0],
                 sel_rand[1], prog.cl_mask, prog.h_mask, prog.T, wf,
-                rand_bits=self.rand_bits, backend=self._kb, n_bits=self.L)
+                rand_bits=self.rand_bits, backend=self._kb, n_bits=self.L,
+                mxu=(path == kops.PATH_PACKED_MXU))
         include = unpack_literals(prog.inc, self.L)                # [R,L]
         if path == kops.PATH_MXU:
             return kops.unfused_step_op(
@@ -576,8 +609,9 @@ class DTMEngine:
         # and maintains only their include-bitplane rows.  Bit-identical
         # to the dense update; dense is forced by REPRO_SKIP=0 or for
         # vmapped program banks (see kernels.select_ta_path).
-        ta_path = kops.select_ta_path(lanes)
+        ta_path = kops.select_ta_path(lanes, shape=(self.L, self.R, self.H))
         self._stage_paths[stage + "_ta"] = ta_path
+        ta_prng, stream = self._ta_prng(prng, stage)
         if ta_path == kops.TA_COMPACT:
             # granularity: the Pallas path gathers whole (yt, xt) VMEM
             # tiles (group is ignored); the jnp ref path has no tiling
@@ -589,12 +623,15 @@ class DTMEngine:
                 prog.ta, lit2, cl2, t1, t2, prog.l_mask, prog.inc,
                 seed=ta_seed, p_ta=prog.p_ta, rand_bits=self.rand_bits,
                 boost=prog.boost, n_states=prog.n_states, backend=self._kb,
-                group=1)
+                group=1, prng=ta_prng, lfsr_bits=prng.lfsr_bits,
+                seed_refresh=prng.seed_refresh)
         else:
             new_ta, new_inc = kops.ta_update_op(
                 prog.ta, lit2, cl2, t1, t2, prog.l_mask, seed=ta_seed,
                 p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
-                n_states=prog.n_states, backend=self._kb, emit_include=True)
+                n_states=prog.n_states, backend=self._kb, emit_include=True,
+                prng=ta_prng, lfsr_bits=prng.lfsr_bits,
+                seed_refresh=prng.seed_refresh, stream=stream)
 
         new_w, stats = self._weights_and_stats(
             prog, cl, sel_lab, sel_neg, cls_lab, neg, correct, abs_err)
@@ -848,22 +885,26 @@ class DTMEngine:
         cl2 = jnp.concatenate([cl, cl], axis=0)
         t1 = jnp.concatenate([t1_lab, t1_neg], axis=0)
         t2 = jnp.concatenate([t2_lab, t2_neg], axis=0)
-        ta_path = kops.select_ta_path(1)
+        ta_path = kops.select_ta_path(1, shape=(self.L, self.R, self.H))
         self._stage_paths[stage + "_ta"] = ta_path
         self._stage_paths[stage + "_shard"] = f"{axis}:{shards}"
+        ta_prng, stream = self._ta_prng(prng, stage)
         row0_u = row0.astype(jnp.uint32)
         if ta_path == kops.TA_COMPACT:
             new_ta, new_inc = kops.ta_update_compact_op(
                 prog.ta, lit2, cl2, t1, t2, prog.l_mask, prog.inc,
                 seed=ta_seed, p_ta=prog.p_ta, rand_bits=self.rand_bits,
                 boost=prog.boost, n_states=prog.n_states,
-                backend=self._kb, group=1, row0=row0_u)
+                backend=self._kb, group=1, row0=row0_u, prng=ta_prng,
+                lfsr_bits=prng.lfsr_bits, seed_refresh=prng.seed_refresh)
         else:
             new_ta, new_inc = kops.ta_update_op(
                 prog.ta, lit2, cl2, t1, t2, prog.l_mask, seed=ta_seed,
                 p_ta=prog.p_ta, rand_bits=self.rand_bits, boost=prog.boost,
                 n_states=prog.n_states, backend=self._kb,
-                emit_include=True, row0=row0_u)
+                emit_include=True, row0=row0_u, prng=ta_prng,
+                lfsr_bits=prng.lfsr_bits, seed_refresh=prng.seed_refresh,
+                stream=stream)
 
         new_w, stats = self._weights_and_stats_sharded(
             prog, cl, sel_lab, sel_neg, cls_lab, neg, correct, abs_err,

@@ -18,6 +18,11 @@ import jax.numpy as jnp
 VANILLA = "vanilla"
 COALESCED = "coalesced"
 
+# Recognised PRNG stream constructions (core/prng.py); validated at config
+# level so a typo fails HERE with a clear message instead of silently
+# falling through to the threefry branch downstream.
+PRNG_BACKENDS = ("lfsr", "counter", "threefry")
+
 
 @dataclasses.dataclass(frozen=True)
 class TMConfig:
@@ -44,6 +49,10 @@ class TMConfig:
         assert 2 <= self.ta_bits <= 16
         assert 2 <= self.weight_bits <= 31
         assert self.classes >= 2
+        if self.prng_backend not in PRNG_BACKENDS:
+            raise ValueError(
+                f"prng_backend={self.prng_backend!r} not recognised; "
+                f"use one of {PRNG_BACKENDS}")
 
     # ---- derived quantities ------------------------------------------------
     @property

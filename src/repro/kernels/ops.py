@@ -9,13 +9,24 @@ Two knobs are resolved HERE, once, for every kernel:
 * ``REPRO_INTERPRET`` — ``auto`` (default: interpret iff the JAX backend is
   not a TPU), ``1`` (force interpret — CI determinism), ``0`` (force
   compiled).  Read at trace time; flip it before the first kernel call.
-* ``REPRO_KERNEL_PATH`` — force one of ``mxu | packed_vpu | fused | ref``
-  instead of the shape-based :func:`select_path` choice.
+* ``REPRO_KERNEL_PATH`` — force one of
+  ``mxu | packed_vpu | mxu_popcount | fused | ref`` instead of the
+  shape-based :func:`select_path` choice.
 * ``REPRO_SKIP`` — ``auto``/``1`` (default) runs the TA-update stage as the
   Alg-6 clause-skip compaction (:func:`ta_update_compact_op`, bit-identical
   to dense); ``0`` forces the dense update (the CI leg).  The decision is
   the SKIP dimension of the dispatch (:func:`select_ta_path`), recorded per
   train stage in ``cache_report()["path_per_stage"]``.
+* ``REPRO_TA_PRNG`` — ``auto`` (default: the TA-update random stream is
+  generated IN-KERNEL, family picked by the model's ``prng_backend``) or
+  ``stream`` (materialise the identical stream as a [B, C, L] tensor and
+  feed it to the kernel — the measured HBM-traffic baseline,
+  benchmarks/fig15_lfsr.py).  ``inkernel`` is accepted as an explicit
+  alias for auto's choice.
+* ``REPRO_AUTOTUNE`` — ``off | seed | measure`` (kernels/autotune.py):
+  when a workload SHAPE is handed to :func:`select_path` /
+  :func:`select_ta_path`, the autotune plan for (device, stage, batch
+  bucket, shape) is consulted before the heuristics below.
 
 :func:`select_path` is the MATADOR-style datapath selector: the MXU matmul
 recast for throughput batches, the bit-packed VPU path for the edge
@@ -35,16 +46,23 @@ from . import ref
 from .class_sum import class_sum
 from .clause_eval import clause_eval
 from .fused_step import fused_step
-from .packed_clause import packed_clause_eval
-from .ta_update import ta_update, ta_update_sparse
+from .packed_clause import packed_clause_eval, packed_clause_eval_mxu
+from .ta_update import ta_update, ta_update_sparse, ta_update_streamed
+
 from .tm_infer import tm_infer
 
 # Kernel path names (the dispatchable datapath variants).
 PATH_MXU = "mxu"              # int8 matmul recast on the systolic array
 PATH_PACKED = "packed_vpu"    # 32-literals-per-word bitwise VPU path
+PATH_PACKED_MXU = "mxu_popcount"  # packed words -> int8 bitplane matmul
 PATH_FUSED = "fused"          # single-launch training-step front half
 PATH_REF = "ref"              # pure-jnp oracle (also the CPU fast path)
-_PATHS = (PATH_MXU, PATH_PACKED, PATH_FUSED, PATH_REF)
+_PATHS = (PATH_MXU, PATH_PACKED, PATH_PACKED_MXU, PATH_FUSED, PATH_REF)
+
+# TA-update random-stream provenance (the PRNG dimension of the dispatch).
+TA_PRNG_INKERNEL = "inkernel"     # generate where you consume (default)
+TA_PRNG_STREAM = "stream"         # [B, C, L] uint32 tensor from HBM
+_TA_PRNGS = (TA_PRNG_INKERNEL, TA_PRNG_STREAM)
 
 # Below this batch the matmul recast wastes systolic occupancy and the
 # packed VPU path wins (edge single-datapoint regime, Fig 11).
@@ -93,7 +111,23 @@ def resolve_skip() -> bool:
     raise ValueError(f"REPRO_SKIP={env!r} not recognised; use auto, 1, or 0")
 
 
-def select_ta_path(lanes: int = 1) -> str:
+def resolve_ta_prng() -> str:
+    """Single source of truth for the TA random-stream provenance
+    (``REPRO_TA_PRNG``): :data:`TA_PRNG_INKERNEL` (default — zero HBM
+    random-bits traffic) or :data:`TA_PRNG_STREAM` (the materialised
+    baseline; bit-identical, B·C·L·4 extra bytes per step).  Read at
+    trace time, like ``REPRO_INTERPRET``."""
+    env = os.environ.get("REPRO_TA_PRNG", "auto").strip().lower()
+    if env in ("", "auto", TA_PRNG_INKERNEL):
+        return TA_PRNG_INKERNEL
+    if env == TA_PRNG_STREAM:
+        return TA_PRNG_STREAM
+    raise ValueError(
+        f"REPRO_TA_PRNG={env!r} not recognised; use auto, inkernel, or "
+        "stream")
+
+
+def select_ta_path(lanes: int = 1, shape=None) -> str:
     """The SKIP dimension of the dispatch: how the TA-update stage runs.
 
     Returns :data:`TA_COMPACT` (Alg-6 clause-skip compaction — gather the
@@ -103,14 +137,28 @@ def select_ta_path(lanes: int = 1) -> str:
     lowers the in-trace ``lax.switch`` over capacity buckets to a masked
     execution of EVERY branch per lane, which would cost more than dense.
     The engine records the decision per train stage in
-    ``cache_report()["path_per_stage"]`` (key ``<stage>_ta``)."""
+    ``cache_report()["path_per_stage"]`` (key ``<stage>_ta``).
+
+    ``shape`` (optional ``(L, R, H)``) additionally consults the autotune
+    plan cache (kernels/autotune.py) — a MEASURED dense-vs-compact plan
+    for this device/shape outranks the heuristic; no plan (or
+    ``REPRO_AUTOTUNE=off``) falls through to it.  The streamed-rand
+    baseline (``REPRO_TA_PRNG=stream``) has no compacted kernel, so it
+    forces dense."""
     if lanes > 1 or not resolve_skip():
         return TA_DENSE
+    if resolve_ta_prng() == TA_PRNG_STREAM:
+        return TA_DENSE
+    if shape is not None:
+        from . import autotune
+        planned = autotune.planned_path("ta", None, shape, lanes)
+        if planned in (TA_DENSE, TA_COMPACT):
+            return planned
     return TA_COMPACT
 
 
 def select_path(cfg=None, batch=None, training: bool = False,
-                lanes: int = 1) -> str:
+                lanes: int = 1, shape=None) -> str:
     """Pick the kernel path for a workload shape.
 
     cfg      optional TMConfig (reserved for model-shape heuristics)
@@ -127,6 +175,12 @@ def select_path(cfg=None, batch=None, training: bool = False,
              bank call sites hand the dispatcher the full launch
              geometry (recorded per stage; future tile-aware heuristics
              hook in here).
+    shape    optional (L, R, H) workload geometry.  When given, the
+             autotune plan cache (kernels/autotune.py; ``REPRO_AUTOTUNE``)
+             is consulted FIRST — a measured or roofline-seeded plan for
+             this (device, stage, batch bucket, shape) replaces the
+             hand-tuned thresholds below.  ``None`` (or
+             ``REPRO_AUTOTUNE=off``) keeps the heuristics.
     """
     env = os.environ.get("REPRO_KERNEL_PATH", "").strip().lower()
     if env in _PATHS:
@@ -134,6 +188,12 @@ def select_path(cfg=None, batch=None, training: bool = False,
     if env:   # typo'd forces must not silently fall back to the heuristic
         raise ValueError(
             f"REPRO_KERNEL_PATH={env!r} not recognised; use one of {_PATHS}")
+    if shape is not None:
+        from . import autotune
+        planned = autotune.planned_path("train" if training else "eval",
+                                        batch, shape, lanes)
+        if planned in _PATHS:
+            return planned
     if batch is not None and batch <= PACKED_MAX_BATCH:
         # edge regime: the packed bitwise path wins for BOTH directions —
         # training's front half runs packed clause eval + the shared Alg-3
@@ -225,11 +285,40 @@ def packed_clause_eval_op(packed_literals, packed_include, eval_mode=False,
     return out[:B, :C]
 
 
+@functools.partial(jax.jit, static_argnames=("eval_mode", "backend",
+                                             "n_bits", "bt", "yt", "wt"))
+def packed_clause_mxu_op(packed_literals, packed_include, eval_mode=False,
+                         backend="pallas", n_bits=None, bt=8, yt=128,
+                         wt=8):
+    """Packed [B,W]×[C,W] -> [B,C] on the MXU popcount leg
+    (:data:`PATH_PACKED_MXU`): uint32 words expand to int8 bitplanes
+    in-register and clause violations become int8 dot products — same
+    contract and bit-identical output as :func:`packed_clause_eval_op`,
+    matmul-rate compute for throughput batches.  ``wt`` defaults to 8
+    words (a 256-wide contraction per grid step)."""
+    if backend == "ref":
+        return ref.packed_clause_mxu_ref(packed_literals, packed_include,
+                                         eval_mode, n_bits=n_bits)
+    if n_bits is not None:
+        packed_include = ref.tail_mask_words(packed_include, n_bits)
+    B, W = packed_literals.shape
+    C = packed_include.shape[0]
+    lit = _pad2(packed_literals, bt, wt)
+    inc = _pad2(packed_include, yt, wt)
+    out = packed_clause_eval_mxu(lit, inc, eval_mode=eval_mode, bt=bt,
+                                 yt=yt, wt=wt,
+                                 interpret=resolve_interpret())
+    return out[:B, :C]
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "rand_bits", "backend", "emit_include", "yt", "xt"))
+    "rand_bits", "backend", "emit_include", "yt", "xt", "prng",
+    "lfsr_bits", "seed_refresh", "stream"))
 def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
                  rand_bits=16, boost=True, n_states=256, backend="pallas",
-                 emit_include=False, yt=128, xt=256, row0=0):
+                 emit_include=False, yt=128, xt=256, row0=0,
+                 prng="counter", lfsr_bits=24, seed_refresh=True,
+                 stream=False):
     """Batched TA update [C,L] -> [C,L] (pads C/L, strips on return).
 
     ``seed``/``p_ta``/``boost``/``n_states``/``row0`` may be traced scalars
@@ -242,18 +331,35 @@ def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
     updates them with exactly the streams a single-device launch would use
     for those rows (clause-sharded execution, launch/pod.py).
 
+    ``prng``/``lfsr_bits``/``seed_refresh`` (static) select the random
+    stream family — ``counter`` chains or the paper-faithful ``lfsr``
+    cluster (kernels/ta_update.py docstring).  ``stream=True`` (static;
+    normally driven by ``REPRO_TA_PRNG=stream`` via the engine) runs the
+    measured baseline: the IDENTICAL stream is materialised as a
+    [B, C, L] uint32 tensor (ref.ta_rand_stream at the padded keying) and
+    consumed from HBM — bit-identical outputs, B·C·L·4 extra bytes.
+
     ``emit_include=True`` returns ``(new_ta, new_inc)`` where ``new_inc``
     is the packed include bitplane uint32 [C, ceil(L/32)] of the UPDATED
     states — the update stage maintains the engine's canonical bitplane
     incrementally, fused into this same jitted call, so no consumer ever
     re-thresholds the full [C, L] TA matrix afterwards."""
     C = ta.shape[0]
+    B = literals.shape[0]
     if backend == "ref":
         rows = (jnp.asarray(row0, jnp.int32)
                 + jnp.arange(C, dtype=jnp.int32))
+        rands = None
+        if stream:
+            L = ta.shape[1]
+            rands = ref.ta_rand_stream(seed, B, C, L, rand_bits, prng,
+                                       lfsr_bits, seed_refresh, xt=xt,
+                                       row_idx=rows)
         new_ta = ref.ta_update_ref(ta, literals, clause_out, type1, type2,
                                    l_mask, seed, p_ta, rand_bits, boost,
-                                   n_states, row_idx=rows)
+                                   n_states, row_idx=rows, prng=prng,
+                                   lfsr_bits=lfsr_bits,
+                                   seed_refresh=seed_refresh, rands=rands)
     else:
         C, L = ta.shape
         # The PRNG stream is keyed on the padded row stride (ceil(L/xt)*xt);
@@ -265,10 +371,26 @@ def ta_update_op(ta, literals, clause_out, type1, type2, l_mask, seed, p_ta,
         t1_p = _pad2(type1, 1, yt)
         t2_p = _pad2(type2, 1, yt)
         lm = jnp.pad(l_mask, (0, (-L) % xt))
-        out = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed,
-                        p_ta=p_ta, rand_bits=rand_bits, boost=boost,
-                        n_states=n_states, yt=yt, xt=xt, row0=row0,
-                        interpret=resolve_interpret())
+        if stream:
+            # baseline: generate the SAME stream at the padded geometry
+            # (keys row0 + padded row index) and ship it through HBM.
+            C_pad, L_pad = ta_p.shape
+            rows_p = (jnp.asarray(row0, jnp.uint32)
+                      + jnp.arange(C_pad, dtype=jnp.uint32))
+            rands = ref.ta_rand_stream(seed, B, C_pad, L_pad, rand_bits,
+                                       prng, lfsr_bits, seed_refresh,
+                                       xt=xt, row_idx=rows_p)
+            out = ta_update_streamed(ta_p, lit_p, cl_p, t1_p, t2_p, lm,
+                                     rands, p_ta=p_ta, boost=boost,
+                                     n_states=n_states, yt=yt, xt=xt,
+                                     interpret=resolve_interpret())
+        else:
+            out = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed,
+                            p_ta=p_ta, rand_bits=rand_bits, boost=boost,
+                            n_states=n_states, yt=yt, xt=xt, row0=row0,
+                            prng=prng, lfsr_bits=lfsr_bits,
+                            seed_refresh=seed_refresh,
+                            interpret=resolve_interpret())
         new_ta = out[:C, :L]
     if emit_include:
         return new_ta, ref.pack_include(new_ta, n_states)
@@ -284,11 +406,13 @@ def _skip_caps(n_groups: int) -> tuple:
 
 
 @functools.partial(jax.jit, static_argnames=("rand_bits", "backend",
-                                             "group", "yt", "xt"))
+                                             "group", "yt", "xt", "prng",
+                                             "lfsr_bits", "seed_refresh"))
 def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
                          inc, seed, p_ta, rand_bits=16, boost=True,
                          n_states=256, backend="pallas", group=32,
-                         yt=128, xt=256, row0=0):
+                         yt=128, xt=256, row0=0, prng="counter",
+                         lfsr_bits=24, seed_refresh=True):
     """Clause-skip TA update (Alg 6 made real): bit-identical to
     ``ta_update_op(..., emit_include=True)`` but touches only ACTIVE
     clause groups.
@@ -313,7 +437,10 @@ def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
     ``row0`` (traced scalar, default 0) offsets every stream key's global
     row number — a clause shard passes its first global row so its
     compacted update reproduces the matching rows of a single-device
-    launch bit-for-bit (launch/pod.py).
+    launch bit-for-bit (launch/pod.py).  ``prng``/``lfsr_bits``/
+    ``seed_refresh`` (static) select the in-kernel stream family exactly
+    as in :func:`ta_update_op` — compaction is stream-transparent for
+    both families (keys ride the ORIGINAL row numbers).
     Returns ``(new_ta int32 [C, L], new_inc uint32 [C, W])``."""
     C, L = ta.shape
     g = yt if backend != "ref" else group
@@ -355,12 +482,16 @@ def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
                     jnp.take(t1_p, rows, axis=1),
                     jnp.take(t2_p, rows, axis=1), lm, seed, p_ta,
                     rand_bits, boost, n_states, xt=xt,
-                    row_idx=rows + jnp.asarray(row0, jnp.int32))
+                    row_idx=rows + jnp.asarray(row0, jnp.int32),
+                    prng=prng, lfsr_bits=lfsr_bits,
+                    seed_refresh=seed_refresh)
             else:
                 upd = ta_update_sparse(
                     ta_p, lit_p, cl_p, t1_p, t2_p, lm, gidx, seed=seed,
                     p_ta=p_ta, rand_bits=rand_bits, boost=boost,
                     n_states=n_states, yt=g, xt=xt, row0=row0,
+                    prng=prng, lfsr_bits=lfsr_bits,
+                    seed_refresh=seed_refresh,
                     interpret=resolve_interpret())
             # fill slots gather the last group (clamped, duplicate-safe:
             # they recompute identical values); scatter restores rows
@@ -376,11 +507,14 @@ def ta_update_compact_op(ta, literals, clause_out, type1, type2, l_mask,
                 ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed, p_ta, rand_bits,
                 boost, n_states, xt=xt,
                 row_idx=(jnp.asarray(row0, jnp.int32)
-                         + jnp.arange(C_pad, dtype=jnp.int32)))
+                         + jnp.arange(C_pad, dtype=jnp.int32)),
+                prng=prng, lfsr_bits=lfsr_bits, seed_refresh=seed_refresh)
         else:
             new_ta = ta_update(ta_p, lit_p, cl_p, t1_p, t2_p, lm, seed=seed,
                                p_ta=p_ta, rand_bits=rand_bits, boost=boost,
                                n_states=n_states, yt=g, xt=xt, row0=row0,
+                               prng=prng, lfsr_bits=lfsr_bits,
+                               seed_refresh=seed_refresh,
                                interpret=resolve_interpret())
         return new_ta, ref.pack_include(new_ta[:, :L], n_states)
 
@@ -441,28 +575,36 @@ def fused_step_op(literals, include, weights, labels, neg_labels,
 
 
 @functools.partial(jax.jit, static_argnames=("rand_bits", "backend",
-                                             "n_bits", "bt", "yt", "wt"))
+                                             "n_bits", "bt", "yt", "wt",
+                                             "mxu"))
 def packed_step_op(packed_literals, packed_include, weights, labels,
                    neg_labels, rand_lab, rand_neg, cl_mask, h_mask, T,
                    w_frozen, rand_bits=16, backend="pallas", n_bits=None,
-                   bt=8, yt=128, wt=128):
+                   bt=8, yt=128, wt=128, mxu=False):
     """Training-step front half on the bit-packed layout (edge batches).
 
     Same signature/outputs as :func:`fused_step_op`, but literals/include
     arrive as packed uint32 bitplanes ([B,W] / [R,W], W = ceil(2f/32)) —
     the engine's canonical on-device layout.  Clause eval runs the packed
-    VPU kernel (32 literals per word, no MXU); class sums and the Alg-3
-    selection reuse the shared stages.  Bit-exact vs. ``fused_step_op`` on
-    the corresponding dense inputs and vs. :func:`ref.packed_step_ref`.
+    VPU kernel (32 literals per word, no MXU), or — ``mxu=True``, the
+    :data:`PATH_PACKED_MXU` training leg — the bit-identical popcount-as-
+    matmul kernel; class sums and the Alg-3 selection reuse the shared
+    stages.  Bit-exact vs. ``fused_step_op`` on the corresponding dense
+    inputs and vs. :func:`ref.packed_step_ref`.
     """
     if backend == "ref":
         return ref.packed_step_ref(packed_literals, packed_include, weights,
                                    labels, neg_labels, rand_lab, rand_neg,
                                    cl_mask, h_mask, T, w_frozen, rand_bits,
-                                   n_bits=n_bits)
-    cl = packed_clause_eval_op(packed_literals, packed_include,
-                               eval_mode=False, n_bits=n_bits, bt=bt,
-                               yt=yt, wt=wt)
+                                   n_bits=n_bits, mxu=mxu)
+    if mxu:
+        cl = packed_clause_mxu_op(packed_literals, packed_include,
+                                  eval_mode=False, n_bits=n_bits, bt=bt,
+                                  yt=yt, wt=min(wt, 8))
+    else:
+        cl = packed_clause_eval_op(packed_literals, packed_include,
+                                   eval_mode=False, n_bits=n_bits, bt=bt,
+                                   yt=yt, wt=wt)
     cl = cl * cl_mask[None, :].astype(jnp.int32)
     sums = class_sum_op(cl, weights)
     sums = jnp.where(h_mask[None, :] > 0, sums, ref.NEG_INF_SUM)

@@ -1,14 +1,31 @@
-"""Pallas TPU kernel: bit-packed clause evaluation (VPU path).
+"""Pallas TPU kernels: bit-packed clause evaluation (VPU + MXU paths).
 
 Direct analogue of the paper's LUT mapping (Fig 4-6): literals and TA
 include-actions are packed 32-per-word; a clause fires iff every packed word
-satisfies ``(~inc | lit) == ~0`` ⇔ ``(inc & ~lit) == 0``.  This path does no
-MXU work at all — it is the right choice for tiny batches (the edge
-single-datapoint regime the FPGA targets) where the matmul recast wastes
-systolic occupancy; EXPERIMENTS.md §Perf compares the two crossing over.
+satisfies ``(~inc | lit) == ~0`` ⇔ ``(inc & ~lit) == 0``.
 
-    viol_or[b, c] = OR_w ( inc[c, w] & ~lit[b, w] )
-    clause[b, c]  = (viol_or == 0) ∧ (nonempty ∨ training)
+Two legs, bit-identical outputs, dispatched by batch size (autotune.py /
+select_path):
+
+* ``packed_clause_eval`` — pure VPU word-OR reduction, no MXU work at all;
+  the right choice for tiny batches (the edge single-datapoint regime the
+  FPGA targets) where a matmul recast wastes systolic occupancy.
+
+      viol_or[b, c] = OR_w ( inc[c, w] & ~lit[b, w] )
+      clause[b, c]  = (viol_or == 0) ∧ (nonempty ∨ training)
+
+* ``packed_clause_eval_mxu`` — popcount-as-matmul: each uint32 word is
+  expanded in-register to 32 int8 bitplanes and the violation count
+  becomes an int8·int8→int32 dot product,
+
+      viol[b, c] = Σ_l inc_bits[c, l] · (1 − lit_bits[b, l]),
+      clause[b, c] = (viol == 0) ∧ (nonempty ∨ training),
+
+  which the MXU executes at matmul rates — large-batch packed eval stops
+  being VPU-bound (the all-popcount datapath of the 65-nm accelerator
+  paper, arXiv 2501.19347, recast onto the systolic array).  Still reads
+  the ~8x-smaller packed operands from HBM; the expansion never leaves
+  VMEM.
 """
 from __future__ import annotations
 
@@ -99,6 +116,83 @@ def packed_clause_eval(packed_literals: jax.Array, packed_include: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.int32),
         scratch_shapes=[
             pltpu.VMEM((bt, yt), jnp.uint32),
+            pltpu.VMEM((1, yt), jnp.uint32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(packed_literals.astype(jnp.uint32), packed_include.astype(jnp.uint32))
+
+
+def _unpack_i8(words, wt: int):
+    """[n, wt] uint32 -> [n, wt*32] int8 bitplanes, bit j of word w landing
+    at column w*32+j (== ref.unpack_bitplanes_i8; stays in VMEM)."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.astype(jnp.int8).reshape(words.shape[0], wt * 32)
+
+
+def _mxu_kernel(lit_ref, inc_ref, out_ref, viol_ref, ne_ref, *,
+                wt: int, n_k: int, eval_mode: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        viol_ref[...] = jnp.zeros_like(viol_ref)
+        ne_ref[...] = jnp.zeros_like(ne_ref)
+
+    inc = inc_ref[...]                                 # [yt, wt] uint32
+    ne_ref[...] |= jnp.bitwise_or.reduce(inc, axis=1, keepdims=True).T
+    # violations as an int8 matmul: (1 - lit_bits) [bt, wt*32] ·
+    # inc_bits^T [wt*32, yt] — zero-padded words contribute nothing on
+    # either side, so the padded geometry is harmless.
+    lit_b = _unpack_i8(lit_ref[...], wt)               # [bt, wt*32] int8
+    inc_b = _unpack_i8(inc, wt)                        # [yt, wt*32] int8
+    viol_ref[...] += jax.lax.dot_general(
+        (1 - lit_b), inc_b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        fired = viol_ref[...] == 0
+        if eval_mode:
+            fired = jnp.logical_and(fired, ne_ref[...] != 0)
+        out_ref[...] = fired.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("eval_mode", "bt", "yt", "wt",
+                                             "interpret"))
+def packed_clause_eval_mxu(packed_literals: jax.Array,
+                           packed_include: jax.Array,
+                           eval_mode: bool = False, bt: int = 8,
+                           yt: int = 128, wt: int = 8,
+                           interpret: bool | None = None) -> jax.Array:
+    """MXU popcount leg: same contract as :func:`packed_clause_eval`
+    (packed [B, W] × [C, W] uint32 -> clause [B, C] int32, identical tail-
+    bit obligations), violations computed as int8 dot products over
+    in-register bitplane expansions.  ``wt`` defaults to 8 words = a
+    256-wide int8 contraction per grid step."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
+    B, W = packed_literals.shape
+    C, W2 = packed_include.shape
+    assert W == W2 and B % bt == 0 and C % yt == 0 and W % wt == 0, (
+        (B, C, W), (bt, yt, wt))
+    grid = (B // bt, C // yt, W // wt)
+    return pl.pallas_call(
+        functools.partial(_mxu_kernel, wt=wt, n_k=grid[2],
+                          eval_mode=eval_mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, wt), lambda b, c, k: (b, k)),
+            pl.BlockSpec((yt, wt), lambda b, c, k: (c, k)),
+        ],
+        out_specs=pl.BlockSpec((bt, yt), lambda b, c, k: (b, c)),
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bt, yt), jnp.int32),
             pltpu.VMEM((1, yt), jnp.uint32),
         ],
         compiler_params=CompilerParams(

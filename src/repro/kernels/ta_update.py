@@ -9,10 +9,18 @@ mapping:
   resident in VMEM (the BRAM slice of Fig 5a);
 * the batch rides inside the kernel (fori), accumulating an int32 delta —
   the batched-delta training mode (DESIGN.md §2.7);
-* random numbers are generated *in-kernel* by a counter-based
-  splitmix32→xorshift32 stream keyed on the global element index, so no
-  [B, C, L] random tensor ever touches HBM (the PRNG-bandwidth insight of
-  paper §IV-C, re-expressed: generate where you consume).
+* random numbers are generated *in-kernel* from a per-element stream keyed
+  on the global element index, so no [B, C, L] random tensor ever touches
+  HBM (the PRNG-bandwidth insight of paper §IV-C, re-expressed: generate
+  where you consume).  Two stream families share the tile body (static
+  ``prng`` arg, mirrored bit-exactly by ref.stream_start/stream_advance):
+
+  - ``counter`` — splitmix32→xorshift32 chains (TPU-native default);
+  - ``lfsr``    — the paper-faithful Galois LFSR master–slave cluster
+    (Fig 8): each TA cell is one lane seeded splitmix32(seed ^ key),
+    advanced one Galois shift per batch element, re-seeded from an
+    xorshift-advanced master every 2^lfsr_bits−1 cycles when
+    ``seed_refresh`` is set — the FPGA's per-TA LFSR bank, in place.
 
 Semantics (validated bit-exactly against ref.py):
   Type I  (t1): cl∧lit → +1 w.p. (s-1)/s (boost: always);
@@ -30,35 +38,44 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
+from .ref import stream_advance, stream_start
 
 
-def _splitmix32(x):
-    x = (x + jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
-    x = (x ^ (x >> 16)) * jnp.uint32(0x21F0AAAD)
-    x = (x ^ (x >> 15)) * jnp.uint32(0x735A2D97)
-    return (x ^ (x >> 15)).astype(jnp.uint32)
-
-
-def _xorshift32(x):
-    x = x ^ (x << 13)
-    x = x ^ (x >> 17)
-    x = x ^ (x << 5)
-    return x.astype(jnp.uint32)
+def _tile_delta(b, rand, lit, cl, t1, t2, include, p_ta, boost, delta):
+    """One batch element's Alg-5 delta accumulation on a (yt, xt) tile."""
+    low = rand < p_ta                                 # P = 1/s
+    clb = (cl[b] > 0)[:, None]                        # [yt, 1]
+    litb = (lit[b] > 0)[None, :]                      # [1, xt]
+    t1b = (t1[b] > 0)[:, None]
+    t2b = (t2[b] > 0)[:, None]
+    cl_and_lit = jnp.logical_and(clb, litb)
+    inc1 = jnp.where(boost, cl_and_lit,
+                     jnp.logical_and(cl_and_lit, jnp.logical_not(low)))
+    dec1 = jnp.logical_and(jnp.logical_not(cl_and_lit), low)
+    d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
+    inc2 = jnp.logical_and(jnp.logical_and(clb, jnp.logical_not(litb)),
+                           jnp.logical_not(include)).astype(jnp.int32)
+    return delta + jnp.where(t1b, d1, 0) + jnp.where(t2b, inc2, 0)
 
 
 def _tile_update(ci, li, ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref,
                  params_ref, out_ref, *, batch: int, n_l_tiles: int, yt: int,
-                 xt: int, rand_bits: int):
+                 xt: int, rand_bits: int, prng: str = "counter",
+                 lfsr_bits: int = 24, seed_refresh: bool = True):
     """Shared (yt, xt) TA-tile update body.
 
     ``ci``/``li`` are the tile's GLOBAL grid coordinates — the dense kernel
     passes its program ids, the sparse kernel passes the gathered tile's
-    original row index so the counter-based PRNG streams are identical to
+    original row index so the per-element PRNG streams are identical to
     a dense launch (bit-exact clause-skip compaction).  ``params_ref[0, 4]``
     is a global ROW offset added on top (uint32, usually 0): a clause shard
     holding rows [row0, row0 + C_loc) of a larger machine keys its streams
     at the rows' global numbers, so a sharded update is bit-identical to
-    the same rows of a single-device launch."""
+    the same rows of a single-device launch.
+
+    ``prng``/``lfsr_bits``/``seed_refresh`` select the stream family
+    (module docstring); all stream state lives in registers/VMEM — only
+    the uint32 master seed crosses from SMEM."""
     # dynamic model scalars ride in SMEM — a DTMProgram swap or a fresh
     # per-step seed never retraces (cache-size == 1 semantics, §IV-D-a).
     seed = params_ref[0, 0]
@@ -69,12 +86,13 @@ def _tile_update(ci, li, ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref,
     ta = ta_ref[...].astype(jnp.int32)                    # [yt, xt]
     include = ta >= (n_states >> 1)
 
-    # counter-based per-element stream keyed on GLOBAL element index — the
-    # result is tile-layout independent (ref.py reproduces it exactly).
+    # per-element stream keyed on GLOBAL element index — the result is
+    # tile-layout independent (ref.py reproduces it exactly).
     gy = (ci * yt + row0
           + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 0))
     gx = li * xt + jax.lax.broadcasted_iota(jnp.uint32, (yt, xt), 1)
-    state = _splitmix32(seed ^ (gy * jnp.uint32(n_l_tiles * xt) + gx))
+    key = gy * jnp.uint32(n_l_tiles * xt) + gx
+    st0 = stream_start(seed, key, prng, lfsr_bits)
 
     delta = jnp.zeros((yt, xt), jnp.int32)
     lit = lit_ref[...]                                    # [B, xt] int8
@@ -83,41 +101,32 @@ def _tile_update(ci, li, ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref,
     t2 = t2_ref[...]                                      # [B, yt] int8
 
     def body(b, carry):
-        state, delta = carry
-        state = _xorshift32(state)
-        rand = state >> (32 - rand_bits)
-        low = rand < p_ta                                 # P = 1/s
-        clb = (cl[b] > 0)[:, None]                        # [yt, 1]
-        litb = (lit[b] > 0)[None, :]                      # [1, xt]
-        t1b = (t1[b] > 0)[:, None]
-        t2b = (t2[b] > 0)[:, None]
-        cl_and_lit = jnp.logical_and(clb, litb)
-        inc1 = jnp.where(boost, cl_and_lit,
-                         jnp.logical_and(cl_and_lit, jnp.logical_not(low)))
-        dec1 = jnp.logical_and(jnp.logical_not(cl_and_lit), low)
-        d1 = inc1.astype(jnp.int32) - dec1.astype(jnp.int32)
-        inc2 = jnp.logical_and(jnp.logical_and(clb, jnp.logical_not(litb)),
-                               jnp.logical_not(include)).astype(jnp.int32)
-        delta = delta + jnp.where(t1b, d1, 0) + jnp.where(t2b, inc2, 0)
-        return state, delta
+        st, delta = carry
+        st, rand = stream_advance(st, key, prng, lfsr_bits, seed_refresh,
+                                  rand_bits)
+        delta = _tile_delta(b, rand, lit, cl, t1, t2, include, p_ta, boost,
+                            delta)
+        return st, delta
 
-    _, delta = jax.lax.fori_loop(0, batch, body, (state, delta))
+    _, delta = jax.lax.fori_loop(0, batch, body, (st0, delta))
     delta = delta * lmask_ref[...].astype(jnp.int32)      # Fig 6a inverse mask
     out_ref[...] = jnp.clip(ta + delta, 0, n_states - 1)
 
 
 def _kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, params_ref,
             out_ref, *, batch: int, n_l_tiles: int, yt: int, xt: int,
-            rand_bits: int):
+            rand_bits: int, prng: str, lfsr_bits: int, seed_refresh: bool):
     _tile_update(pl.program_id(0), pl.program_id(1), ta_ref, lit_ref,
                  cl_ref, t1_ref, t2_ref, lmask_ref, params_ref, out_ref,
                  batch=batch, n_l_tiles=n_l_tiles, yt=yt, xt=xt,
-                 rand_bits=rand_bits)
+                 rand_bits=rand_bits, prng=prng, lfsr_bits=lfsr_bits,
+                 seed_refresh=seed_refresh)
 
 
 def _sparse_kernel(idx_ref, params_ref, ta_ref, lit_ref, cl_ref, t1_ref,
                    t2_ref, lmask_ref, out_ref, *, batch: int, n_l_tiles: int,
-                   yt: int, xt: int, rand_bits: int):
+                   yt: int, xt: int, rand_bits: int, prng: str,
+                   lfsr_bits: int, seed_refresh: bool):
     """Compacted grid step: slot ``program_id(0)`` owns the ACTIVE clause
     tile whose original row-tile index is ``idx_ref[program_id(0)]`` (the
     scalar-prefetch index vector also drives the BlockSpec gathers).  The
@@ -126,17 +135,60 @@ def _sparse_kernel(idx_ref, params_ref, ta_ref, lit_ref, cl_ref, t1_ref,
     _tile_update(idx_ref[pl.program_id(0)], pl.program_id(1), ta_ref,
                  lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref, params_ref,
                  out_ref, batch=batch, n_l_tiles=n_l_tiles, yt=yt, xt=xt,
-                 rand_bits=rand_bits)
+                 rand_bits=rand_bits, prng=prng, lfsr_bits=lfsr_bits,
+                 seed_refresh=seed_refresh)
+
+
+def _streamed_kernel(ta_ref, lit_ref, cl_ref, t1_ref, t2_ref, lmask_ref,
+                     rand_ref, params_ref, out_ref, *, batch: int, yt: int,
+                     xt: int):
+    """Streamed-rand baseline: the same tile body, but the randoms arrive
+    as a pre-materialised [B, yt, xt] uint32 block from HBM
+    (ref.ta_rand_stream) — exactly the traffic the in-kernel generator
+    eliminates.  Kept as a dispatchable path so the win is measurable on
+    one machine (benchmarks/fig15_lfsr.py) and streamed-vs-in-kernel
+    bit-identity is a test, not a claim."""
+    p_ta = params_ref[0, 1]
+    boost = params_ref[0, 2] > 0
+    n_states = params_ref[0, 3].astype(jnp.int32)
+    ta = ta_ref[...].astype(jnp.int32)                    # [yt, xt]
+    include = ta >= (n_states >> 1)
+    delta = jnp.zeros((yt, xt), jnp.int32)
+    lit = lit_ref[...]
+    cl = cl_ref[...]
+    t1 = t1_ref[...]
+    t2 = t2_ref[...]
+
+    def body(b, delta):
+        return _tile_delta(b, rand_ref[b], lit, cl, t1, t2, include, p_ta,
+                           boost, delta)
+
+    delta = jax.lax.fori_loop(0, batch, body, delta)
+    delta = delta * lmask_ref[...].astype(jnp.int32)
+    out_ref[...] = jnp.clip(ta + delta, 0, n_states - 1)
+
+
+def _params(seed, p_ta, boost, n_states, row0):
+    return jnp.stack([
+        jnp.asarray(seed, jnp.uint32),
+        jnp.asarray(p_ta, jnp.uint32),
+        jnp.asarray(boost, jnp.uint32),
+        jnp.asarray(n_states, jnp.uint32),
+        jnp.asarray(row0, jnp.uint32),
+    ]).reshape(1, 5)
 
 
 @functools.partial(jax.jit, static_argnames=("rand_bits", "yt", "xt",
-                                             "interpret"))
+                                             "prng", "lfsr_bits",
+                                             "seed_refresh", "interpret"))
 def ta_update_sparse(ta: jax.Array, literals: jax.Array,
                      clause_out: jax.Array, type1: jax.Array,
                      type2: jax.Array, l_mask: jax.Array,
                      tile_idx: jax.Array, seed, p_ta, rand_bits: int = 16,
                      boost=True, n_states=256, yt: int = 128, xt: int = 256,
-                     row0=0, interpret: bool | None = None) -> jax.Array:
+                     row0=0, prng: str = "counter", lfsr_bits: int = 24,
+                     seed_refresh: bool = True,
+                     interpret: bool | None = None) -> jax.Array:
     """Compacted TA update over the ACTIVE clause tiles only (Alg 6 made
     real): ``tile_idx`` [k] int32 lists the row-tile indices to update and
     doubles as the scalar-prefetch index vector — every BlockSpec gathers
@@ -155,6 +207,9 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
     global row number — clause shards pass their first global row so the
     sharded update matches a single-device launch bit-for-bit.
 
+    ``prng``/``lfsr_bits``/``seed_refresh`` select the in-kernel stream
+    family (static; see module docstring).
+
     ``interpret=None`` (default) resolves through
     ``ops.resolve_interpret()`` like every other kernel, so direct
     callers on TPU get the compiled path."""
@@ -166,13 +221,7 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
     k = tile_idx.shape[0]
     assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
     grid = (k, L // xt)
-    params = jnp.stack([
-        jnp.asarray(seed, jnp.uint32),
-        jnp.asarray(p_ta, jnp.uint32),
-        jnp.asarray(boost, jnp.uint32),
-        jnp.asarray(n_states, jnp.uint32),
-        jnp.asarray(row0, jnp.uint32),
-    ]).reshape(1, 5)
+    params = _params(seed, p_ta, boost, n_states, row0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # (tile_idx, params)
         grid=grid,
@@ -188,7 +237,8 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
     )
     return pl.pallas_call(
         functools.partial(_sparse_kernel, batch=B, n_l_tiles=grid[1], yt=yt,
-                          xt=xt, rand_bits=rand_bits),
+                          xt=xt, rand_bits=rand_bits, prng=prng,
+                          lfsr_bits=lfsr_bits, seed_refresh=seed_refresh),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((k * yt, L), jnp.int32),
         compiler_params=CompilerParams(
@@ -201,12 +251,14 @@ def ta_update_sparse(ta: jax.Array, literals: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("rand_bits", "yt", "xt",
-                                             "interpret"))
+                                             "prng", "lfsr_bits",
+                                             "seed_refresh", "interpret"))
 def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
               type1: jax.Array, type2: jax.Array, l_mask: jax.Array,
               seed, p_ta, rand_bits: int = 16, boost=True,
               n_states=256, yt: int = 128, xt: int = 256, row0=0,
-              interpret: bool = True) -> jax.Array:
+              prng: str = "counter", lfsr_bits: int = 24,
+              seed_refresh: bool = True, interpret: bool = True) -> jax.Array:
     """Batched TA update.
 
     ta [C, L] any int dtype (the engine stores uint8-narrowed states, 4 per
@@ -215,22 +267,19 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
     int32.  ``seed``/``p_ta``/``boost``/``n_states``/``row0`` may be traced
     scalars (they ride in SMEM).  ``row0`` offsets the PRNG stream keys'
     global row numbers (clause-sharded execution — see ``_tile_update``).
+    ``prng``/``lfsr_bits``/``seed_refresh`` select the in-kernel stream
+    family (static; see module docstring).
     ``ops.ta_update_op(emit_include=True)`` fuses the packed
     include-bitplane emission onto this kernel's output."""
     C, L = ta.shape
     B = literals.shape[0]
     assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
     grid = (C // yt, L // xt)
-    params = jnp.stack([
-        jnp.asarray(seed, jnp.uint32),
-        jnp.asarray(p_ta, jnp.uint32),
-        jnp.asarray(boost, jnp.uint32),
-        jnp.asarray(n_states, jnp.uint32),
-        jnp.asarray(row0, jnp.uint32),
-    ]).reshape(1, 5)
+    params = _params(seed, p_ta, boost, n_states, row0)
     return pl.pallas_call(
         functools.partial(_kernel, batch=B, n_l_tiles=grid[1], yt=yt, xt=xt,
-                          rand_bits=rand_bits),
+                          rand_bits=rand_bits, prng=prng,
+                          lfsr_bits=lfsr_bits, seed_refresh=seed_refresh),
         grid=grid,
         in_specs=[
             pl.BlockSpec((yt, xt), lambda c, l: (c, l)),       # ta
@@ -251,3 +300,46 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
       clause_out.astype(jnp.int8), type1.astype(jnp.int8),
       type2.astype(jnp.int8), l_mask.reshape(1, L).astype(jnp.int32),
       params)
+
+
+@functools.partial(jax.jit, static_argnames=("yt", "xt", "interpret"))
+def ta_update_streamed(ta: jax.Array, literals: jax.Array,
+                       clause_out: jax.Array, type1: jax.Array,
+                       type2: jax.Array, l_mask: jax.Array,
+                       rands: jax.Array, p_ta, boost=True, n_states=256,
+                       yt: int = 128, xt: int = 256,
+                       interpret: bool = True) -> jax.Array:
+    """Batched TA update consuming PRE-MATERIALISED randoms ``rands``
+    [B, C, L] uint32 (ref.ta_rand_stream) — the streamed baseline the
+    in-kernel generator replaces.  Bit-identical to ``ta_update`` when the
+    stream was generated with the same keying; moves B·C·L·4 extra bytes
+    per step, which fig15_lfsr measures."""
+    C, L = ta.shape
+    B = literals.shape[0]
+    assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
+    assert rands.shape == (B, C, L), (rands.shape, (B, C, L))
+    grid = (C // yt, L // xt)
+    params = _params(0, p_ta, boost, n_states, 0)
+    return pl.pallas_call(
+        functools.partial(_streamed_kernel, batch=B, yt=yt, xt=xt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((yt, xt), lambda c, l: (c, l)),       # ta
+            pl.BlockSpec((B, xt), lambda c, l: (0, l)),        # literals
+            pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # clause_out
+            pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type1
+            pl.BlockSpec((B, yt), lambda c, l: (0, c)),        # type2
+            pl.BlockSpec((1, xt), lambda c, l: (0, l)),        # l_mask
+            pl.BlockSpec((B, yt, xt), lambda c, l: (0, c, l)), # rands
+            pl.BlockSpec((1, 5), lambda c, l: (0, 0),
+                         memory_space=pltpu.SMEM),             # scalars
+        ],
+        out_specs=pl.BlockSpec((yt, xt), lambda c, l: (c, l)),
+        out_shape=jax.ShapeDtypeStruct((C, L), jnp.int32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(ta.astype(jnp.int32), literals.astype(jnp.int8),
+      clause_out.astype(jnp.int8), type1.astype(jnp.int8),
+      type2.astype(jnp.int8), l_mask.reshape(1, L).astype(jnp.int32),
+      rands.astype(jnp.uint32), params)

@@ -89,6 +89,55 @@ def clause_shard_step_s(B: int, L: int, C: int, H: int,
     }
 
 
+def packed_eval_costs(B: int, L: int, C: int) -> dict:
+    """Roofline terms for one packed clause-eval call on its two legs
+    (kernels.packed_clause; the autotune seed plan reads this).
+
+    Both legs stream the same packed bytes (W = ceil(L/32) uint32 words
+    per row) and write the same [B, C] int32 clause matrix; they differ
+    only in the compute engine:
+
+    * vpu — one AND+NOT+OR word op per (b, c, w) triple on the 8×128
+      vector unit;
+    * mxu — int8 bitplane dot products, 2·B·C·L int8 ops on the systolic
+      array, derated by batch occupancy (a B-tall operand fills at most
+      min(B, 128) of the 128 MXU rows).
+
+    The crossover is pure arithmetic-engine throughput: at B=1 the MXU
+    runs ~1/128 occupied and the VPU wins; by B≳32 the matmul recast is
+    far ahead.  Returned seconds are v5e figures — autotune's measure
+    mode replaces them with wall-clock on the actual device."""
+    W = (L + 31) // 32
+    io = clause_eval_bytes(B, L, C, packed=True)["total_bytes"]
+    # VPU: 8x128 lanes × ~0.94 GHz ≈ 1e12 uint32 word-ops/s
+    vpu_word_ops = B * C * W
+    vpu_s = max(vpu_word_ops / 1.0e12, io / V5E.hbm_bw)
+    # MXU: int8 throughput ≈ 2× bf16 peak, scaled by row occupancy
+    mxu_ops = 2 * B * C * (W * 32)
+    occupancy = min(B, 128) / 128
+    mxu_s = max(mxu_ops / (2 * V5E.peak_flops_bf16 * max(occupancy, 1e-9)),
+                io / V5E.hbm_bw)
+    return {
+        "bytes": io,
+        "vpu_word_ops": vpu_word_ops,
+        "mxu_int8_ops": mxu_ops,
+        "vpu_s": vpu_s,
+        "mxu_s": mxu_s,
+        "winner": "mxu_popcount" if mxu_s < vpu_s else "packed_vpu",
+    }
+
+
+def ta_rand_bytes(B: int, L: int, C: int) -> dict:
+    """HBM random-bits traffic of one TA-update step, streamed vs
+    in-kernel (the §IV-C frugality argument benchmarks/fig15_lfsr.py
+    guards): the streamed baseline materialises one uint32 word per
+    (batch, clause, literal) cell; the in-kernel generator moves only the
+    master seed (one SMEM scalar)."""
+    streamed = B * C * L * 4
+    return {"streamed_rand_bytes": streamed, "inkernel_rand_bytes": 0,
+            "streamed_rand_s": streamed / V5E.hbm_bw}
+
+
 def clause_eval_bytes(B: int, L: int, C: int, packed: bool) -> dict:
     """Bytes moved by one clause-evaluation call (the edge-regime hot
     loop's memory bill — paper Fig 4-6's frugal-BRAM argument).

@@ -135,7 +135,92 @@ def test_compact_row_vs_tile_granularity_agree():
         _assert_compact_equals_dense(C, L, B, act, "ref", group)
 
 
+# ---------------------------------------------------------------------------
+# PRNG stream invariants (ISSUE 8): the TA-update randoms are a pure
+# function of (seed, element index, stream family) — execution layout
+# (dense / compact / streamed / banked) must never change them
+# ---------------------------------------------------------------------------
+
+def test_lfsr_stream_period_and_refresh():
+    """With refresh off, the L-bit LFSR lanes are maximal-length: the
+    emitted stream repeats with period 2^L - 1.  With the paper's master-
+    slave refresh on, the cycle AT the period boundary is re-seeded from
+    the advanced master instead of repeating."""
+    bits, C, L = 4, 2, 8
+    period = (1 << bits) - 1
+    free = np.asarray(ref.ta_rand_stream(5, 2 * period, C, L, prng="lfsr",
+                                         lfsr_bits=bits, seed_refresh=False,
+                                         xt=L))
+    np.testing.assert_array_equal(free[:period], free[period:])
+    rr = np.asarray(ref.ta_rand_stream(5, period, C, L, prng="lfsr",
+                                       lfsr_bits=bits, seed_refresh=True,
+                                       xt=L))
+    np.testing.assert_array_equal(rr[:period - 1], free[:period - 1])
+    assert (rr[period - 1] != free[period - 1]).any()
+
+
+def test_bank_lanes_identical_streams_lfsr():
+    """lanes > 1 banks fall back to the dense TA update — under the
+    paper-faithful lfsr family each lane must still advance exactly the
+    per-program stream, so bank training == sequential per-program
+    training bit-for-bit."""
+    import dataclasses
+    spec = dataclasses.replace(SPECS["cotm"], prng_backend="lfsr")
+    eng = api.compile(api.tile_for(spec, x=32, y=16, m=16, n=4))
+    progs, prngs = [], []
+    for i in range(3):
+        progs.append(eng.lower(spec, jax.random.PRNGKey(i)))
+        prngs.append(PRNG.create(spec.tm_config(), 10 + i))
+    rng = np.random.default_rng(0)
+    x = (rng.random((3, 8, spec.features)) < 0.5).astype(np.int8)
+    y = rng.integers(0, spec.classes, (3, 8)).astype(np.int32)
+    lits = jnp.stack([eng.encode(spec, jnp.asarray(x[k]))
+                      for k in range(3)])
+    bank = api.stack(progs, eng, prngs=prngs)
+    bank.train(lits, jnp.asarray(y))
+    for k in range(3):
+        solo, _, _ = eng.train_step(progs[k], prngs[k], lits[k],
+                                    jnp.asarray(y[k]))
+        got = bank.swap_out(k)
+        np.testing.assert_array_equal(np.asarray(got.ta),
+                                      np.asarray(solo.ta), err_msg=str(k))
+
+
 if hypothesis is not None:
+    @settings(max_examples=15, deadline=None)
+    @given(st.data())
+    def test_ta_stream_invariant_property(data):
+        """Random shapes, seeds, families, refresh settings: the dense
+        in-kernel stream == the Alg-6 compact path == the streamed
+        [B, C, L] materialisation (ref backend; the Pallas legs are
+        pinned by the deterministic sweeps in test_kernel_speed.py)."""
+        C = data.draw(st.integers(2, 40), label="C")
+        L = data.draw(st.integers(2, 64), label="L")
+        B = data.draw(st.integers(1, 4), label="B")
+        bits = data.draw(st.sampled_from((4, 8, 24)), label="bits")
+        refresh = data.draw(st.booleans(), label="refresh")
+        prng = data.draw(st.sampled_from(("counter", "lfsr")), label="prng")
+        seed = data.draw(st.integers(0, 2**16), label="seed")
+        rng = np.random.default_rng(seed % 251)
+        ta = jnp.asarray(rng.integers(0, 256, (C, L)), jnp.int32)
+        lit = jnp.asarray(rng.integers(0, 2, (B, L)), jnp.int8)
+        cl = jnp.asarray(rng.integers(0, 2, (B, C)), jnp.int8)
+        t1 = jnp.asarray(rng.integers(0, 2, (B, C)), jnp.int8)
+        t2 = jnp.asarray(rng.integers(0, 2, (B, C)), jnp.int8)
+        lm = jnp.ones((L,), jnp.int32)
+        inc = ref.pack_include(ta, 256)
+        kw = dict(prng=prng, lfsr_bits=bits, seed_refresh=refresh,
+                  backend="ref")
+        dense = ta_update_op(ta, lit, cl, t1, t2, lm, seed, 9000, **kw)
+        streamed = ta_update_op(ta, lit, cl, t1, t2, lm, seed, 9000,
+                                stream=True, **kw)
+        compact, _ = ta_update_compact_op(ta, lit, cl, t1, t2, lm, inc,
+                                          seed, 9000, **kw)
+        np.testing.assert_array_equal(np.asarray(dense),
+                                      np.asarray(streamed))
+        np.testing.assert_array_equal(np.asarray(dense),
+                                      np.asarray(compact))
+
     @settings(max_examples=20, deadline=None)
     @given(st.data())
     def test_compact_matches_dense_property(data):

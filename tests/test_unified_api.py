@@ -98,21 +98,27 @@ def test_program_swap_keeps_cache_at_one(backend):
     # honoured by every stage — the old silent mxu fallback is the bug)
     from repro.kernels import select_path, select_ta_path
 
+    # the engine dispatches on its padded (L, R, H) shape so the autotune
+    # plan cache can key on geometry; mirror that here
+    shape = api.tile_for(*SPECS.values(), x=32, y=16, m=16, n=4).padded_dims()
+
     def expect(batch, training=False):
-        path = select_path(None, batch=batch, training=training)
+        path = select_path(None, batch=batch, training=training, shape=shape)
         if not training and path == "fused":     # eval has no fused impl
             path = "mxu"
-        if backend == "ref" and path != "packed_vpu":
+        if backend == "ref" and path not in ("packed_vpu", "mxu_popcount"):
             path = "ref"                         # jnp oracles ARE the path
         return path
 
     # conv stages run clause eval on the flattened [B·P] patch batch
     conv_batch = BATCH * max(s.n_patches for s in SPECS.values())
     # the train stage also records the SKIP dimension of its TA-update
-    # back half (compact by default; dense under REPRO_SKIP=0)
+    # back half (compact by default; dense under REPRO_SKIP=0) and the
+    # PRNG stream family/placement of the Alg-5 update
     assert paths == {"infer": expect(BATCH),
                      "train": expect(BATCH, training=True),
-                     "train_ta": select_ta_path(),
+                     "train_ta": select_ta_path(shape=shape),
+                     "train_prng": "counter-inkernel",
                      "infer_conv": expect(conv_batch),
                      "train_conv": expect(conv_batch)}, paths
     # programs are pure data: swapping through the whole roster and back
