@@ -1,0 +1,271 @@
+"""Trace-contract audit (dtmlint part 3) — the runtime half of the
+paper's "reconfiguration without resynthesis" claim, machine-checked.
+
+Runs the five-TMSpec-kind scenario matrix (the ``serve_tm.demo_specs``
+roster) through the session, program-bank, and scheduler paths under
+
+* ``jax.checking_leaks()``       — no tracer escapes a trace;
+* ``jax.transfer_guard("disallow")`` — no IMPLICIT host<->device
+  transfer on any hot path (explicit ``device_put``/``device_get``
+  crossings — one per epoch in ``fit_epochs`` — stay allowed);
+
+and asserts the standing invariants inline:
+
+* every engine stage executable stays at jit cache size <= 1;
+* ``session.dispatches == epochs`` (one scan launch per epoch);
+
+then diffs the resulting ``cache_report()["path_per_stage"]`` dispatch
+tables against the committed golden ``ANALYSIS_baseline.json``.  The
+golden is keyed by LEG (backend x forced path x skip x prng x autotune
+mode), matching the CI tier-1 matrix: a PR that changes which kernel a
+stage dispatches to must update the golden explicitly
+(``tools/dtmlint audit --update``) — never silently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional, Sequence
+
+__all__ = ["AuditError", "AuditReport", "leg_key", "run_audit",
+           "compare_to_golden", "default_baseline_path", "main"]
+
+EPOCHS = 2
+STAGE_BATCH = 64        # staged rows per tenant (fit batch 16 -> 4 steps)
+SERVE_BATCH = 8         # scheduler request batch (= batch_slot)
+
+
+class AuditError(AssertionError):
+    """A trace-contract invariant failed or the golden diverged."""
+
+
+@dataclasses.dataclass
+class AuditReport:
+    leg: str
+    session_paths: Dict[str, str]
+    serving_paths: Dict[str, str]
+    session_caches: Dict[str, int]
+    serving_caches: Dict[str, int]
+
+    def golden_entry(self) -> dict:
+        return {"session_paths": dict(sorted(self.session_paths.items())),
+                "serving_paths": dict(sorted(self.serving_paths.items()))}
+
+
+def default_baseline_path() -> pathlib.Path:
+    """ANALYSIS_baseline.json at the repo root (next to BENCH_*.json)."""
+    here = pathlib.Path(__file__).resolve()
+    for parent in here.parents:
+        if (parent / "pyproject.toml").exists():
+            return parent / "ANALYSIS_baseline.json"
+    return pathlib.Path("ANALYSIS_baseline.json")
+
+
+def leg_key(engine) -> str:
+    """The audit leg this process runs as — every env knob that can move
+    a dispatch decision, via the kernels/ops.py + autotune resolvers."""
+    from repro.kernels import autotune, ops
+    force = ops.resolve_kernel_path_force() or "auto"
+    return (f"{engine.backend}|force={force}"
+            f"|skip={int(ops.resolve_skip())}"
+            f"|prng={ops.resolve_ta_prng()}"
+            f"|autotune={autotune.resolve_autotune()}")
+
+
+# --------------------------------------------------------------------------- #
+# scenario matrix                                                             #
+# --------------------------------------------------------------------------- #
+
+def _demo_labels(spec, n: int, seed: int):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    if spec.kind == "regression":
+        return rng.random(n).astype(np.float32)
+    classes = spec.tm_config().classes
+    return rng.integers(0, max(classes, 1), n).astype(np.int32)
+
+
+def _check_caches(caches: Dict[str, int], where: str,
+                  errors: List[str]) -> None:
+    for stage, size in caches.items():
+        if isinstance(size, int) and size > 1:
+            errors.append(
+                f"{where}: stage {stage} has jit cache size {size} "
+                "(> 1 — something retraced)")
+
+
+def run_audit(update: bool = False,
+              baseline: Optional[pathlib.Path] = None,
+              epochs: int = EPOCHS) -> AuditReport:
+    """Run the full audit; raises :class:`AuditError` on any violation.
+
+    ``update=True`` rewrites this leg's entry in the golden instead of
+    diffing against it."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import api
+    from repro.launch.scheduler import SchedulerConfig
+    from repro.launch.serve_tm import demo_batch, demo_specs
+
+    specs = demo_specs(small=True)
+    errors: List[str] = []
+
+    # ---- "synthesis time": compile + lower, outside the guards ----------
+    engine = api.compile(api.tile_for(*specs.values()), backend="auto")
+    progs, sessions = {}, {}
+    for i, (name, spec) in enumerate(sorted(specs.items())):
+        progs[name] = engine.lower(spec, jax.random.PRNGKey(i))
+
+    # staging is the documented host->device boundary (once per dataset)
+    # — it happens at session open, outside the runtime guards
+    infer_lits, bank_lits = {}, {}
+    for i, (name, spec) in enumerate(sorted(specs.items())):
+        x = demo_batch(spec, STAGE_BATCH, seed=10 + i)
+        y = _demo_labels(spec, STAGE_BATCH, seed=20 + i)
+        s = engine.bind(progs[name], x, y, spec=spec, seed=i)
+        sessions[name] = s
+        # eager slicing transfers its scalar start index — prepare the
+        # inference inputs here so the guarded region holds launches only
+        infer_lits[name] = jax.device_put(s._lits[:32])
+        bank_lits[name] = jax.device_put(s._lits[:SERVE_BATCH])
+
+    # ---- session path: fit / infer under the guards ----------------------
+    with jax.checking_leaks(), jax.transfer_guard("disallow"):
+        for name, spec in sorted(specs.items()):
+            s = sessions[name]
+            s.fit_epochs(epochs, batch=16)
+            if s.dispatches != epochs:
+                errors.append(
+                    f"session[{name}]: {s.dispatches} dispatches for "
+                    f"{epochs} epochs (contract: one launch per epoch)")
+            infer = engine.infer_fn(spec)
+            infer(s.program, infer_lits[name])
+
+        # ---- bank path: all flat kinds in one stacked launch ------------
+        flat = [n for n in sorted(specs) if specs[n].kind != "conv"]
+        bank = api.stack([sessions[n].program for n in flat], engine)
+        bank.infer(jnp.stack([bank_lits[n] for n in flat]))
+        conv = [n for n in sorted(specs) if specs[n].kind == "conv"]
+        if conv:
+            cbank = api.stack([sessions[n].program for n in conv],
+                              engine, conv=True)
+            cbank.infer(jnp.stack([bank_lits[n] for n in conv]))
+
+    session_report = engine.cache_report()
+    _check_caches(session_report, "session-engine", errors)
+
+    # ---- scheduler path: its own serve() stack, driven inline -----------
+    sched = api.serve(dict(specs), batch_slot=SERVE_BATCH,
+                      config=SchedulerConfig(max_wait_s=0.0,
+                                             pipeline_depth=2))
+    # front-end side: encode requests + labels outside the guard (the
+    # eager encode ops — conv patch slicing, label scaling — transfer
+    # scalars; the driver's hot path takes pre-encoded full-slot arrays)
+    serve_eng = sched.server.engine
+    req_lits: Dict[int, Dict[str, object]] = {}
+    for round_no, round_seed in enumerate((30, 40)):
+        req_lits[round_no] = {
+            n: jax.device_put(serve_eng.encode(
+                specs[n], jnp.asarray(
+                    demo_batch(specs[n], SERVE_BATCH, seed=round_seed))))
+            for n in sorted(specs)}
+    train_reqs = {}
+    for i, n in enumerate(sorted(specs)):
+        x = demo_batch(specs[n], SERVE_BATCH, seed=50 + i)
+        y = _demo_labels(specs[n], SERVE_BATCH, 60 + i)
+        train_reqs[n] = (
+            jax.device_put(serve_eng.encode(specs[n], jnp.asarray(x))),
+            jax.device_put(specs[n].encode_labels(y)))
+
+    with jax.checking_leaks(), jax.transfer_guard("disallow"):
+        for round_no in (0, 1):              # second round must not retrace
+            futs = [(n, sched.submit(n, req_lits[round_no][n],
+                                     encoded=True))
+                    for n in sorted(specs)]
+            sched.drain()
+            for n, f in futs:
+                out = f.result(timeout=120)
+                if out.shape[0] != SERVE_BATCH:
+                    errors.append(f"scheduler[{n}]: bad result shape "
+                                  f"{out.shape}")
+        for n, (lits, lab) in sorted(train_reqs.items()):
+            sched.server.train(n, lits, lab, encoded=True)
+
+    serving_report = sched.server.stats()["cache"]
+    _check_caches(serving_report, "serving-engine", errors)
+
+    report = AuditReport(
+        leg=leg_key(engine),
+        session_paths=dict(session_report["path_per_stage"]),
+        serving_paths=dict(serving_report["path_per_stage"]),
+        session_caches={k: v for k, v in session_report.items()
+                        if isinstance(v, int)},
+        serving_caches={k: v for k, v in serving_report.items()
+                        if isinstance(v, int)})
+
+    if errors:
+        raise AuditError("trace-contract audit failed:\n  "
+                         + "\n  ".join(errors))
+
+    compare_to_golden(report, baseline or default_baseline_path(),
+                      update=update)
+    return report
+
+
+def compare_to_golden(report: AuditReport, path: pathlib.Path,
+                      update: bool = False) -> None:
+    """Diff (or, with ``update``, rewrite) this leg's golden entry."""
+    golden = {}
+    if path.exists():
+        golden = json.loads(path.read_text())
+    if update:
+        golden.setdefault("legs", {})[report.leg] = report.golden_entry()
+        path.write_text(json.dumps(golden, indent=1, sort_keys=True)
+                        + "\n")
+        return
+    entry = golden.get("legs", {}).get(report.leg)
+    if entry is None:
+        raise AuditError(
+            f"no golden entry for leg {report.leg!r} in {path} — run "
+            "`tools/dtmlint audit --update` on this leg and commit")
+    diffs = _diff(entry, report.golden_entry())
+    if diffs:
+        raise AuditError(
+            f"dispatch tables diverged from {path.name} for leg "
+            f"{report.leg!r}:\n  " + "\n  ".join(diffs)
+            + "\n  (intentional? rerun with --update and commit)")
+
+
+def _diff(golden: dict, fresh: dict) -> List[str]:
+    out = []
+    for table in sorted(set(golden) | set(fresh)):
+        g, f = golden.get(table, {}), fresh.get(table, {})
+        for stage in sorted(set(g) | set(f)):
+            if g.get(stage) != f.get(stage):
+                out.append(f"{table}.{stage}: golden={g.get(stage)!r} "
+                           f"fresh={f.get(stage)!r}")
+    return out
+
+
+def main(argv: Sequence[str]) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="dtmlint audit", description=__doc__.splitlines()[0])
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite this leg's golden entry")
+    ap.add_argument("--baseline", type=pathlib.Path, default=None)
+    ns = ap.parse_args(list(argv))
+    try:
+        report = run_audit(update=ns.update, baseline=ns.baseline)
+    except AuditError as e:
+        print(e)
+        return 1
+    verb = "updated" if ns.update else "matched"
+    print(f"trace audit: leg {report.leg!r} {verb} "
+          f"({len(report.session_paths)} session + "
+          f"{len(report.serving_paths)} serving dispatch entries, "
+          "all caches <= 1, dispatches == epochs)")
+    return 0

@@ -1300,14 +1300,20 @@ class TMSession:
         history = []
         for ep in range(epochs):
             idx = rng.permutation(self.n)[:n].astype(np.int32)
+            # the epoch's ONE host->device transition, made explicit so
+            # the whole loop runs under jax.transfer_guard("disallow")
+            # (analysis/trace_audit.py) — an implicit transfer sneaking
+            # into the scan launch would fail the audit
+            plan = jax.device_put(idx.reshape(steps, batch))
             self.program, self.prng, step_stats = fit(
-                self.program, self.prng, self._lits, self._labels,
-                idx.reshape(steps, batch))
+                self.program, self.prng, self._lits, self._labels, plan)
             self.dispatches += 1
             self.steps += steps
             # exact integer epoch totals from the per-step stats — the
             # same arithmetic fit_loop does with per-batch Python ints
-            # (an in-carry int32 sum could wrap at paper scale)
+            # (an in-carry int32 sum could wrap at paper scale); the
+            # device_get is the epoch's one explicit device->host read
+            step_stats = jax.device_get(step_stats)
             agg = {k: int(np.asarray(v).sum(dtype=np.int64))
                    for k, v in step_stats.items()}
             rec = epoch_record(ep, agg, n, extra_metrics)

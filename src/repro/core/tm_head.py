@@ -17,7 +17,6 @@ a pytree, and the train step reuses ``repro.core.feedback``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

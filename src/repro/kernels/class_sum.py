@@ -41,11 +41,15 @@ def _kernel(cl_ref, w_ref, out_ref, acc_ref, *, n_k: int):
 
 @functools.partial(jax.jit, static_argnames=("bt", "mt", "interpret"))
 def class_sum(clauses: jax.Array, weights: jax.Array, bt: int = 8,
-              mt: int = 128, interpret: bool = True) -> jax.Array:
+              mt: int = 128, interpret: bool | None = None) -> jax.Array:
     """clauses [B, C] {0,1}, weights [H, C] int -> class sums [B, H] int32.
 
     H rides whole in VMEM (classes are small — paper n=4); C is tiled by mt
-    (the paper's m), B by bt."""
+    (the paper's m), B by bt.  ``interpret=None`` resolves through
+    ``ops.resolve_interpret()`` (DTM008)."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
     B, C = clauses.shape
     H, C2 = weights.shape
     assert C == C2 and B % bt == 0 and C % mt == 0, ((B, C, H), (bt, mt))

@@ -54,11 +54,15 @@ def _kernel(neg_lit_ref, inc_ref, out_ref, acc_ref, cnt_ref, *,
                                              "interpret"))
 def clause_eval(literals: jax.Array, include: jax.Array,
                 eval_mode: bool = False, bt: int = 8, yt: int = 128,
-                xt: int = 256, interpret: bool = True) -> jax.Array:
+                xt: int = 256, interpret: bool | None = None) -> jax.Array:
     """literals [B, L] {0,1}, include [C, L] {0,1} -> clause [B, C] int32.
 
     B, C, L must be multiples of (bt, yt, xt) — callers pad (the DTM engine's
-    buffers already are)."""
+    buffers already are).  ``interpret=None`` resolves through
+    ``ops.resolve_interpret()`` (DTM008)."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
     B, L = literals.shape
     C, L2 = include.shape
     assert L == L2 and B % bt == 0 and C % yt == 0 and L % xt == 0, (

@@ -120,7 +120,7 @@ def fused_step(literals: jax.Array, include: jax.Array, weights: jax.Array,
                cl_mask: jax.Array, h_mask: jax.Array,
                T: jax.Array, w_frozen: jax.Array,
                rand_bits: int = 16, bt: int = 8, yt: int = 128,
-               xt: int = 256, interpret: bool = True):
+               xt: int = 256, interpret: bool | None = None):
     """Fused training-step front half on tile-exact shapes (callers pad).
 
     literals [B, L] {0,1}; include [R, L] {0,1}; weights [H, R] int32;
@@ -131,7 +131,12 @@ def fused_step(literals: jax.Array, include: jax.Array, weights: jax.Array,
 
     Returns (clause [B, R], class_sums [B, H], sel_lab [B, R],
     sel_neg [B, R]) — all int32, bit-exact vs. the unfused pipeline.
+    ``interpret=None`` resolves through ``ops.resolve_interpret()``
+    (DTM008).
     """
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
     B, L = literals.shape
     R, L2 = include.shape
     H, R2 = weights.shape

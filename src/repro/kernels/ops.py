@@ -157,6 +157,19 @@ def select_ta_path(lanes: int = 1, shape=None) -> str:
     return TA_COMPACT
 
 
+def resolve_kernel_path_force():
+    """Single source of truth for the ``REPRO_KERNEL_PATH`` force:
+    a validated path name, or None (heuristics / autotune decide).
+    Typo'd forces raise instead of silently falling back (PR 8)."""
+    env = os.environ.get("REPRO_KERNEL_PATH", "").strip().lower()
+    if not env:
+        return None
+    if env not in _PATHS:
+        raise ValueError(
+            f"REPRO_KERNEL_PATH={env!r} not recognised; use one of {_PATHS}")
+    return env
+
+
 def select_path(cfg=None, batch=None, training: bool = False,
                 lanes: int = 1, shape=None) -> str:
     """Pick the kernel path for a workload shape.
@@ -182,12 +195,9 @@ def select_path(cfg=None, batch=None, training: bool = False,
              hand-tuned thresholds below.  ``None`` (or
              ``REPRO_AUTOTUNE=off``) keeps the heuristics.
     """
-    env = os.environ.get("REPRO_KERNEL_PATH", "").strip().lower()
-    if env in _PATHS:
+    env = resolve_kernel_path_force()
+    if env is not None:
         return env
-    if env:   # typo'd forces must not silently fall back to the heuristic
-        raise ValueError(
-            f"REPRO_KERNEL_PATH={env!r} not recognised; use one of {_PATHS}")
     if shape is not None:
         from . import autotune
         planned = autotune.planned_path("train" if training else "eval",

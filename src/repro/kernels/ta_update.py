@@ -258,7 +258,8 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
               seed, p_ta, rand_bits: int = 16, boost=True,
               n_states=256, yt: int = 128, xt: int = 256, row0=0,
               prng: str = "counter", lfsr_bits: int = 24,
-              seed_refresh: bool = True, interpret: bool = True) -> jax.Array:
+              seed_refresh: bool = True,
+              interpret: bool | None = None) -> jax.Array:
     """Batched TA update.
 
     ta [C, L] any int dtype (the engine stores uint8-narrowed states, 4 per
@@ -270,7 +271,12 @@ def ta_update(ta: jax.Array, literals: jax.Array, clause_out: jax.Array,
     ``prng``/``lfsr_bits``/``seed_refresh`` select the in-kernel stream
     family (static; see module docstring).
     ``ops.ta_update_op(emit_include=True)`` fuses the packed
-    include-bitplane emission onto this kernel's output."""
+    include-bitplane emission onto this kernel's output.
+    ``interpret=None`` resolves through ``ops.resolve_interpret()``
+    (DTM008)."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
     C, L = ta.shape
     B = literals.shape[0]
     assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))
@@ -308,12 +314,16 @@ def ta_update_streamed(ta: jax.Array, literals: jax.Array,
                        type2: jax.Array, l_mask: jax.Array,
                        rands: jax.Array, p_ta, boost=True, n_states=256,
                        yt: int = 128, xt: int = 256,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool | None = None) -> jax.Array:
     """Batched TA update consuming PRE-MATERIALISED randoms ``rands``
     [B, C, L] uint32 (ref.ta_rand_stream) — the streamed baseline the
     in-kernel generator replaces.  Bit-identical to ``ta_update`` when the
     stream was generated with the same keying; moves B·C·L·4 extra bytes
-    per step, which fig15_lfsr measures."""
+    per step, which fig15_lfsr measures.  ``interpret=None`` resolves
+    through ``ops.resolve_interpret()`` (DTM008)."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
     C, L = ta.shape
     B = literals.shape[0]
     assert C % yt == 0 and L % xt == 0, ((C, L), (yt, xt))

@@ -67,9 +67,14 @@ def _kernel(neg_lit_ref, inc_ref, w_ref, out_ref, viol_ref, cnt_ref, acc_ref,
                                              "interpret"))
 def tm_infer(literals: jax.Array, include: jax.Array, weights: jax.Array,
              eval_mode: bool = True, bt: int = 8, yt: int = 128,
-             xt: int = 256, interpret: bool = True) -> jax.Array:
+             xt: int = 256, interpret: bool | None = None) -> jax.Array:
     """Fused inference: literals [B,L], include [C,L], weights [H,C]
-    -> class sums [B,H] int32.  Dims must tile (callers pad)."""
+    -> class sums [B,H] int32.  Dims must tile (callers pad).
+    ``interpret=None`` resolves through ``ops.resolve_interpret()``
+    (DTM008)."""
+    if interpret is None:
+        from .ops import resolve_interpret     # local: ops imports us
+        interpret = resolve_interpret()
     B, L = literals.shape
     C, L2 = include.shape
     H, C2 = weights.shape

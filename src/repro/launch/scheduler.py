@@ -463,7 +463,15 @@ class TMScheduler:
     def stats(self) -> dict:
         """Operator snapshot: scheduler totals + per-tenant queue/SLA/
         rate state, with the server's own stats nested under
-        ``server``."""
+        ``server``.
+
+        The WHOLE snapshot is taken under ``self._work`` (DTM010): the
+        driver thread mutates the counters, ``_in_flight``, and the
+        server's containers between launches, so any field read outside
+        the condition can tear against a concurrent flush.  The server
+        itself is only ever touched by whoever holds ``_work`` (the
+        single-driver ownership model), which is exactly why nesting
+        ``server.stats()`` here is safe."""
         with self._work:
             resident = set(self.server.resident_names())
             per_tenant = {
@@ -477,13 +485,13 @@ class TMScheduler:
                         (None if st.last_latency_s is None
                          else round(st.last_latency_s * 1e3, 3))}
                 for n, st in sorted(self._tenants.items())}
-        return {"tenants": per_tenant,
-                "submitted": self.submitted,
-                "completed": self.completed,
-                "rejected": self.rejected,
-                "launches": self.launches,
-                "in_flight": len(self._in_flight),
-                "promotions": self.promotions,
-                "demotions": self.demotions,
-                "running": self._thread is not None,
-                "server": self.server.stats()}
+            return {"tenants": per_tenant,
+                    "submitted": self.submitted,
+                    "completed": self.completed,
+                    "rejected": self.rejected,
+                    "launches": self.launches,
+                    "in_flight": len(self._in_flight),
+                    "promotions": self.promotions,
+                    "demotions": self.demotions,
+                    "running": self._thread is not None,
+                    "server": self.server.stats()}

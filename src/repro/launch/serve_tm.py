@@ -242,22 +242,35 @@ class TMServer:
             return _decode_np(tenant.spec, None, np.asarray(cl), t)[:n]
         return _decode_np(tenant.spec, np.asarray(sums), None, 0)[:n]
 
-    def train(self, name: str, x, y) -> dict:
+    def train(self, name: str, x, y, encoded: bool = False) -> dict:
         """Hot-swap and apply one on-line training step (on-chip training:
         the same resident datapath updates the tenant's program in place).
 
         Training requests must FILL the batch slot: padding an inference
         request is free, but padding a training batch would replicate the
         last example's feedback — callers accumulate until a slot is full.
-        """
+
+        ``encoded=True`` accepts packed engine literals plus
+        engine-encoded labels (``engine.encode`` / ``spec.encode_labels``
+        done front-end-side), mirroring ``predict``/``enqueue`` — the
+        pure launch path with no eager encode ops on the driver thread
+        (what the trace-contract audit drives under
+        ``jax.transfer_guard``)."""
         tenant = self._swap_to(name)
         self.requests += 1
-        xp, yp = np.asarray(x), np.asarray(y)
-        assert xp.shape[0] == self.batch_slot, (
-            f"training request has {xp.shape[0]} examples; batch_slot is "
-            f"{self.batch_slot} — accumulate to a full slot before train()")
-        lits = self.engine.encode(tenant.spec, jnp.asarray(xp))
-        lab = tenant.spec.encode_labels(yp)
+        if encoded:
+            lits, lab = x, y
+            assert lits.shape[0] == self.batch_slot, (
+                f"encoded training request has {lits.shape[0]} examples; "
+                f"batch_slot is {self.batch_slot}")
+        else:
+            xp, yp = np.asarray(x), np.asarray(y)
+            assert xp.shape[0] == self.batch_slot, (
+                f"training request has {xp.shape[0]} examples; batch_slot "
+                f"is {self.batch_slot} — accumulate to a full slot before "
+                "train()")
+            lits = self.engine.encode(tenant.spec, jnp.asarray(xp))
+            lab = tenant.spec.encode_labels(yp)
         step = self.engine.train_fn(tenant.spec)
         tenant.program, tenant.prng, stats = step(tenant.program,
                                                   tenant.prng, lits, lab)
@@ -265,8 +278,12 @@ class TMServer:
         # fresh program back in (hot-swap at bank granularity)
         self._dirty.add(name)
         acc = self._skip_acc.setdefault(name, [0, 0])
-        acc[0] = acc[0] + stats["active_groups"]
-        acc[1] = acc[1] + stats["total_groups"]
+        # step stats are device scalars: fetch once so the accumulator
+        # stays a host counter instead of a growing lazy device graph
+        active, total = jax.device_get((stats["active_groups"],
+                                        stats["total_groups"]))
+        acc[0] = acc[0] + int(active)
+        acc[1] = acc[1] + int(total)
         return stats
 
     # ---- stacked (program-major) serving ----------------------------------
@@ -594,7 +611,8 @@ class TMServer:
 # ---------------------------------------------------------------------------
 
 def _block(x):
-    jax.block_until_ready(x)
+    # benchmark timing fence, not the serving hot path
+    jax.block_until_ready(x)           # dtmlint: disable=DTM003
     return x
 
 

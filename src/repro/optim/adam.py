@@ -12,7 +12,6 @@ Built in-repo (no optax dependency).  Distribution features:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax

@@ -13,7 +13,6 @@ Two levers (DESIGN.md §2.7 / §Perf collective iterations):
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

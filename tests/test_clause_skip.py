@@ -32,7 +32,6 @@ import pytest
 from repro import api
 from repro.api import TMSpec
 from repro.core import PRNG
-from repro.core.evaluate import fit_loop
 from repro.kernels import (ops as kops, ref, resolve_skip, select_ta_path,
                            ta_update_compact_op, ta_update_op)
 

@@ -232,6 +232,9 @@ def test_seed_plan_dispatch(monkeypatch):
     winner); edge eval, training, and the TA stage keep the hand
     heuristics, so off vs seed agree everywhere else."""
     shape = (1024, 512, 8)
+    # this test asserts the HEURISTIC/plan dispatch — a forced path from
+    # the CI matrix leg (REPRO_KERNEL_PATH=packed_vpu) must not leak in
+    monkeypatch.delenv("REPRO_KERNEL_PATH", raising=False)
     monkeypatch.setenv("REPRO_AUTOTUNE", "seed")
     autotune.clear_cache()
     assert select_path(None, batch=1, shape=shape) == kops.PATH_PACKED

@@ -16,7 +16,6 @@ Covers the packed layout end-to-end:
 * the packed program payload: uint8 TA + uint32 include bitplane, include
   maintained incrementally by the train stages (never re-thresholded).
 """
-import dataclasses
 import os
 
 import jax

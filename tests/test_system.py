@@ -5,7 +5,6 @@ These validate the *relative* paper claims on synthetic surrogates
 batched (scale) modes converge; LFSR-backend training works; the clause-
 skip statistic grows as the model converges (Fig 7 mechanism).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
