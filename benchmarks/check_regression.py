@@ -43,6 +43,12 @@ Guarded metrics:
   scheduler's continuous-batching speedup over one-launch-per-request)
   and ``p95_over_seq`` (lower is better; open-loop p95 latency over the
   sequential per-request wall — both ratios machine-portable)
+* recovery entries  — ``restore_over_fresh`` (lower is better; durable
+  cold-start over from-seed cold-start, both sides paying the same
+  compile + first launch) and ``ckpt_p95_over_plain`` (lower is better;
+  p95 train-latency tax of the async checkpoint writer — it lives off
+  the hot path, so a jump means checkpointing leaked into the driver
+  cycle)
 
 Metrics present only on one side are reported but never fail the guard
 (new benchmarks land before their baseline is committed).
@@ -62,7 +68,8 @@ from typing import Dict, Tuple
 Metrics = Dict[str, Tuple[float, bool]]
 
 FILES = ("BENCH_fused.json", "BENCH_packed.json", "BENCH_session.json",
-         "BENCH_skip.json", "BENCH_pod.json", "BENCH_serve.json")
+         "BENCH_skip.json", "BENCH_pod.json", "BENCH_serve.json",
+         "BENCH_recovery.json")
 
 
 def _extract(fname: str, report: dict) -> Metrics:
@@ -132,6 +139,20 @@ def _extract(fname: str, report: dict) -> Metrics:
                                              True)
         if "p95_over_seq" in report:
             out["serve/p95_over_seq"] = (report["p95_over_seq"], False)
+    elif fname == "BENCH_recovery.json":
+        # guard the two machine-portable RATIOS: the restored cold-start
+        # over the from-seed cold-start (both sides pay the same compile
+        # + first launch, so growth means the restore path itself got
+        # expensive) and the p95 train-latency tax of the async
+        # checkpoint writer (it lives off the hot path — a jump means
+        # checkpointing leaked into the driver cycle).  Absolute
+        # recovery seconds are reported, not guarded.
+        if "restore_over_fresh" in report:
+            out["recovery/restore_over_fresh"] = (
+                report["restore_over_fresh"], False)
+        if "ckpt_p95_over_plain" in report:
+            out["recovery/ckpt_p95_over_plain"] = (
+                report["ckpt_p95_over_plain"], False)
     return out
 
 

@@ -1,0 +1,218 @@
+"""Durable-streaming recovery costs -> BENCH_recovery.json (ISSUE 10).
+
+Two sections:
+
+* ``restore`` — recovery time to first flush.  A K=8-tenant roster is
+  trained and checkpointed through the durable store, then the process
+  state is discarded and ``api.serve(None, durable_dir=...)`` cold-starts
+  it; the clock runs from the serve() call to the first drained flush.
+  ``restore_over_fresh`` is the guarded, machine-portable ratio: the
+  restored cold-start over a from-seed cold-start of the SAME roster —
+  both sides pay the identical engine compile + first stacked launch, so
+  the ratio isolates what recovery adds (manifest + checkpoint reads,
+  include-bitplane refresh) and stays stable across runner classes.
+* ``ckpt`` — checkpoint-write overhead on serving latency at K=8.  The
+  same closed-loop train-while-serve stream runs once plain and once
+  with the async checkpoint writer sweeping every ``interval_s``;
+  ``ckpt_p95_over_plain`` is the guarded p95-latency ratio (the writer
+  lives off the hot path, so a jump means checkpointing leaked into the
+  driver cycle).
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.recovery_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro import api
+from repro.api import TMSpec
+from repro.launch.scheduler import SchedulerConfig
+
+from .common import FAST, row
+
+OUT = "BENCH_recovery.json"
+K = 8
+
+
+def _spec(features: int, clauses: int, classes: int = 4) -> TMSpec:
+    return TMSpec.coalesced(features=features, classes=classes,
+                            clauses=clauses, T=16, s=4.0)
+
+
+def _roster(features: int, clauses: int) -> dict:
+    return {f"tenant{i}": _spec(features, clauses, classes=2 + i % 3)
+            for i in range(K)}
+
+
+def _payloads(roster: dict, batch_slot: int):
+    rng = np.random.default_rng(0)
+    xs, ys = {}, {}
+    for name, spec in roster.items():
+        xs[name] = (rng.random((batch_slot, spec.features)) < 0.5
+                    ).astype(np.int8)
+        ys[name] = rng.integers(0, spec.classes, batch_slot
+                                ).astype(np.int32)
+    return xs, ys
+
+
+def _first_flush(sched, xs) -> None:
+    futs = [sched.submit(n, x) for n, x in xs.items()]
+    sched.drain()
+    assert all(f.done() for f in futs)
+
+
+def _restore_bench(roster: dict, batch_slot: int, durable_dir: str) -> dict:
+    """Recovery time to first flush: seed the durable store, discard the
+    process state, cold-start from disk vs cold-start from seeds."""
+    xs, ys = _payloads(roster, batch_slot)
+
+    seeder = api.serve(dict(roster), batch_slot=batch_slot,
+                       durable_dir=durable_dir)
+    for n in roster:
+        seeder.submit_train(n, xs[n], ys[n])
+    seeder.drain()
+    seeder.checkpoint_now()
+    steps = {n: seeder.server.tenants[n].steps for n in roster}
+    # the seeder also warms the infer/flush path: both timed cold-starts
+    # below then run against the same warm compile caches, so their
+    # ratio isolates the restore work instead of who compiled first
+    _first_flush(seeder, xs)
+    del seeder                       # the "kill"
+
+    t0 = time.perf_counter()
+    fresh = api.serve(dict(roster), batch_slot=batch_slot)
+    _first_flush(fresh, xs)
+    fresh_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    restored = api.serve(None, durable_dir=durable_dir)
+    _first_flush(restored, xs)
+    restore_s = time.perf_counter() - t0
+    assert all(restored.server.tenants[n].steps == steps[n] for n in roster)
+
+    entry = {
+        "k": K, "batch_slot": batch_slot,
+        "fresh_first_flush_s": fresh_s,
+        "restore_first_flush_s": restore_s,
+        "restore_over_fresh": restore_s / max(fresh_s, 1e-9),
+        "restored_steps": sum(steps.values()),
+    }
+    row(f"recovery_restore_k{K}", restore_s * 1e6,
+        f"restore_over_fresh={entry['restore_over_fresh']:.2f}x")
+    return entry
+
+
+def _train_stream(sched, xs, ys, rounds: int):
+    """Closed-loop train-while-serve rounds on the background driver;
+    per-request latency observed at Future resolution."""
+    lat: list = []
+    for n in xs:                     # warm the train path untimed
+        sched.submit_train(n, xs[n], ys[n]).result(timeout=120)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        futs = []
+        for n in xs:
+            t_sub = time.perf_counter()
+            f = sched.submit_train(n, xs[n], ys[n])
+            f.add_done_callback(
+                lambda _f, t=t_sub: lat.append(time.perf_counter() - t))
+            futs.append(f)
+        for f in futs:
+            f.result(timeout=120)
+    return time.perf_counter() - t0, np.sort(np.asarray(lat)) * 1e3
+
+
+def _ckpt_overhead_bench(roster: dict, batch_slot: int, rounds: int,
+                         durable_dir: str) -> dict:
+    """p95 train-request latency with the async writer on vs off."""
+    xs, ys = _payloads(roster, batch_slot)
+    out = {}
+    for mode in ("plain", "durable"):
+        sched = api.serve(
+            dict(roster), batch_slot=batch_slot,
+            durable_dir=(durable_dir if mode == "durable" else None),
+            config=SchedulerConfig(ckpt_interval_s=0.05))
+        sched.start()
+        try:
+            wall, lat_ms = _train_stream(sched, xs, ys, rounds)
+        finally:
+            sched.stop()
+        out[mode] = {
+            "wall_s": wall,
+            "req_per_s": rounds * K / max(wall, 1e-9),
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p95_ms": float(np.percentile(lat_ms, 95)),
+        }
+        if mode == "durable":
+            ck = sched.stats()["checkpoint"]
+            out[mode]["writer_saves"] = ck["saves"]
+            out[mode]["writer_failures"] = ck["failures"]
+            assert ck["saves"] >= K      # every tenant became durable
+    entry = {
+        "k": K, "rounds": rounds, "plain": out["plain"],
+        "durable": out["durable"],
+        "ckpt_p95_over_plain": (out["durable"]["p95_ms"]
+                                / max(out["plain"]["p95_ms"], 1e-9)),
+    }
+    row(f"recovery_ckpt_k{K}", out["durable"]["p95_ms"] * 1e3,
+        f"ckpt_p95_over_plain={entry['ckpt_p95_over_plain']:.2f}x "
+        f"saves={out['durable']['writer_saves']}")
+    return entry
+
+
+def run(out: str = OUT) -> dict:
+    smoke = FAST
+    features, clauses = (32, 24) if smoke else (128, 96)
+    rounds = 24 if smoke else 96
+    batch_slot = 8 if smoke else 32
+
+    roster = _roster(features, clauses)
+    tmp = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        restore = _restore_bench(roster, batch_slot,
+                                 os.path.join(tmp, "restore"))
+        ckpt = _ckpt_overhead_bench(roster, batch_slot, rounds,
+                                    os.path.join(tmp, "ckpt"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    cores = len(os.sched_getaffinity(0))
+    report = {
+        "smoke": smoke,
+        "k": K, "features": features, "clauses": clauses,
+        "batch_slot": batch_slot,
+        "restore": restore,
+        "ckpt": ckpt,
+        "restore_over_fresh": restore["restore_over_fresh"],
+        "ckpt_p95_over_plain": ckpt["ckpt_p95_over_plain"],
+        "host_cpu_cores": cores,
+        # driver + writer threads want a core each beside the submitter
+        "serialized_host": cores < 2,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["FAST"] = "1"
+        global FAST
+        FAST = True
+    run(out=args.out)
+
+
+if __name__ == "__main__":
+    main()

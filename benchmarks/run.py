@@ -33,17 +33,18 @@ def main() -> None:
 
     from . import (autotune_bench, fig3_opcounts, fig7_clause_skip,
                    fig11_kernels, fig14_weight_bits, fig15_lfsr,
-                   fused_step_bench, packed_bench, pod_bench, serve_bench,
-                   session_bench, skip_bench, table1_accuracy, table2_kws6,
-                   table2_supp, convtm_bench)
+                   fused_step_bench, packed_bench, pod_bench,
+                   recovery_bench, serve_bench, session_bench, skip_bench,
+                   table1_accuracy, table2_kws6, table2_supp, convtm_bench)
     mods = (table1_accuracy, table2_kws6, table2_supp, fig3_opcounts,
             fig7_clause_skip, fig11_kernels, fig14_weight_bits,
             fig15_lfsr, convtm_bench, fused_step_bench,
             packed_bench, autotune_bench, session_bench, skip_bench,
-            pod_bench, serve_bench)
+            pod_bench, serve_bench, recovery_bench)
     if args.only:
         # short selectors for the PR-blocking perf-smoke job
-        aliases = {"autotune": "autotune_bench", "lfsr": "fig15_lfsr"}
+        aliases = {"autotune": "autotune_bench", "lfsr": "fig15_lfsr",
+                   "recovery": "recovery_bench"}
         wanted = {aliases.get(w, w) for w in args.only.split(",")}
         names = {m.__name__.rsplit(".", 1)[-1] for m in mods}
         unknown = wanted - names

@@ -91,6 +91,13 @@ RULES: Sequence[Rule] = (
          "counters and _in_flight were read outside self._work while the "
          "driver thread mutates them.  Every self.* read in stats() "
          "belongs under the condition."),
+    Rule("DTM011", "non-atomic-file-publish",
+         "src/repro/checkpoint/, src/repro/runtime/",
+         "PR 10: durable state must publish atomically (write to a tmp "
+         "path, then os.replace) — checkpoint.py's TOCTOU finalize and a "
+         "crash between open(final, 'w') and json.dump leave a torn file "
+         "a reader then trusts.  Writes in the durability layer go "
+         "through a *tmp* path."),
 )
 
 _RULES_BY_CODE = {r.code: r for r in RULES}
@@ -180,6 +187,8 @@ class _Visitor(ast.NodeVisitor):
                                  for m in _PACKED_MODULES))
         self.env_ok = any(relpath.endswith(m) for m in _ENV_OK)
         self.in_scheduler = relpath.endswith("repro/launch/scheduler.py")
+        self.in_durable = ("repro/checkpoint/" in relpath
+                           or "repro/runtime/" in relpath)
 
     def _flag(self, node: ast.AST, code: str, message: str) -> None:
         self.findings.append(Finding(self.path, node.lineno,
@@ -304,7 +313,42 @@ class _Visitor(ast.NodeVisitor):
             self._flag(node, "DTM003",
                        "block_until_ready under launch/ outside collect() "
                        "— serialises the async pipeline")
+        self._check_atomic_publish(node)
         self.generic_visit(node)
+
+    # ---- DTM011: durable writes must go through a tmp path ----------------
+    @staticmethod
+    def _path_mentions_tmp(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            name = (sub.id if isinstance(sub, ast.Name) else
+                    sub.attr if isinstance(sub, ast.Attribute) else
+                    sub.value if (isinstance(sub, ast.Constant)
+                                  and isinstance(sub.value, str)) else None)
+            if name is not None and "tmp" in name.lower():
+                return True
+        return False
+
+    def _check_atomic_publish(self, node: ast.Call) -> None:
+        if not self.in_durable:
+            return
+        f = node.func
+        if (isinstance(f, ast.Name) and f.id == "open"
+                and len(node.args) >= 2):
+            mode = node.args[1]
+            if (isinstance(mode, ast.Constant)
+                    and isinstance(mode.value, str)
+                    and any(c in mode.value for c in "wax")
+                    and not self._path_mentions_tmp(node.args[0])):
+                self._flag(node, "DTM011",
+                           "file written at its final path — write to a "
+                           "*tmp* path and os.replace (atomic publish)")
+        if (isinstance(f, ast.Attribute)
+                and f.attr in ("save", "savez", "savez_compressed")
+                and _root_name(f) in ("np", "numpy") and node.args
+                and not self._path_mentions_tmp(node.args[0])):
+            self._flag(node, "DTM011",
+                       f"np.{f.attr} to a final path — write under a "
+                       "*tmp* dir and os.replace (atomic publish)")
 
     def visit_Attribute(self, node: ast.Attribute) -> None:
         if (node.attr == "environ" and isinstance(node.value, ast.Name)

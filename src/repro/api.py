@@ -631,9 +631,11 @@ def stack(programs: Sequence[DTMProgram], engine: DTMEngine,
 # serve — the full async serving stack in one call
 # ---------------------------------------------------------------------------
 
-def serve(roster: dict, batch_slot: int = 32, backend: str = "auto",
-          mesh=None, config=None, slas: Optional[dict] = None,
-          seed: int = 0):
+def serve(roster: Optional[dict], batch_slot: int = 32,
+          backend: str = "auto", mesh=None, config=None,
+          slas: Optional[dict] = None, seed: int = 0,
+          durable_dir: Optional[str] = None, ckpt_keep: int = 3,
+          injector=None):
     """Build the async serving stack for a tenant roster in one call:
     a :func:`tile_for`-sized engine, a multi-tenant
     :class:`repro.launch.serve_tm.TMServer` (pod-sharded when ``mesh``
@@ -645,16 +647,60 @@ def serve(roster: dict, batch_slot: int = 32, backend: str = "auto",
     ``config`` is a :class:`repro.launch.scheduler.SchedulerConfig`.
     Returns the scheduler (its ``.server`` / ``.server.engine`` expose
     the layers below).  Call ``.start()`` for the background flush loop
-    or drive it inline with ``.step()`` / ``.drain()``."""
-    # lazy imports: launch/ pulls this front-end module back in
-    from repro.launch.scheduler import TMScheduler
-    from repro.launch.serve_tm import TMServer
+    or drive it inline with ``.step()`` / ``.drain()``.
 
-    assert roster, "serve() needs at least one tenant spec"
+    Durable streaming (ISSUE 10): with ``durable_dir`` set, tenant
+    programs restore from their latest durable step (fresh tenants
+    lower from their seed), each applied training step marks the tenant
+    dirty for the async checkpoint writer, and the roster manifest is
+    (re)written — so a crashed server cold-starts with
+    ``api.serve(None, durable_dir=...)`` and continues bit-identically
+    from the last durable step.  ``injector`` (a
+    :class:`repro.runtime.fault.FaultInjector`) plumbs a deterministic
+    failure schedule into the driver + writer boundaries (tests)."""
+    # lazy imports: launch/ pulls this front-end module back in
+    from repro.launch.scheduler import SLAClass, TMScheduler
+    from repro.launch.serve_tm import TMServer
+    from repro.runtime.durable import DurableStore, restore_tenant
+
+    store = manifest = None
+    seeds: dict = {}
+    if durable_dir is not None:
+        store = DurableStore(durable_dir, keep=ckpt_keep)
+        manifest = store.read_manifest()
+    if manifest is not None:
+        seeds = {n: t["seed"] for n, t in manifest["tenants"].items()}
+        if roster is None:             # cold-start: roster from manifest
+            roster = {n: TMSpec.from_dict(t["spec"])
+                      for n, t in manifest["tenants"].items()}
+            batch_slot = manifest.get("batch_slot", batch_slot)
+            if slas is None:
+                slas = {n: SLAClass(**t["sla"])
+                        for n, t in manifest["tenants"].items()
+                        if t.get("sla") is not None}
+    assert roster, ("serve() needs at least one tenant spec (or a "
+                    "durable_dir with a manifest to cold-start from)")
     engine = compile(tile_for(*roster.values()), backend=backend)
     server = TMServer(engine, batch_slot=batch_slot, mesh=mesh)
-    sched = TMScheduler(server, config=config)
+    sched = TMScheduler(server, config=config, durable=store,
+                        injector=injector)
     for i, (name, spec) in enumerate(roster.items()):
-        sched.register(name, spec, seed=seed + i,
-                       sla=(slas or {}).get(name))
+        tseed = seeds.setdefault(name, seed + i)
+        sla = (slas or {}).get(name)
+        restored = (restore_tenant(store, name, engine, spec, seed=tseed)
+                    if store is not None else None)
+        if restored is not None:
+            program, prng, steps = restored
+            sched.register(name, spec, program=program, prng=prng,
+                           steps=steps, seed=tseed, sla=sla)
+        else:
+            sched.register(name, spec, seed=tseed, sla=sla)
+    if store is not None:
+        store.write_manifest({
+            "version": 1, "batch_slot": batch_slot,
+            "tenants": {
+                n: {"spec": spec.to_dict(), "seed": seeds[n],
+                    "sla": (None if (slas or {}).get(n) is None
+                            else dataclasses.asdict((slas or {})[n]))}
+                for n, spec in roster.items()}})
     return sched

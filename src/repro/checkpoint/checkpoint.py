@@ -9,19 +9,65 @@ so a partially-written checkpoint (crash mid-save) is never selected.
 
 Restore supports ELASTIC reshape: saved host-count and restored host-count
 may differ — leaves are saved unsharded per-host for the single-process
-CPU container (multi-host path documented; the elastic re-mesh test in
-tests/test_runtime.py exercises save@mesh-A → restore@mesh-B).
+CPU container (restore re-device_puts under the caller's shardings; the
+durable-serving tests in tests/test_recovery.py exercise save → kill →
+restore).
+
+Concurrent-reader safety: ``latest_step`` records which step it resolved
+(per checkpoint dir, with a monotonic timestamp) and ``restore`` pins the
+step for the duration of the read — ``_gc`` skips pinned steps and steps
+resolved within the last ``_GC_GRACE_S`` seconds, so a writer's retention
+sweep can never delete the checkpoint a concurrent reader just chose.
 """
 from __future__ import annotations
 
+import errno
 import json
 import os
 import shutil
+import threading
 import time
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+# ---- reader/GC coordination (process-local) --------------------------------
+# _RESOLVED:  ckpt_dir -> (step, monotonic time of the last latest_step())
+# _PINNED:    (ckpt_dir, step) -> refcount of in-progress restore() calls
+_GC_GRACE_S = 30.0
+_REG_LOCK = threading.Lock()
+_RESOLVED: dict = {}
+_PINNED: dict = {}
+
+
+def _protected_steps(ckpt_dir: str) -> set:
+    """Steps _gc must not delete: pinned by an in-progress restore, or
+    resolved by a latest_step() call within the grace window."""
+    key = os.path.abspath(ckpt_dir)
+    now = time.monotonic()
+    with _REG_LOCK:
+        keep = {s for (d, s), n in _PINNED.items() if d == key and n > 0}
+        got = _RESOLVED.get(key)
+        if got is not None and now - got[1] < _GC_GRACE_S:
+            keep.add(got[0])
+    return keep
+
+
+def _note_resolved(ckpt_dir: str, step: int) -> None:
+    with _REG_LOCK:
+        _RESOLVED[os.path.abspath(ckpt_dir)] = (step, time.monotonic())
+
+
+def _pin(ckpt_dir: str, step: int, delta: int) -> None:
+    key = (os.path.abspath(ckpt_dir), step)
+    with _REG_LOCK:
+        n = _PINNED.get(key, 0) + delta
+        if n <= 0:
+            _PINNED.pop(key, None)
+        else:
+            _PINNED[key] = n
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -58,15 +104,51 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
     }
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
-    os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+    try:
+        # atomic publish: os.replace fails (ENOTEMPTY/EEXIST) when another
+        # writer already published this step — first writer wins, and the
+        # loser's tmp dir is discarded without a TOCTOU window
+        os.replace(tmp, final)
+    except OSError as e:
+        if e.errno not in (errno.ENOTEMPTY, errno.EEXIST, errno.ENOTDIR):
+            raise
+        shutil.rmtree(tmp, ignore_errors=True)
     _gc(ckpt_dir, keep)
     return final
 
 
+def _tmp_is_live(name: str) -> bool:
+    """A ``step_X.tmp.<pid>`` dir belongs to a live writer iff its pid is
+    still running (our own pid counts — save() may be mid-publish on
+    another thread)."""
+    try:
+        pid = int(name.rsplit(".", 1)[-1])
+    except ValueError:
+        return True                    # unparseable — leave it alone
+    if pid == os.getpid():
+        return True
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False                   # writer died mid-save: orphan
+    except (PermissionError, OverflowError):
+        return True                    # exists (or unknowable): keep
+    return True
+
+
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
-                   and not d.endswith(".tmp"))
+    entries = os.listdir(ckpt_dir)
+    # orphaned tmp dirs from a writer killed mid-save are collected here
+    # (the crash-recovery sweep) — a LIVE writer's tmp is never touched
+    for d in entries:
+        if d.startswith("step_") and ".tmp." in d and not _tmp_is_live(d):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    protected = _protected_steps(ckpt_dir)
+    steps = sorted(d for d in entries if d.startswith("step_")
+                   and ".tmp" not in d)
     for d in steps[:-keep] if keep > 0 else []:
+        if int(d.split("_")[1]) in protected:
+            continue                   # a concurrent reader resolved it
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
@@ -79,7 +161,11 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
             p = os.path.join(ckpt_dir, d)
             if os.path.exists(os.path.join(p, "meta.json")):  # complete only
                 steps.append(int(d.split("_")[1]))
-    return max(steps) if steps else None
+    if not steps:
+        return None
+    step = max(steps)
+    _note_resolved(ckpt_dir, step)     # shields it from a concurrent _gc
+    return step
 
 
 def restore(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
@@ -87,6 +173,14 @@ def restore(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
 
     ``like`` may live on a different mesh than at save time — caller
     re-device_puts with its own shardings (elastic restore)."""
+    _pin(ckpt_dir, step, +1)
+    try:
+        return _restore_pinned(ckpt_dir, step, like)
+    finally:
+        _pin(ckpt_dir, step, -1)
+
+
+def _restore_pinned(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)

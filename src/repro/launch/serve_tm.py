@@ -85,6 +85,7 @@ class _Tenant:
     spec: TMSpec
     program: DTMProgram
     prng: PRNG
+    steps: int = 0      # lifetime applied training steps (durable cursor)
 
 
 @dataclasses.dataclass
@@ -164,13 +165,17 @@ class TMServer:
 
     # ---- tenant management ------------------------------------------------
     def register(self, name: str, spec: TMSpec,
-                 program: Optional[DTMProgram] = None, seed: int = 0):
+                 program: Optional[DTMProgram] = None, seed: int = 0,
+                 prng: Optional[PRNG] = None, steps: int = 0):
         """Admit a model: lower its spec onto the resident engine (or adopt
-        an already-lowered/trained program)."""
+        an already-lowered/trained program).  ``prng``/``steps`` resume a
+        tenant mid-stream (the durable-restore path) — by default a fresh
+        PRNG is derived from ``seed`` and the step cursor starts at 0."""
         if program is None:
             program = self.engine.lower(spec, jax.random.PRNGKey(seed))
-        self.tenants[name] = _Tenant(spec, program,
-                                     PRNG.create(spec.tm_config(), seed + 1))
+        if prng is None:
+            prng = PRNG.create(spec.tm_config(), seed + 1)
+        self.tenants[name] = _Tenant(spec, program, prng, steps=steps)
         self._admitted(name, spec)
 
     def adopt(self, name: str, tm: TM):
@@ -277,14 +282,17 @@ class TMServer:
         # the tenant's bank slot is stale until the next flush swaps the
         # fresh program back in (hot-swap at bank granularity)
         self._dirty.add(name)
+        tenant.steps += 1
+        # step stats are device scalars: fetch them ALL in one explicit
+        # transfer so (a) the skip accumulator stays a host counter
+        # instead of a growing lazy device graph and (b) callers (the
+        # scheduler's drift/pause telemetry, the durable writer) get
+        # plain host ints with no further syncs
+        host = {k: int(v) for k, v in jax.device_get(stats).items()}
         acc = self._skip_acc.setdefault(name, [0, 0])
-        # step stats are device scalars: fetch once so the accumulator
-        # stays a host counter instead of a growing lazy device graph
-        active, total = jax.device_get((stats["active_groups"],
-                                        stats["total_groups"]))
-        acc[0] = acc[0] + int(active)
-        acc[1] = acc[1] + int(total)
-        return stats
+        acc[0] = acc[0] + host["active_groups"]
+        acc[1] = acc[1] + host["total_groups"]
+        return host
 
     # ---- stacked (program-major) serving ----------------------------------
     def _group_names(self, conv: bool) -> List[str]:
@@ -410,6 +418,15 @@ class TMServer:
         tenant = self.tenants[name]
         lits, n = self._encode_request(tenant, x, encoded)
         self._pending.append((name, lits, n, time.perf_counter()))
+
+    def abandon_pending(self) -> int:
+        """Drop every enqueued-but-unlaunched request (fault recovery:
+        the scheduler failed the corresponding futures and must not let
+        the stale literals ride the next cycle's flush).  Returns the
+        number dropped."""
+        n = len(self._pending)
+        self._pending = []
+        return n
 
     def flush_async(self) -> Optional[PendingFlush]:
         """Launch phase of :meth:`flush`: dispatch ONE stacked launch per

@@ -1,7 +1,11 @@
-from .fault import StepMonitor, Supervisor, FailureEvent, shrink_mesh
+from .fault import (BOUNDARIES, FaultInjector, FaultPlan, InjectedFault,
+                    RetryPolicy, StepMonitor, with_retry)
+from .durable import CheckpointWriter, DurableStore, restore_tenant
 from .compression import (compressed_psum, exact_int8_psum, quantize_tree,
                           dequantize_tree)
 
-__all__ = ["StepMonitor", "Supervisor", "FailureEvent", "shrink_mesh",
+__all__ = ["BOUNDARIES", "FaultInjector", "FaultPlan", "InjectedFault",
+           "RetryPolicy", "StepMonitor", "with_retry",
+           "CheckpointWriter", "DurableStore", "restore_tenant",
            "compressed_psum", "exact_int8_psum", "quantize_tree",
            "dequantize_tree"]

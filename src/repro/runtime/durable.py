@@ -1,0 +1,244 @@
+"""Durable tenant state for the streaming-learning serving stack.
+
+The paper's run-time reconfiguration story (hot-swap a model without
+resynthesis) is what makes restart-from-checkpoint cheap here: a tenant's
+durable image is its bit-packed :class:`repro.core.dtm.DTMProgram` (uint8
+TA states 4-per-word + the uint32 include bitplane is DERIVED on restore)
+plus its :class:`repro.core.prng.PRNG` — a few KB, written through the
+existing atomic ``repro.checkpoint`` substrate.  A server that dies
+mid-stream cold-starts from the latest durable step of every tenant and
+continues bit-identically (tests/test_recovery.py asserts it).
+
+Layout under ``root/``::
+
+    manifest.json                      # roster: spec/SLA/seed per tenant
+    tenants/<name>/step_XXXXXXXX/      # repro.checkpoint dirs (atomic)
+
+* :class:`DurableStore`  — the on-disk layout: atomic manifest writes
+  (tmp + rename, same discipline dtmlint rule DTM011 enforces) and
+  per-tenant step-addressed checkpoints.
+* :class:`CheckpointWriter` — the async background writer: the scheduler
+  marks tenants dirty after each applied training step; the writer
+  drains the dirty set every ``interval_s`` off the hot path (training
+  latency never waits on the filesystem).  Failures at the ``checkpoint``
+  boundary (injected or real) re-mark the tenant dirty — the next sweep
+  retries.
+* :func:`restore_tenant` — rebuild one tenant from its latest durable
+  step: fresh ``engine.lower`` for geometry, TA + weights replaced
+  wholesale, include bitplane refreshed, PRNG restored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.core.prng import PRNG
+
+__all__ = ["DurableStore", "CheckpointWriter", "restore_tenant"]
+
+_MANIFEST = "manifest.json"
+
+
+class DurableStore:
+    """On-disk durable state: roster manifest + per-tenant checkpoints.
+
+    ``keep`` is the per-tenant retention (checkpoint GC keeps the newest
+    ``keep`` steps; 0 keeps everything)."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(os.path.join(root, "tenants"), exist_ok=True)
+
+    # ---- manifest ---------------------------------------------------------
+    def write_manifest(self, manifest: dict) -> None:
+        """Atomic publish (tmp + rename): a reader never sees a torn
+        manifest, and a writer killed mid-dump leaves the old one."""
+        final = os.path.join(self.root, _MANIFEST)
+        tmp = final + f".tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=2)
+        os.replace(tmp, final)
+
+    def read_manifest(self) -> Optional[dict]:
+        path = os.path.join(self.root, _MANIFEST)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    # ---- per-tenant checkpoints -------------------------------------------
+    def tenant_dir(self, name: str) -> str:
+        return os.path.join(self.root, "tenants", name)
+
+    def save_tenant(self, name: str, step: int, tree) -> str:
+        return ckpt.save(self.tenant_dir(name), step, tree, keep=self.keep)
+
+    def latest_tenant_step(self, name: str) -> Optional[int]:
+        return ckpt.latest_step(self.tenant_dir(name))
+
+    def load_tenant(self, name: str, like) -> Optional[Tuple[int, dict]]:
+        got = ckpt.restore_latest(self.tenant_dir(name), like)
+        if got is None:
+            return None
+        step, tree, _ = got
+        return step, tree
+
+
+def restore_tenant(store: DurableStore, name: str, engine, spec,
+                   seed: int = 0):
+    """Rebuild one tenant from its latest durable step.
+
+    Returns ``(program, prng, step)``, or ``None`` when the tenant has no
+    durable state yet (caller registers it fresh).  ``seed`` must match
+    the tenant's registration seed so the ``like`` structure (and a
+    tenant restored WITHOUT any checkpoint) reproduces registration
+    exactly — the manifest records it."""
+    import jax  # deferred: keep module import light for non-durable users
+
+    program = engine.lower(spec, jax.random.PRNGKey(seed))
+    prng = PRNG.create(spec.tm_config(), seed + 1)
+    got = store.load_tenant(name, like={"ta": program.ta,
+                                        "weights": program.weights,
+                                        "prng": prng})
+    if got is None:
+        return None
+    step, tree = got
+    program = dataclasses.replace(program, ta=jnp.asarray(tree["ta"]),
+                                  weights=jnp.asarray(tree["weights"]))
+    # TA states were replaced wholesale — rebuild the packed include
+    # bitplane the train stages otherwise maintain incrementally
+    program = engine.refresh_include(program)
+    return program, tree["prng"], step
+
+
+class CheckpointWriter:
+    """Async checkpointing: drain a dirty-tenant set off the hot path.
+
+    ``snapshot_fn(name) -> (step, tree)`` is supplied by the owner (the
+    scheduler): it grabs consistent references to the tenant's program /
+    PRNG under the scheduler lock and returns them — JAX arrays are
+    immutable, so the writer thread can fetch + serialise them at leisure
+    while training continues.
+
+    Runs either as a daemon thread (:meth:`start`, periodic sweeps every
+    ``interval_s``) or inline (:meth:`flush` with no thread running
+    drains on the caller).  A save that fails (an injected ``checkpoint``
+    boundary fault, or a real filesystem error) re-marks the tenant
+    dirty: durability degrades to the previous step, never to a torn
+    write."""
+
+    def __init__(self, store: DurableStore,
+                 snapshot_fn: Callable[[str], Tuple[int, dict]],
+                 interval_s: float = 0.25, injector=None):
+        self.store = store
+        self.snapshot_fn = snapshot_fn
+        self.interval_s = interval_s
+        self.injector = injector
+        self._dirty: set = set()
+        self._cond = threading.Condition()
+        self._busy = 0                 # saves in progress (flush barrier)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+        self.failures = 0
+        self.last_saved: Dict[str, int] = {}
+        self.last_error: Optional[str] = None
+
+    # ---- dirty-set ingress (scheduler thread) ------------------------------
+    def mark_dirty(self, name: str) -> None:
+        with self._cond:
+            self._dirty.add(name)
+            self._cond.notify_all()
+
+    # ---- the sweep ---------------------------------------------------------
+    def _drain(self) -> int:
+        """Save every dirty tenant once; returns the number saved."""
+        with self._cond:
+            batch = sorted(self._dirty)
+            self._dirty.clear()
+            self._busy += 1
+        done = 0
+        try:
+            for name in batch:
+                step, tree = self.snapshot_fn(name)
+                try:
+                    if self.injector is not None:
+                        self.injector.check("checkpoint")
+                    self.store.save_tenant(name, step, tree)
+                except (RuntimeError, OSError) as e:
+                    # durability falls back to the previous step; the
+                    # tenant stays dirty and the next sweep retries
+                    self.failures += 1
+                    self.last_error = repr(e)
+                    with self._cond:
+                        self._dirty.add(name)
+                    continue
+                self.saves += 1
+                self.last_saved[name] = step
+                done += 1
+        finally:
+            with self._cond:
+                self._busy -= 1
+                self._cond.notify_all()
+        return done
+
+    def flush(self, timeout: Optional[float] = 30.0) -> None:
+        """Synchronous barrier: every tenant dirty at call time is durable
+        (or counted as a failure) when this returns.  Drains inline when
+        the background thread is not running."""
+        if self._thread is None:
+            self._drain()
+            return
+        with self._cond:
+            self._cond.notify_all()
+            ok = self._cond.wait_for(
+                lambda: not self._dirty and self._busy == 0, timeout)
+            assert ok, "checkpoint writer did not drain in time"
+
+    # ---- background thread -------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._thread is not None
+
+    def start(self) -> None:
+        assert self._thread is None, "checkpoint writer already running"
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="tm-ckpt-writer")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            with self._cond:
+                if not self._dirty:
+                    self._cond.wait(self.interval_s)
+                    continue
+            # coalesce a burst of marks into one sweep per interval
+            self._stop.wait(self.interval_s)
+            self._drain()
+        self._drain()                  # final sweep: nothing dirty is lost
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        self._thread.join(timeout=60)
+        assert not self._thread.is_alive(), "checkpoint writer hung"
+        self._thread = None
+
+    def stats(self) -> dict:
+        with self._cond:
+            return {"saves": self.saves, "failures": self.failures,
+                    "dirty": len(self._dirty),
+                    "running": self._thread is not None,
+                    "last_saved": dict(self.last_saved),
+                    "last_error": self.last_error}

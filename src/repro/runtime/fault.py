@@ -1,134 +1,176 @@
-"""Fault tolerance & elasticity runtime.
+"""Fault injection + recovery primitives for the DTM serving stack.
 
-Mechanisms (exercised by tests/test_runtime.py on the CPU container with
-simulated failures; the same code paths drive a real multi-host deployment):
+The durable streaming-learning layer (``repro.launch.scheduler`` with a
+``repro.runtime.durable.DurableStore`` attached) claims it survives
+failures at every stage of a request's life.  This module is how that
+claim is *tested* and *enforced*:
 
-* :class:`StepMonitor`   — per-step wall-time EWMA; flags stragglers
-  (step > ``straggler_factor`` × median) so the supervisor can checkpoint
-  early / exclude the slow host at the next re-mesh.
-* :class:`Supervisor`    — run loop: periodic checkpoints, failure capture,
-  restore-from-latest, **elastic re-mesh** (continue on fewer devices with
-  the same global batch — per-device batch grows).
-* :func:`shrink_mesh`    — rebuild the largest well-formed (data, model)
-  mesh from surviving devices, holding the model axis (TP degree must be
-  preserved — weights are sharded over it) and shrinking data.
+* :class:`FaultInjector` / :class:`FaultPlan` — deterministic, API-driven
+  failure injection at the four driver boundaries (``encode``, ``launch``,
+  ``collect``, ``checkpoint``).  Faults fire at boundary ENTRY — before
+  any device or filesystem mutation — so a retried call re-executes
+  cleanly (the injection model mirrors a launch that never reached the
+  device).  Injection is constructor-plumbed, never environment-driven:
+  config resolves once (DTM002) and a test's failure schedule is explicit
+  in the test.
+* :class:`RetryPolicy` / :func:`with_retry` — bounded retry with
+  (optional) exponential backoff for *transient* boundary failures; a
+  non-transient :class:`InjectedFault` or exhausted budget re-raises to
+  the caller, which fails the affected futures and enters degraded mode.
+* :class:`StepMonitor` — per-flush wall-time EWMA; flags stragglers
+  (flush > ``factor`` × EWMA after warmup) so the scheduler can surface
+  heartbeat gaps in ``stats()`` without a separate watchdog thread.
+  Straggler samples are folded in clamped so one pathological flush does
+  not drag the baseline up and mask the next one.
+
+Exercised by ``tests/test_recovery.py`` (single device and the forced
+4-device mesh CI leg).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, Mapping, Optional, Sequence
 
-import jax
-import numpy as np
+__all__ = ["BOUNDARIES", "InjectedFault", "FaultPlan", "FaultInjector",
+           "RetryPolicy", "with_retry", "StepMonitor"]
 
-from repro import checkpoint as ckpt
+
+# the four driver boundaries a request crosses (encode on the driver
+# thread, launch/collect on the device, checkpoint on the writer)
+BOUNDARIES = ("encode", "launch", "collect", "checkpoint")
+
+
+class InjectedFault(RuntimeError):
+    """A scheduled failure fired at a driver boundary.
+
+    ``transient`` faults model recoverable conditions (a launch the
+    runtime can simply re-issue) and are eligible for :func:`with_retry`;
+    non-transient faults model hard errors and propagate immediately."""
+
+    def __init__(self, boundary: str, index: int, transient: bool = True):
+        super().__init__(f"injected {'transient' if transient else 'hard'} "
+                         f"fault at {boundary!r} boundary (call #{index})")
+        self.boundary = boundary
+        self.index = index
+        self.transient = transient
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic failure schedule: per boundary, WHICH calls fail.
+
+    ``fail`` maps a boundary name to the 0-based call indices that raise
+    (e.g. ``{"launch": (2, 3)}`` fails the 3rd and 4th launches);
+    ``transient`` marks every scheduled fault retryable."""
+
+    fail: Mapping[str, Sequence[int]] = dataclasses.field(
+        default_factory=dict)
+    transient: bool = True
+
+    def __post_init__(self):
+        unknown = set(self.fail) - set(BOUNDARIES)
+        assert not unknown, f"unknown fault boundaries: {sorted(unknown)}"
+
+
+class FaultInjector:
+    """Counts boundary crossings and raises per a :class:`FaultPlan`.
+
+    One injector is shared by the scheduler and the checkpoint writer;
+    ``check`` is called at every boundary entry (cheap: a dict bump).
+    Thread safety relies on the GIL for the counter bump — exact
+    interleaving across threads is not part of the injection contract
+    (plans target per-boundary indices, and each boundary is crossed by
+    exactly one thread)."""
+
+    def __init__(self, plan: Optional[FaultPlan] = None):
+        self.plan = plan or FaultPlan()
+        self.calls: Dict[str, int] = {b: 0 for b in BOUNDARIES}
+        self.injected: Dict[str, int] = {b: 0 for b in BOUNDARIES}
+
+    def check(self, boundary: str) -> None:
+        """Cross ``boundary``: raise :class:`InjectedFault` if this call
+        index is scheduled to fail, else return."""
+        idx = self.calls[boundary]
+        self.calls[boundary] = idx + 1
+        if idx in tuple(self.plan.fail.get(boundary, ())):
+            self.injected[boundary] += 1
+            raise InjectedFault(boundary, idx, self.plan.transient)
+
+    def stats(self) -> dict:
+        return {"calls": dict(self.calls), "injected": dict(self.injected)}
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry budget for transient boundary faults.
+
+    ``retries`` is the number of RE-attempts after the first failure
+    (``retries=3`` allows up to 4 invocations); ``backoff_s`` sleeps
+    before each re-attempt, growing by ``multiplier``."""
+
+    retries: int = 3
+    backoff_s: float = 0.0
+    multiplier: float = 2.0
+
+
+def with_retry(fn: Callable, policy: RetryPolicy,
+               on_retry: Optional[Callable[[int, BaseException],
+                                           None]] = None):
+    """Call ``fn()`` retrying transient :class:`InjectedFault` s under
+    ``policy``.  Non-transient faults, other exceptions, and budget
+    exhaustion re-raise; ``on_retry(attempt, exc)`` observes each
+    re-attempt (the scheduler counts them)."""
+    delay = policy.backoff_s
+    for attempt in range(policy.retries + 1):
+        try:
+            return fn()
+        except InjectedFault as e:
+            if not e.transient or attempt == policy.retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if delay > 0:
+                time.sleep(delay)
+                delay *= policy.multiplier
+    raise AssertionError("unreachable")
 
 
 class StepMonitor:
-    def __init__(self, straggler_factor: float = 3.0, window: int = 50):
-        self.times: List[float] = []
-        self.factor = straggler_factor
-        self.window = window
-        self.straggler_steps: List[int] = []
+    """Per-flush wall-time EWMA with straggler detection.
 
-    def record(self, step: int, dt: float) -> bool:
-        """Returns True if this step is a straggler."""
-        self.times.append(dt)
-        hist = self.times[-self.window:]
-        med = float(np.median(hist[:-1])) if len(hist) > 4 else None
-        is_straggler = med is not None and dt > self.factor * med
+    ``record(dt)`` returns True when ``dt`` exceeds ``factor`` × the
+    running EWMA after ``warmup`` samples (the heartbeat signal the
+    scheduler surfaces in ``stats()``).  A straggler sample is folded in
+    CLAMPED at ``factor`` × EWMA, so a single pathological flush cannot
+    inflate the baseline and mask the next straggler."""
+
+    def __init__(self, factor: float = 4.0, alpha: float = 0.2,
+                 warmup: int = 5):
+        self.factor = factor
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self.n = 0
+        self.stragglers = 0
+
+    def record(self, dt: float) -> bool:
+        """Returns True if this flush is a straggler."""
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = self.n > self.warmup and dt > self.factor * self.ewma
         if is_straggler:
-            self.straggler_steps.append(step)
+            self.stragglers += 1
+            dt = self.factor * self.ewma          # clamped fold-in
+        self.ewma = self.alpha * dt + (1 - self.alpha) * self.ewma
         return is_straggler
 
     @property
-    def median(self) -> float:
-        return float(np.median(self.times)) if self.times else 0.0
+    def mean(self) -> float:
+        return float(self.ewma) if self.ewma is not None else 0.0
 
-
-def shrink_mesh(devices: Sequence, model_axis: int,
-                axis_names=("data", "model")):
-    """Largest (data', model) mesh from surviving devices (TP preserved)."""
-    n = len(devices)
-    data_axis = n // model_axis
-    assert data_axis >= 1, (
-        f"{n} surviving devices cannot hold model axis {model_axis}")
-    use = np.asarray(devices[: data_axis * model_axis]).reshape(
-        data_axis, model_axis)
-    return jax.sharding.Mesh(use, axis_names)
-
-
-@dataclasses.dataclass
-class FailureEvent(Exception):
-    """Raised by the failure injector / detected by heartbeat timeout."""
-
-    failed_devices: tuple
-    step: int
-
-    def __str__(self):
-        return f"device failure at step {self.step}: {self.failed_devices}"
-
-
-class Supervisor:
-    """Checkpointed, elastic training loop driver.
-
-    step_fn(state, batch, mesh) -> state            (pjit'd by caller)
-    remesh_fn(state, new_mesh) -> state             (re-device_put)
-    Failure injection: pass ``inject`` mapping step -> n_failed_devices.
-    """
-
-    def __init__(self, ckpt_dir: str, step_fn: Callable, remesh_fn: Callable,
-                 mesh, model_axis: int, ckpt_every: int = 50,
-                 monitor: Optional[StepMonitor] = None):
-        self.ckpt_dir = ckpt_dir
-        self.step_fn = step_fn
-        self.remesh_fn = remesh_fn
-        self.mesh = mesh
-        self.model_axis = model_axis
-        self.ckpt_every = ckpt_every
-        self.monitor = monitor or StepMonitor()
-        self.restarts = 0
-
-    def run(self, state, batches: Callable[[int], object], n_steps: int,
-            inject: Optional[dict] = None, data_state_fn=None):
-        """Returns (state, log).  ``batches(step)`` yields the global batch."""
-        step = 0
-        # resume if a checkpoint exists
-        got = ckpt.restore_latest(self.ckpt_dir, state)
-        if got is not None:
-            step, state, extra = got
-            self.restarts += 0  # restore on entry is not a restart
-        log = []
-        while step < n_steps:
-            try:
-                if inject and step in inject:
-                    n_fail = inject.pop(step)
-                    live = self.mesh.devices.reshape(-1)[:-n_fail]
-                    raise FailureEvent(tuple(
-                        self.mesh.devices.reshape(-1)[-n_fail:]), step)
-                t0 = time.perf_counter()
-                state = self.step_fn(state, batches(step), self.mesh)
-                dt = time.perf_counter() - t0
-                strag = self.monitor.record(step, dt)
-                log.append({"step": step, "dt": dt, "straggler": strag})
-                step += 1
-                if step % self.ckpt_every == 0:
-                    extra = (data_state_fn() if data_state_fn else {})
-                    ckpt.save(self.ckpt_dir, step, state, extra=extra)
-            except FailureEvent as e:
-                # 1) shrink the mesh to survivors, 2) restore latest ckpt,
-                # 3) continue — the elastic-scaling path.
-                survivors = [d for d in self.mesh.devices.reshape(-1)
-                             if d not in e.failed_devices]
-                self.mesh = shrink_mesh(survivors, self.model_axis)
-                got = ckpt.restore_latest(self.ckpt_dir, state)
-                if got is not None:
-                    step, state, _ = got
-                else:
-                    step = 0
-                state = self.remesh_fn(state, self.mesh)
-                self.restarts += 1
-                log.append({"step": step, "event": "restart",
-                            "devices": int(np.prod(self.mesh.devices.shape))})
-        return state, log
+    def stats(self) -> dict:
+        return {"ewma_s": self.mean, "samples": self.n,
+                "stragglers": self.stragglers}

@@ -2,7 +2,7 @@
 
 Three layers, mirroring the package:
 
-* lint rules DTM001..DTM010 — one bad fixture (fires) and one good
+* lint rules DTM001..DTM011 — one bad fixture (fires) and one good
   fixture (clean) per rule, plus suppression-comment syntax;
 * kernel contract checker — the real registry is green, and the checker
   demonstrably catches overflow / out-of-bounds / coverage / divide
@@ -162,6 +162,38 @@ def test_dtm010_unlocked_stats_read():
     assert codes(bad, LAUNCH_PATH) == []
     assert codes("def other(self):\n    return self.completed\n",
                  path) == []
+
+
+def test_dtm011_non_atomic_file_publish():
+    path = "src/repro/checkpoint/somestore.py"
+    # bare open(final, "w") + json.dump: a crash mid-dump leaves a torn
+    # file at the path readers trust
+    bad_open = ("import json, os\n"
+                "def publish(final, obj):\n"
+                "    with open(final, 'w') as f:\n"
+                "        json.dump(obj, f)\n")
+    assert codes(bad_open, path) == ["DTM011"]
+    bad_np = ("import numpy as np, os\n"
+              "def publish(final, arrs):\n"
+              "    np.savez(final, **arrs)\n")
+    assert codes(bad_np, path) == ["DTM011"]
+    # the atomic discipline: write under a *tmp* path, then os.replace
+    good = ("import json, os\n"
+            "def publish(final, obj):\n"
+            "    tmp = final + '.tmp'\n"
+            "    with open(tmp, 'w') as f:\n"
+            "        json.dump(obj, f)\n"
+            "    os.replace(tmp, final)\n")
+    assert codes(good, path) == []
+    good_np = ("import numpy as np, os\n"
+               "def publish(tmp_dir, arrs):\n"
+               "    np.savez(os.path.join(tmp_dir, 'shard.npz'), **arrs)\n")
+    assert codes(good_np, path) == []
+    # reads are fine; runtime/ is in scope, launch/ is not
+    assert codes("def read(final):\n    return open(final).read()\n",
+                 path) == []
+    assert codes(bad_open, "src/repro/runtime/somewriter.py") == ["DTM011"]
+    assert codes(bad_open, LAUNCH_PATH) == []
 
 
 # --------------------------------------------------------------------------- #

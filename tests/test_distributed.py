@@ -116,44 +116,10 @@ def test_dp_wire_compaction_exact():
     """, devices=4)
 
 
-@pytest.mark.slow
-def test_elastic_restart_supervisor(tmp_path):
-    """Inject a device failure; supervisor shrinks the mesh, restores the
-    checkpoint, and finishes training on fewer devices."""
-    run_py(f"""
-        import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        from repro.runtime import Supervisor, shrink_mesh
-        from repro.runtime.fault import FailureEvent
-
-        def make_step(mesh):
-            sh = NamedSharding(mesh, P("data"))
-            def step(state, batch, mesh):
-                b = jax.device_put(batch, NamedSharding(mesh, P("data")))
-                return jax.jit(lambda s, b: s + b.sum(0))(state, b)
-            return step
-
-        def step_fn(state, batch, mesh):
-            return make_step(mesh)(state, batch, mesh)
-
-        def remesh_fn(state, new_mesh):
-            return jax.device_put(np.asarray(state), NamedSharding(new_mesh, P()))
-
-        mesh = jax.make_mesh((8,), ("data",))
-        sup = Supervisor(r"{tmp_path}/ck", step_fn, remesh_fn, mesh,
-                         model_axis=1, ckpt_every=5)
-        state0 = jnp.zeros((4,))
-        batches = lambda s: np.ones((8, 4), np.float32)
-        state, log = sup.run(state0, batches, n_steps=20,
-                             inject={{12: 4}})
-        events = [e for e in log if e.get("event") == "restart"]
-        assert len(events) == 1, log
-        assert events[0]["devices"] == 4
-        assert sup.restarts == 1
-        # training completed all 20 steps after restart from step 10
-        assert float(np.asarray(state)[0]) == 20 * 8
-        print("ELASTIC OK", float(np.asarray(state)[0]))
-    """)
+# NOTE: the seed-era Supervisor/shrink_mesh elastic-restart test was
+# retired with the runtime/fault.py rewrite (ISSUE 10) — crash recovery
+# for the DTM serving stack (the thing this repo actually ships) is
+# covered by tests/test_recovery.py, including its @needs_mesh leg.
 
 
 @pytest.mark.slow

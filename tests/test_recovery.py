@@ -1,0 +1,493 @@
+"""Durable streaming continual learning (ISSUE 10).
+
+Acceptance invariants:
+
+* **Kill-and-restart bit-identity** — a serving+training roster
+  checkpointed mid-stream, process state discarded,
+  ``api.serve(None, durable_dir=...)`` cold-started: per-tenant
+  predictions and TA states are bit-identical to the uninterrupted run
+  from the last durable step (single device here, forced-4-device mesh
+  on the ``mesh`` CI leg).
+* **Train-while-serve determinism** — ``submit_train`` multiplexed onto
+  inference cycles produces the same TA trajectory as sequential
+  ``TMServer.train`` + ``flush``.
+* **Fault recovery** — injected transient launch faults are absorbed by
+  the bounded retry budget with ZERO dropped gold-SLA requests; budget
+  exhaustion fails only the affected futures and the scheduler keeps
+  serving, shedding batch-class traffic while recovery is in progress.
+* **Drift/skip auto-pause** — a converged tenant's training stream stops
+  consuming launches (eval probes instead, no TA mutation) and
+  auto-resumes on probe-accuracy regression, applying the triggering
+  step.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.launch.mesh import make_tenant_mesh
+from repro.launch.scheduler import (BATCH, GOLD, Backpressure,
+                                    SchedulerConfig, TMScheduler)
+from repro.launch.serve_tm import TMServer, demo_batch, demo_specs
+from repro.runtime.durable import CheckpointWriter, DurableStore
+from repro.runtime.fault import (FaultInjector, FaultPlan, InjectedFault,
+                                 RetryPolicy, StepMonitor, with_retry)
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+BATCH_SLOT = 16
+
+
+@pytest.fixture(scope="module")
+def roster():
+    specs = demo_specs(small=True)
+    engine = api.compile(api.tile_for(*specs.values()))
+    return specs, engine
+
+
+def _labels(spec, n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if spec.kind == "regression":
+        return rng.random(n).astype(np.float32)
+    return rng.integers(0, spec.classes, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# fault primitives (runtime/fault.py)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_rejects_unknown_boundary():
+    with pytest.raises(AssertionError):
+        FaultPlan(fail={"teleport": (0,)})
+
+
+def test_fault_injector_fires_on_scheduled_indices():
+    inj = FaultInjector(FaultPlan(fail={"launch": (1, 3)}))
+    fired = []
+    for _ in range(5):
+        try:
+            inj.check("launch")
+        except InjectedFault as e:
+            fired.append(e.index)
+    assert fired == [1, 3]
+    inj.check("encode")                 # other boundaries unaffected
+    s = inj.stats()
+    assert s["calls"]["launch"] == 5 and s["injected"]["launch"] == 2
+    assert s["calls"]["encode"] == 1 and s["injected"]["encode"] == 0
+
+
+def test_with_retry_absorbs_transient_within_budget():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise InjectedFault("launch", calls["n"] - 1)
+        return "ok"
+
+    seen = []
+    out = with_retry(flaky, RetryPolicy(retries=3),
+                     on_retry=lambda a, e: seen.append(a))
+    assert out == "ok" and calls["n"] == 3 and seen == [0, 1]
+
+
+def test_with_retry_exhaustion_and_hard_fault():
+    def always():
+        raise InjectedFault("launch", 0)
+
+    with pytest.raises(InjectedFault):
+        with_retry(always, RetryPolicy(retries=2))
+
+    calls = {"n": 0}
+
+    def hard():
+        calls["n"] += 1
+        raise InjectedFault("collect", 0, transient=False)
+
+    with pytest.raises(InjectedFault):
+        with_retry(hard, RetryPolicy(retries=5))
+    assert calls["n"] == 1              # non-transient: no re-attempts
+
+
+def test_step_monitor_flags_stragglers_and_clamps_fold_in():
+    m = StepMonitor(factor=4.0, alpha=0.5, warmup=3)
+    assert not any(m.record(0.01) for _ in range(4))
+    assert m.record(1.0)                # straggler flagged after warmup
+    # clamped fold-in: the baseline stays at the healthy-flush scale, so
+    # the NEXT pathological flush is flagged too (no masking)
+    assert m.ewma < 0.05
+    assert m.record(1.0)
+    s = m.stats()
+    assert s["stragglers"] == 2 and s["samples"] == 6
+    assert m.mean == pytest.approx(m.ewma)
+
+
+# ---------------------------------------------------------------------------
+# durable substrate (runtime/durable.py)
+# ---------------------------------------------------------------------------
+
+def test_durable_store_manifest_roundtrip(tmp_path):
+    store = DurableStore(str(tmp_path / "dur"))
+    assert store.read_manifest() is None
+    m = {"version": 1, "batch_slot": 8, "tenants": {"t0": {"seed": 3}}}
+    store.write_manifest(m)
+    store.write_manifest(m)             # idempotent re-publish
+    assert store.read_manifest() == m
+    assert not [f for f in os.listdir(store.root) if ".tmp" in f]
+
+
+def test_checkpoint_writer_retries_failed_save(tmp_path):
+    store = DurableStore(str(tmp_path / "dur"))
+    inj = FaultInjector(FaultPlan(fail={"checkpoint": (0,)}))
+    w = CheckpointWriter(
+        store, lambda name: (4, {"w": np.arange(4, dtype=np.int32)}),
+        injector=inj)
+    w.mark_dirty("t0")
+    w.flush()                           # inline sweep: injected failure
+    assert w.failures == 1 and w.saves == 0
+    assert w.stats()["dirty"] == 1      # re-marked: the next sweep retries
+    assert w.last_error is not None
+    assert store.latest_tenant_step("t0") is None
+    w.flush()
+    assert w.saves == 1 and w.stats()["dirty"] == 0
+    assert store.latest_tenant_step("t0") == 4
+    assert w.last_saved["t0"] == 4
+
+
+# ---------------------------------------------------------------------------
+# train-while-serve: scheduled streams == sequential partial_fit
+# ---------------------------------------------------------------------------
+
+def test_train_while_serve_bit_identical_to_sequential(roster):
+    """All five TM kinds with interleaved train/infer streams: the
+    scheduler's program-major multiplexing produces the same per-step
+    stats, the same predictions, and the same final TA/weights as the
+    sequential per-tenant train + flush path."""
+    specs, engine = roster
+    names = sorted(specs)
+
+    def mk_server():
+        srv = TMServer(engine, batch_slot=BATCH_SLOT)
+        for n in names:
+            srv.register(n, specs[n], seed=2)
+        return srv
+
+    trace = []                          # (kind, tenant, x, y)
+    for r in range(2):
+        for i, n in enumerate(names):
+            s = 31 + 5 * r + i
+            trace.append(("train", n, demo_batch(specs[n], BATCH_SLOT,
+                                                 seed=s),
+                          _labels(specs[n], BATCH_SLOT, seed=s + 1)))
+            trace.append(("infer", n, demo_batch(specs[n], BATCH_SLOT,
+                                                 seed=s + 2), None))
+
+    srv_ref = mk_server()
+    ref = []
+    for kind, n, x, y in trace:
+        if kind == "train":
+            ref.append(srv_ref.train(n, x, y))
+        else:
+            srv_ref.enqueue(n, x)
+            ref.append(srv_ref.flush()[n])
+
+    srv_sch = mk_server()
+    sched = TMScheduler(srv_sch, SchedulerConfig(pipeline_depth=2))
+    futs = [sched.submit_train(n, x, y) if kind == "train"
+            else sched.submit(n, x)
+            for kind, n, x, y in trace]
+    sched.drain()
+    assert sched.trains == 2 * len(names)
+    for (kind, n, _, _), fut, want in zip(trace, futs, ref):
+        got = fut.result(timeout=5)
+        if kind == "train":
+            assert got["applied"] and not got["paused"]
+            assert {k: got[k] for k in want} == want, n
+        else:
+            assert np.array_equal(got, want), n
+    for n in names:
+        a, b = srv_ref.tenants[n], srv_sch.tenants[n]
+        assert np.array_equal(np.asarray(a.program.ta),
+                              np.asarray(b.program.ta)), n
+        assert np.array_equal(np.asarray(a.program.weights),
+                              np.asarray(b.program.weights)), n
+
+
+# ---------------------------------------------------------------------------
+# fault injection + recovery at the driver boundaries
+# ---------------------------------------------------------------------------
+
+def test_transient_launch_faults_recovered_zero_gold_drops(roster):
+    """Two injected launch faults, retry budget 3: every gold-SLA
+    request completes with the SAME result as a fault-free server —
+    nothing dropped, nothing double-enqueued."""
+    specs, engine = roster
+    names = ["cotm", "regression"]
+
+    srv_ref = TMServer(engine, batch_slot=BATCH_SLOT)
+    srv = TMServer(engine, batch_slot=BATCH_SLOT)
+    for n in names:
+        srv_ref.register(n, specs[n], seed=2)
+        srv.register(n, specs[n], seed=2)
+
+    inj = FaultInjector(FaultPlan(fail={"launch": (0, 2)}))
+    sched = TMScheduler(srv, SchedulerConfig(retries=3), injector=inj)
+    for n in names:
+        sched.set_sla(n, GOLD)
+
+    trace = [(n, demo_batch(specs[n], BATCH_SLOT, seed=50 + r))
+             for r in range(2) for n in names]
+    ref = []
+    for n, x in trace:
+        srv_ref.enqueue(n, x)
+        ref.append(srv_ref.flush()[n])
+
+    futs = [sched.submit(n, x) for n, x in trace]
+    sched.drain()
+    for (n, _), fut, want in zip(trace, futs, ref):
+        assert np.array_equal(fut.result(timeout=5), want), n
+    assert sched.completed == sched.submitted == len(trace)
+    assert sched.faults == 0 and sched.failed == 0
+    assert sched.retries == 2           # both faults absorbed by retries
+    assert inj.stats()["injected"]["launch"] == 2
+
+
+def test_retry_exhaustion_fails_batch_then_recovers(roster):
+    """Three consecutive launch faults against a budget of two
+    re-attempts: the batch's futures fail with the injected fault, the
+    encoded-but-unlaunched requests are abandoned (no stale literals on
+    the next flush), batch-class traffic sheds while recovery is in
+    progress, and the very next gold request completes correctly."""
+    specs, engine = roster
+    srv_ref = TMServer(engine, batch_slot=BATCH_SLOT)
+    srv = TMServer(engine, batch_slot=BATCH_SLOT)
+    for s in (srv_ref, srv):
+        s.register("cotm", specs["cotm"], seed=2)
+        s.register("regression", specs["regression"], seed=2)
+
+    inj = FaultInjector(FaultPlan(fail={"launch": (0, 1, 2)}))
+    sched = TMScheduler(srv, SchedulerConfig(retries=2,
+                                             degrade_cooldown_s=30.0),
+                        injector=inj)
+    sched.set_sla("cotm", GOLD)
+    sched.set_sla("regression", BATCH)
+
+    x = demo_batch(specs["cotm"], BATCH_SLOT, seed=60)
+    fut = sched.submit("cotm", x)
+    sched.drain()
+    exc = fut.exception(timeout=5)
+    assert isinstance(exc, InjectedFault) and exc.transient
+    assert sched.faults == 1 and sched.failed == 1
+    assert not srv._pending             # abandoned, not left to ride along
+    assert inj.stats()["injected"]["launch"] == 3
+
+    # recovery window open: batch-class submits shed, gold flows
+    assert sched.stats()["recovering"]
+    with pytest.raises(Backpressure):
+        sched.submit("regression",
+                     demo_batch(specs["regression"], BATCH_SLOT, seed=61))
+    assert sched.degraded_rejections == 1
+    x2 = demo_batch(specs["cotm"], BATCH_SLOT, seed=62)
+    srv_ref.enqueue("cotm", x2)
+    want = srv_ref.flush()["cotm"]
+    fut2 = sched.submit("cotm", x2)
+    sched.drain()
+    assert np.array_equal(fut2.result(timeout=5), want)
+
+
+def test_hard_encode_fault_fails_only_that_request(roster):
+    """A non-transient encode fault propagates immediately (no retry)
+    and fails only the faulted request — the rest of the cycle's batch
+    still launches and completes."""
+    specs, engine = roster
+    srv_ref = TMServer(engine, batch_slot=BATCH_SLOT)
+    srv = TMServer(engine, batch_slot=BATCH_SLOT)
+    for s in (srv_ref, srv):
+        s.register("cotm", specs["cotm"], seed=2)
+        s.register("regression", specs["regression"], seed=2)
+
+    inj = FaultInjector(FaultPlan(fail={"encode": (0,)}, transient=False))
+    sched = TMScheduler(srv, injector=inj)
+    xa = demo_batch(specs["cotm"], BATCH_SLOT, seed=70)
+    xb = demo_batch(specs["regression"], BATCH_SLOT, seed=71)
+    srv_ref.enqueue("regression", xb)
+    want = srv_ref.flush()["regression"]
+
+    fa = sched.submit("cotm", xa)       # earliest deadline: encoded first
+    fb = sched.submit("regression", xb)
+    sched.drain()
+    exc = fa.exception(timeout=5)
+    assert isinstance(exc, InjectedFault) and not exc.transient
+    assert sched.retries == 0           # hard faults are not retried
+    assert np.array_equal(fb.result(timeout=5), want)
+    assert sched.faults == 1 and sched.completed == 1
+
+
+# ---------------------------------------------------------------------------
+# drift/skip auto-pause of converged training streams
+# ---------------------------------------------------------------------------
+
+def test_auto_pause_probe_and_drift_resume(roster):
+    specs, engine = roster
+    spec = specs["cotm"]
+    srv = TMServer(engine, batch_slot=BATCH_SLOT)
+    srv.register("t", spec, seed=2)
+    sched = TMScheduler(srv, SchedulerConfig(
+        pause_skip_threshold=0.0,       # any skip telemetry pauses ...
+        pause_min_steps=4,              # ... once the stream has history
+        resume_acc_drop=0.05, drift_alpha=1.0))
+    x = demo_batch(spec, BATCH_SLOT, seed=80)
+    y = x[:, 0].astype(np.int32)        # learnable: label = first literal
+    for _ in range(4):
+        sched.submit_train("t", x, y)
+    sched.drain()
+    assert sched.trains == 4 and sched.pauses == 1
+    assert sched.stats()["tenants"]["t"]["paused"]
+
+    # paused stream serves eval probes: no launch spent, no TA mutation.
+    # Pin the pause-time accuracy baseline below any reachable probe
+    # accuracy so the stay-paused branch is deterministic (the natural
+    # baseline depends on how fast this tiny TM learns).
+    sched._tenants["t"].paused_at_acc = 0.0
+    ta0 = np.asarray(srv.tenants["t"].program.ta)
+    f1 = sched.submit_train("t", x, y)
+    sched.drain()
+    out = f1.result(timeout=5)
+    assert out["paused"] and not out["applied"]
+    np.testing.assert_array_equal(np.asarray(srv.tenants["t"].program.ta),
+                                  ta0)
+    assert sched.stats()["tenants"]["t"]["probes"] == 1
+    assert sched.trains == 4
+
+    # label drift: pin the baseline above any probe accuracy -> the next
+    # probe regresses past resume_acc_drop, auto-resumes, and applies
+    # the triggering step
+    sched._tenants["t"].paused_at_acc = 2.0
+    f2 = sched.submit_train("t", x, 1 - y)
+    sched.drain()
+    out = f2.result(timeout=5)
+    assert out.get("resumed") and out["applied"]
+    assert sched.resumes == 1 and sched.trains == 5
+    assert not np.array_equal(np.asarray(srv.tenants["t"].program.ta), ta0)
+    # the degenerate 0.0 threshold re-pauses right after the applied
+    # step (fresh skip telemetry >= 0): pause -> resume -> pause again
+    assert sched.pauses == 2 and sched.stats()["tenants"]["t"]["paused"]
+
+
+# ---------------------------------------------------------------------------
+# kill-and-restart bit-identity through the durable store (the tentpole)
+# ---------------------------------------------------------------------------
+
+_DUR_NAMES = ("cotm", "regression")     # classification + regression decode
+
+
+def _durable_roster():
+    specs = demo_specs(small=True)
+    return {n: specs[n] for n in _DUR_NAMES}
+
+
+def _run_stream(sched, specs, rounds: int, seed0: int):
+    """A deterministic interleaved train+infer continuation; returns
+    the per-request results (train stats dicts and prediction arrays)."""
+    futs = []
+    for r in range(rounds):
+        for n in sorted(specs):
+            s = seed0 + 3 * r
+            xt = demo_batch(specs[n], BATCH_SLOT, seed=s)
+            yt = _labels(specs[n], BATCH_SLOT, seed=s + 1)
+            futs.append(("train", n, sched.submit_train(n, xt, yt)))
+            xi = demo_batch(specs[n], BATCH_SLOT, seed=s + 2)
+            futs.append(("infer", n, sched.submit(n, xi)))
+    sched.drain()
+    return [(kind, n, fut.result(timeout=5)) for kind, n, fut in futs]
+
+
+def _assert_streams_equal(out_a, out_b):
+    for (ka, na, ra), (kb, nb, rb) in zip(out_a, out_b):
+        assert (ka, na) == (kb, nb)
+        if ka == "train":
+            assert ra == rb, na
+        else:
+            assert np.array_equal(ra, rb), na
+
+
+def _kill_restart_roundtrip(tmp_path, mesh=None):
+    d = str(tmp_path / "durable")
+    specs = _durable_roster()
+    a = api.serve(dict(specs), batch_slot=BATCH_SLOT, durable_dir=d,
+                  slas={"cotm": GOLD}, mesh=mesh)
+    _run_stream(a, specs, rounds=2, seed0=100)
+    a.checkpoint_now()                  # durability barrier mid-stream
+
+    probe = {n: demo_batch(specs[n], BATCH_SLOT, seed=7) for n in specs}
+    steps_a = {n: a.server.tenants[n].steps for n in specs}
+    ta_a = {n: np.asarray(a.server.tenants[n].program.ta) for n in specs}
+    preds_a = {n: np.asarray(a.server.predict(n, probe[n])) for n in specs}
+    assert all(steps_a[n] == 2 for n in specs)
+
+    # "crash": all process state discarded — b rebuilds the roster, the
+    # SLAs, and every tenant's program/PRNG/step from disk alone
+    b = api.serve(None, durable_dir=d, mesh=mesh)
+    assert sorted(b.server.tenants) == sorted(specs)
+    assert b.server.batch_slot == BATCH_SLOT
+    assert b.sla_of("cotm").name == "gold" and b.sla_of("cotm").priority == 4
+    for n in specs:
+        assert b.server.tenants[n].steps == steps_a[n], n
+        np.testing.assert_array_equal(
+            np.asarray(b.server.tenants[n].program.ta), ta_a[n])
+        np.testing.assert_array_equal(
+            np.asarray(b.server.predict(n, probe[n])), preds_a[n])
+
+    # the restored server CONTINUES bit-identically to the uninterrupted
+    # one — training trajectory included (the PRNG is part of the image)
+    out_a = _run_stream(a, specs, rounds=2, seed0=200)
+    out_b = _run_stream(b, specs, rounds=2, seed0=200)
+    _assert_streams_equal(out_a, out_b)
+    for n in specs:
+        ta_cont = np.asarray(a.server.tenants[n].program.ta)
+        np.testing.assert_array_equal(
+            np.asarray(b.server.tenants[n].program.ta), ta_cont)
+        np.testing.assert_array_equal(
+            np.asarray(b.server.tenants[n].program.weights),
+            np.asarray(a.server.tenants[n].program.weights))
+        assert not np.array_equal(ta_cont, ta_a[n]), (
+            "continuation must actually train")
+
+
+def test_kill_and_restart_bit_identical(tmp_path):
+    _kill_restart_roundtrip(tmp_path)
+
+
+@needs_mesh
+def test_kill_and_restart_bit_identical_mesh(tmp_path):
+    """Same invariant with both the interrupted and the restored stack
+    pod-sharded over the forced-4-device tenant mesh."""
+    _kill_restart_roundtrip(tmp_path, mesh=make_tenant_mesh(4))
+
+
+def test_background_writer_persists_without_explicit_barrier(tmp_path):
+    """Thread mode: start() runs the async checkpoint writer, stop()
+    drains it — every applied step is durable with no checkpoint_now."""
+    d = str(tmp_path / "durable")
+    specs = _durable_roster()
+    sched = api.serve(dict(specs), batch_slot=BATCH_SLOT, durable_dir=d,
+                      config=SchedulerConfig(ckpt_interval_s=0.01))
+    sched.start()
+    try:
+        futs = [sched.submit_train(
+                    "cotm", demo_batch(specs["cotm"], BATCH_SLOT, seed=s),
+                    _labels(specs["cotm"], BATCH_SLOT, seed=s + 1))
+                for s in (300, 301, 302)]
+        for f in futs:
+            assert f.result(timeout=60)["applied"]
+    finally:
+        sched.stop()
+    store = DurableStore(d)
+    assert store.latest_tenant_step("cotm") == 3
+    assert store.latest_tenant_step("regression") is None  # never trained
+    ck = sched.stats()["checkpoint"]
+    assert ck["saves"] >= 1 and ck["dirty"] == 0 and not ck["running"]

@@ -96,6 +96,63 @@ def test_checkpoint_shape_mismatch_rejected(tmp_path):
         ckpt.restore(d, 1, {"a": jnp.zeros((5,))})
 
 
+def test_checkpoint_crash_mid_save_recovers(tmp_path):
+    """Writer killed after the shard write but before meta.json/rename:
+    the partial .tmp dir is never selected, restore falls back to the
+    prior step, and the orphan is garbage-collected on the next save."""
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(4)}
+    ckpt.save(d, 5, tree)
+    # fabricate the crash artefact: tmp dir of a DEAD pid, shard present,
+    # no meta.json yet (the kill window the satellite names)
+    orphan = os.path.join(d, "step_00000009.tmp.999999999")
+    os.makedirs(orphan)
+    np.savez(os.path.join(orphan, "shard-0-of-1.npz"),
+             leaf_0=np.zeros(4, np.int64))
+    assert ckpt.latest_step(d) == 5          # partial write never selected
+    step, got, _ = ckpt.restore_latest(d, tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.arange(4))
+    # a LIVE writer's tmp (our own pid) must survive the sweep...
+    live = os.path.join(d, f"step_00000011.tmp.{os.getpid()}")
+    os.makedirs(live)
+    ckpt.save(d, 10, tree)                   # next save sweeps orphans
+    left = sorted(x for x in os.listdir(d) if ".tmp" in x)
+    assert left == [os.path.basename(live)]  # ...and the orphan is gone
+    assert ckpt.latest_step(d) == 10
+
+
+def test_checkpoint_double_publish_atomic(tmp_path):
+    """Two writers racing the same step: first publish wins, the loser's
+    tmp dir is discarded — no TOCTOU window, no torn final dir."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, {"a": jnp.zeros((4,), jnp.int32)})
+    ckpt.save(d, 3, {"a": jnp.ones((4,), jnp.int32)})   # loses the race
+    assert not [x for x in os.listdir(d) if ".tmp" in x]
+    got, _ = ckpt.restore(d, 3, {"a": jnp.zeros((4,), jnp.int32)})
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.zeros(4))
+
+
+def test_checkpoint_gc_spares_step_a_reader_resolved(tmp_path,
+                                                     monkeypatch):
+    """_gc never deletes the step a concurrent reader just resolved via
+    latest_step — the retention sweep honours the resolution grace."""
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.zeros((2,))}
+    ckpt.save(d, 1, tree)
+    assert ckpt.latest_step(d) == 1          # the reader's resolution
+    for s in (2, 3, 4):
+        ckpt.save(d, s, tree, keep=1)        # would normally GC step 1
+    assert os.path.isdir(os.path.join(d, "step_00000001"))
+    got, _ = ckpt.restore(d, 1, tree)        # the reader's restore works
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.zeros(2))
+    # outside the grace window the retention policy applies again
+    monkeypatch.setattr(ckpt.checkpoint, "_GC_GRACE_S", 0.0)
+    ckpt.save(d, 5, tree, keep=1)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert steps == ["step_00000005"]
+
+
 # ---------------------------------------------------------------------- #
 # data pipeline                                                          #
 # ---------------------------------------------------------------------- #
